@@ -1,0 +1,278 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Paper instances (uk-2007 etc.) are multi-GB downloads unavailable offline;
+each table runs on faithful synthetic stand-ins (see repro.graph.generators)
+at laptop scale, preserving the paper's *relative* claims:
+
+  table2_quality      -> Table II  (k=2: avg/best cut + time, ours vs
+                         matching-ML (ParMetis stand-in) vs hash)
+  table3_k32          -> Table III (same at k=32)
+  coarsening_shrink   -> §V-B discussion: one contraction step shrinks
+                         complex networks by orders of magnitude; matching
+                         stalls ("ParMetis cannot coarsen effectively")
+  vcycles             -> §IV-D: iterated V-cycles improve quality
+  fast_eco_minimal    -> §V-A: config quality/time trade-off
+  weak_scaling        -> Fig. 5 (rgg/mesh families, k=16, shards 1..8
+                         via the distributed shard_map engine)
+  strong_scaling      -> Fig. 6 (fixed graph, shards 1..8)
+
+Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _graphs_quality():
+    from repro.graph import barabasi_albert, mesh2d, planted_partition, rgg, rmat
+
+    return [
+        # social/web stand-ins (S) and mesh-type (M), per Table I's typing
+        ("ba-social", "S", barabasi_albert(16384, 6, seed=3)),
+        ("pp-community", "S", planted_partition(16384, 16, p_in=0.01,
+                                                p_out=0.0002, seed=4)),
+        ("rmat-web", "S", rmat(13, 8, seed=2)),
+        ("rgg14", "M", rgg(14, seed=1)),
+        ("mesh64", "M", mesh2d(64)),
+    ]
+
+
+def _quality_table(k: int, repeats: int = 3):
+    from repro.core import (
+        PartitionerConfig, hash_partition, matching_multilevel, partition,
+    )
+    from repro.core.metrics import cut_np
+
+    rows = []
+    for name, typ, g in _graphs_quality():
+        fm = 64 if typ == "M" else 14.0
+        cuts_f, t_f = [], []
+        for r in range(repeats):
+            rep = partition(g, PartitionerConfig(
+                k=k, preset="fast", coarsest_factor=max(100 // k, 10),
+                f_mesh=fm, seed=r))
+            cuts_f.append(rep.cut)
+            t_f.append(rep.seconds)
+        # beyond-paper strong preset: social graphs only (FM on the big
+        # mesh-type instances is host-side minutes; covered by tests)
+        if typ == "S" and k == 2:
+            rep_s = partition(g, PartitionerConfig(
+                k=k, preset="strong", coarsest_factor=max(100 // k, 10),
+                f_mesh=fm, seed=0))
+        else:
+            rep_s = rep
+        mb = matching_multilevel(g, k, seed=0)
+        hb = cut_np(g, hash_partition(g.n, k))
+        rows.append(dict(
+            graph=name, typ=typ, n=g.n, m=g.m // 2,
+            ours_avg=float(np.mean(cuts_f)), ours_best=float(np.min(cuts_f)),
+            ours_t=float(np.mean(t_f)),
+            strong_cut=rep_s.cut, strong_t=rep_s.seconds,
+            hem_cut=mb.cut, hem_t=mb.seconds, hash_cut=hb,
+        ))
+    return rows
+
+
+def table2_quality():
+    print("# Table II stand-in: k=2 quality/time (cut; lower is better)")
+    print("graph,type,n,m,ours_avg,ours_best,ours_t_s,strong_cut,strong_t_s,"
+          "hem_cut,hem_t_s,hash_cut,impr_vs_hem_pct")
+    rows = _quality_table(2)
+    s_impr = []
+    for r in rows:
+        impr = 100.0 * (r["hem_cut"] - r["ours_avg"]) / max(r["hem_cut"], 1)
+        if r["typ"] == "S":
+            s_impr.append(impr)
+        print(f"{r['graph']},{r['typ']},{r['n']},{r['m']},{r['ours_avg']:.0f},"
+              f"{r['ours_best']:.0f},{r['ours_t']:.1f},{r['strong_cut']:.0f},"
+              f"{r['strong_t']:.1f},{r['hem_cut']:.0f},{r['hem_t']:.1f},"
+              f"{r['hash_cut']:.0f},{impr:.1f}")
+    print(f"# social/web avg improvement vs matching-ML: "
+          f"{np.mean(s_impr):.1f}% all-S / "
+          f"{np.mean([x for x in s_impr if x > -50]):.1f}% excl. R-MAT "
+          f"(paper: fast improves 38% over ParMetis on social/web). R-MAT "
+          f"is the known adversarial case: LP clustering percolates on "
+          f"community-less Kronecker graphs (DESIGN.md §4); the beyond-paper "
+          f"strong preset still wins there (see strong_cut).")
+
+
+def table3_k32():
+    print("# Table III stand-in: k=32 quality/time")
+    print("graph,type,n,m,ours_avg,ours_best,ours_t_s,hem_cut,hem_t_s,hash_cut")
+    for r in _quality_table(32, repeats=2):
+        print(f"{r['graph']},{r['typ']},{r['n']},{r['m']},{r['ours_avg']:.0f},"
+              f"{r['ours_best']:.0f},{r['ours_t']:.1f},{r['hem_cut']:.0f},"
+              f"{r['hem_t']:.1f},{r['hash_cut']:.0f}")
+
+
+def coarsening_shrink():
+    from repro.core import PartitionerConfig, matching_multilevel, partition
+
+    print("# Coarsening effectiveness (paper §V-B): first-contraction shrink "
+          "factor n1/n0 (smaller = better shrink)")
+    print("graph,type,cluster_shrink,matching_shrink,matching_stalled")
+    for name, typ, g in _graphs_quality():
+        fm = 64 if typ == "M" else 14.0
+        rep = partition(g, PartitionerConfig(k=2, preset="minimal",
+                                             coarsest_factor=50, f_mesh=fm,
+                                             seed=0))
+        mb = matching_multilevel(g, 2, seed=0)
+        print(f"{name},{typ},{rep.shrink_first:.3f},{mb.shrink_first:.3f},"
+              f"{mb.coarsening_stalled}")
+
+
+def vcycles():
+    from repro.core import PartitionerConfig, partition
+    from repro.graph import barabasi_albert
+
+    g = barabasi_albert(16384, 6, seed=3)
+    print("# Iterated V-cycles (paper §IV-D): per-cycle cut, k=2")
+    rep = partition(g, PartitionerConfig(k=2, preset="eco", coarsest_factor=100,
+                                         generations=2, seed=0))
+    print("cycle,cut")
+    for i, c in enumerate(rep.cycle_cuts):
+        print(f"{i + 1},{c:.0f}")
+    print(f"# final={rep.cut:.0f} feasible={rep.feasible}")
+
+
+def fast_eco_minimal():
+    from repro.core import PartitionerConfig, partition
+    from repro.graph import barabasi_albert
+
+    g = barabasi_albert(16384, 6, seed=3)
+    print("# Configuration trade-off (paper §V-A), k=2")
+    print("config,cut,seconds")
+    for preset in ("minimal", "fast", "eco", "strong"):
+        rep = partition(g, PartitionerConfig(k=2, preset=preset,
+                                             coarsest_factor=100,
+                                             generations=2, seed=0))
+        print(f"{preset},{rep.cut:.0f},{rep.seconds:.1f}")
+
+
+def _scaling(graphs, shard_counts, k):
+    """Runs the distributed engine in subprocesses with N host devices."""
+    import os
+    import subprocess
+
+    rows = []
+    for gname, scale in graphs:
+        for P in shard_counts:
+            code = f"""
+import numpy as np, time
+from repro.graph import rgg, mesh2d
+from repro.core.distributed_lp import build_plan, lp_cluster_distributed
+from repro.core.metrics import lmax
+g = rgg({scale}, seed=1) if "{gname}" == "rgg" else mesh2d({scale})
+L = lmax(g.n, {k}, 0.03)
+t0 = time.time()
+plan = build_plan(g, {P}, chunks_per_shard=4)
+t_plan = time.time() - t0
+t0 = time.time()
+clus = lp_cluster_distributed(plan, U=max(1.0, L/64), iters=3, seed=0)
+t_lp = time.time() - t0
+gf = float(plan.sg.n_ghost.sum()) / g.n
+print(f"RESULT,{gname},{P},{{g.n}},{{g.m}},{{t_plan:.2f}},{{t_lp:.2f}},{{gf:.3f}}")
+"""
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"
+            env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+            r = subprocess.run([sys.executable, "-c", code],
+                               capture_output=True, text=True, timeout=900,
+                               env=env)
+            got = False
+            for line in r.stdout.splitlines():
+                if line.startswith("RESULT"):
+                    rows.append(line)
+                    got = True
+            if not got:
+                rows.append(f"RESULT,{gname},{P},ERROR,,,,{r.stderr[-200:]!r}")
+    return rows
+
+
+def weak_scaling():
+    print("# Weak scaling (Fig. 5 stand-in): graph grows with shard count, "
+          "k=16; LP time should grow ~linearly with graph (flat per edge).")
+    print("graph,shards,n,m,plan_s,lp_s,ghost_frac")
+    rows = []
+    for P, sc_rgg, sc_mesh in [(1, 13, 90), (2, 14, 128), (4, 15, 181),
+                               (8, 16, 256)]:
+        rows += _scaling([("rgg", sc_rgg)], [P], 16)
+        rows += _scaling([("mesh", sc_mesh)], [P], 16)
+    for r in rows:
+        print(r.replace("RESULT,", ""))
+
+
+def strong_scaling():
+    print("# Strong scaling (Fig. 6 stand-in): fixed graphs, shards 1..8, k=2")
+    print("graph,shards,n,m,plan_s,lp_s,ghost_frac")
+    rows = _scaling([("rgg", 14), ("mesh", 181)], [1, 2, 4, 8], 2)
+    for r in rows:
+        print(r.replace("RESULT,", ""))
+
+
+def modularity_clustering():
+    """Paper §VI generalization: modularity clustering on the same machinery."""
+    from repro.core import louvain
+    from repro.graph import barabasi_albert, planted_partition
+
+    print("# Modularity clustering (paper §VI future-work item)")
+    print("graph,n,m,Q,clusters,seconds")
+    for name, g in [("pp-8k", planted_partition(8192, 16, p_in=0.03,
+                                                p_out=0.0005, seed=0)),
+                    ("ba-8k", barabasi_albert(8192, 6, seed=1))]:
+        t0 = time.time()
+        lab, q = louvain(g, seed=0)
+        print(f"{name},{g.n},{g.m // 2},{q:.4f},{np.unique(lab).size},"
+              f"{time.time() - t0:.1f}")
+
+
+def kernel_bench():
+    """lp_score kernel vs pure-jnp reference (interpret-mode CPU timing is
+    NOT a TPU number; this is a correctness/throughput sanity row)."""
+    from repro.graph import ell_pack, rmat
+    from repro.kernels.lp_score import node_scores
+
+    g = rmat(13, 8, seed=1)
+    labels = (np.arange(g.n) % 16).astype(np.int32)
+    ell = ell_pack(g)
+    for use_pallas, tag in ((False, "xla_ref"), (True, "pallas_interp")):
+        f = lambda: node_scores(g, labels, 16, ell=ell, use_pallas=use_pallas,
+                                interpret=True)
+        f().block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            f().block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        print(f"lp_score_{tag},{us:.0f},m={g.m}")
+
+
+TABLES = {
+    "table2_quality": table2_quality,
+    "table3_k32": table3_k32,
+    "coarsening_shrink": coarsening_shrink,
+    "vcycles": vcycles,
+    "fast_eco_minimal": fast_eco_minimal,
+    "weak_scaling": weak_scaling,
+    "strong_scaling": strong_scaling,
+    "modularity_clustering": modularity_clustering,
+    "kernel_bench": kernel_bench,
+}
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in TABLES.items():
+        if only and name != only:
+            continue
+        print(f"\n==== {name} ====")
+        t0 = time.time()
+        fn()
+        print(f"# [{name} done in {time.time() - t0:.0f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Modularity clustering of a social network — the paper's §VI
+generalization ("integrate [an ensemble] algorithm to compute a high
+quality modularity graph clustering"), built on the same multilevel
+cluster-contraction machinery as the partitioner.
+
+    PYTHONPATH=src python examples/cluster_modularity.py
+"""
+
+import numpy as np
+
+from repro.core import louvain, modularity
+from repro.graph import planted_partition
+
+g = planted_partition(8192, 16, p_in=0.03, p_out=0.0005, seed=0)
+lab, q = louvain(g, seed=0)
+sizes = np.sort(np.bincount(lab))[::-1]
+print(f"graph: n={g.n} m={g.m // 2}")
+print(f"louvain modularity Q={q:.4f} (random labels: "
+      f"{modularity(g, np.random.default_rng(0).integers(0, 16, g.n)):.4f})")
+print(f"clusters: {np.unique(lab).size}, largest sizes: {sizes[:8]}")

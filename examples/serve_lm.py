@@ -1,0 +1,9 @@
+"""Batched serving: prefill a prompt batch, decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main
+
+main(["--arch", "qwen2.5-3b", "--smoke", "--batch", "4",
+      "--prompt-len", "32", "--gen", "16"])

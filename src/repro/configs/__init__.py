@@ -1,0 +1,5 @@
+from .base import SHAPES, ArchConfig, MoESpec, Shape, SSMSpec
+from .registry import ARCHS, cells, get_config
+
+__all__ = ["ArchConfig", "MoESpec", "SSMSpec", "Shape", "SHAPES", "ARCHS",
+           "get_config", "cells"]

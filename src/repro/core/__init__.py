@@ -1,0 +1,55 @@
+"""The paper's contribution: parallel multilevel graph partitioning via
+size-constrained label propagation, cluster contraction, and a distributed
+evolutionary algorithm on the coarsest graph."""
+
+from .autoshard import expert_placement, pipeline_stages
+from .baselines import hash_partition, matching_multilevel, random_balanced
+from .contraction import contract, project_labels, relabel
+from .evolutionary import EvoConfig, evolve
+from .fm import fm_refine
+from .initial_partition import greedy_growing, initial_partition, repair_balance
+from .label_propagation import LPResult, lp_cluster, lp_refine, sclap_numpy
+from .metrics import (
+    block_weights_np,
+    comm_volume_np,
+    cut_jnp,
+    cut_np,
+    imbalance_np,
+    is_feasible,
+    quotient_graph_np,
+)
+from .modularity import louvain, modularity
+from .multilevel import PartitionerConfig, PartitionReport, partition
+
+__all__ = [
+    "partition",
+    "PartitionerConfig",
+    "PartitionReport",
+    "lp_cluster",
+    "lp_refine",
+    "sclap_numpy",
+    "LPResult",
+    "contract",
+    "project_labels",
+    "relabel",
+    "EvoConfig",
+    "evolve",
+    "fm_refine",
+    "greedy_growing",
+    "initial_partition",
+    "repair_balance",
+    "hash_partition",
+    "random_balanced",
+    "matching_multilevel",
+    "cut_np",
+    "cut_jnp",
+    "imbalance_np",
+    "is_feasible",
+    "block_weights_np",
+    "quotient_graph_np",
+    "comm_volume_np",
+    "louvain",
+    "modularity",
+    "expert_placement",
+    "pipeline_stages",
+]

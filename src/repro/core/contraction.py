@@ -1,0 +1,131 @@
+"""Cluster contraction (paper §III/IV-C).
+
+Each cluster of a (size-constrained) clustering becomes one coarse node;
+coarse node weight = sum of member node weights; coarse edge (A, B) weight =
+total weight of edges running between clusters A and B.  By construction a
+partition of the coarse graph projects to a partition of the fine graph with
+*identical* cut and balance — the property the whole multilevel scheme rests
+on (tested property-style in tests/test_property.py).
+
+Two implementations:
+
+* :func:`contract` — host/numpy.  The multilevel driver is a host loop
+  (level shapes are data-dependent), so this is the production path between
+  levels; it is the paper's parallel algorithm expressed serially: relabel
+  via sort + prefix-sum to a contiguous ID range, then a sort/segment-sum
+  quotient-graph build (the paper builds local quotient graphs by hashing —
+  sorting is the TPU-idiomatic substitute, see DESIGN.md §2).
+* :func:`contract_arcs_jnp` — the device-side building block used by the
+  distributed pipeline: maps + deduplicates + weight-sums arcs for a shard's
+  local subgraph entirely on device (static shapes, padded).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..graph.csr import GraphNP
+
+__all__ = ["contract", "relabel", "contract_arcs_jnp", "project_labels"]
+
+
+def relabel(labels: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Map arbitrary cluster IDs to the contiguous range [0, n').
+
+    Sort-based: equivalent to the paper's distributed distinct-counting +
+    prefix-sum scheme (§IV-C), collapsed onto one host.
+    """
+    uniq, C = np.unique(labels, return_inverse=True)
+    return C.astype(np.int32), int(uniq.shape[0])
+
+
+def contract(g: GraphNP, labels: np.ndarray) -> Tuple[GraphNP, np.ndarray]:
+    """Contract a clustering; returns (coarse graph, fine->coarse mapping C)."""
+    C, n_c = relabel(labels)
+    nw_c = np.zeros(n_c, dtype=np.float64)
+    np.add.at(nw_c, C, g.nw)
+
+    src = g.arc_sources()
+    cu = C[src].astype(np.int64)
+    cv = C[g.indices].astype(np.int64)
+    keep = cu != cv
+    cu, cv = cu[keep], cv[keep]
+    w = g.ew[keep].astype(np.float64)
+
+    if cu.size == 0:
+        coarse = GraphNP(
+            indptr=np.zeros(n_c + 1, dtype=np.int64),
+            indices=np.zeros(0, dtype=np.int32),
+            ew=np.zeros(0, dtype=np.float32),
+            nw=nw_c.astype(np.float32),
+        )
+        return coarse, C
+
+    key = cu * np.int64(n_c) + cv
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    w_s = w[order]
+    boundary = np.empty(key_s.shape[0], dtype=bool)
+    boundary[0] = True
+    boundary[1:] = key_s[1:] != key_s[:-1]
+    run = np.cumsum(boundary) - 1
+    m_c = int(run[-1]) + 1
+    w_c = np.zeros(m_c, dtype=np.float64)
+    np.add.at(w_c, run, w_s)
+    first = np.flatnonzero(boundary)
+    cu_c = (key_s[first] // n_c).astype(np.int32)
+    cv_c = (key_s[first] % n_c).astype(np.int32)
+
+    counts = np.bincount(cu_c, minlength=n_c)
+    indptr = np.zeros(n_c + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    coarse = GraphNP(
+        indptr=indptr,
+        indices=cv_c,
+        ew=w_c.astype(np.float32),
+        nw=nw_c.astype(np.float32),
+    )
+    return coarse, C
+
+
+def project_labels(coarse_labels: np.ndarray, C: np.ndarray) -> np.ndarray:
+    """Uncoarsening: fine node inherits the block of its coarse representative."""
+    return coarse_labels[C]
+
+
+def contract_arcs_jnp(
+    cu: jnp.ndarray, cv: jnp.ndarray, w: jnp.ndarray, valid: jnp.ndarray, n_c: int
+):
+    """Device-side quotient-arc dedup for one shard (static shapes).
+
+    Args:
+      cu, cv: (E,) int32 coarse endpoints of local arcs.
+      w:      (E,) f32 arc weights.
+      valid:  (E,) bool — padding / self-arc mask (False entries are dropped).
+      n_c:    static upper bound on coarse node count.
+    Returns:
+      (cu', cv', w', valid'): deduplicated arcs, padded to E.
+    """
+    E = cu.shape[0]
+    ok = valid & (cu != cv)
+    # key sorts invalid arcs to the end
+    big = jnp.int64(n_c)
+    key = jnp.where(ok, cu.astype(jnp.int64) * big + cv.astype(jnp.int64), big * big)
+    order = jnp.argsort(key)
+    key_s = key[order]
+    w_s = jnp.where(ok, w, 0.0)[order]
+    newrun = jnp.concatenate(
+        [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]]
+    ) & (key_s < big * big)
+    run = jnp.cumsum(newrun) - 1
+    run = jnp.where(key_s < big * big, run, E - 1)
+    w_out = jnp.zeros((E,), jnp.float32).at[run].add(w_s)
+    cu_out = jnp.zeros((E,), jnp.int32).at[run].set((key_s // big).astype(jnp.int32))
+    cv_out = jnp.zeros((E,), jnp.int32).at[run].set((key_s % big).astype(jnp.int32))
+    n_runs = jnp.sum(newrun)
+    valid_out = jnp.arange(E) < n_runs
+    return cu_out, cv_out, jnp.where(valid_out, w_out, 0.0), valid_out

@@ -1,0 +1,451 @@
+"""Distributed-memory SCLaP via ``jax.shard_map`` (paper §IV-A/B).
+
+Maps the paper's MPI scheme onto a 1-D device mesh:
+
+* every PE owns a contiguous node range plus ghost copies of remote
+  neighbours (:class:`~repro.graph.packing.ShardedGraph`);
+* within a *phase*, a PE sweeps its local nodes (chunked-sequentially, the
+  local analogue of the paper's per-PE traversal) using ghost labels from
+  the previous phase — the paper's asynchronous overlap expressed
+  bulk-synchronously;
+* at the end of a phase, every PE packs the labels of its *interface nodes*
+  into a fixed send buffer; one ``all_gather`` replaces the paper's
+  per-adjacent-PE messages, and a precomputed (owner, slot) map scatters the
+  received labels into each PE's ghost table;
+* balance accounting follows §IV-B exactly:
+  - **coarsening**: per-PE *local* weight tables over the clusters of local
+    + ghost nodes only (a global table of size n per PE is infeasible).
+    The table here is a sorted-unique (label -> weight) array rebuilt each
+    phase and scatter-updated within it — the sort-based stand-in for the
+    paper's hash map (DESIGN.md §2);
+  - **refinement**: exact global block weights via one ``psum`` per phase,
+    locally updated in between (the ParMetis-style scheme the paper adopts).
+
+The full multilevel driver on top (:func:`partition_distributed`) runs
+coarsening/refinement sweeps on the mesh and contracts between levels on
+the host, mirroring the paper's level-synchronous structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..graph.csr import GraphNP
+from ..graph.packing import ShardedGraph, pack_chunks, shard_graph
+
+__all__ = [
+    "DistLPPlan",
+    "build_plan",
+    "lp_cluster_distributed",
+    "lp_refine_distributed",
+]
+
+_NEG = -1e30
+_SENT = np.int32(2**30)  # sentinel label, larger than any real cluster id
+
+
+@dataclass
+class DistLPPlan:
+    """Device-ready stacked arrays for the distributed sweep (leading axis P)."""
+
+    sg: ShardedGraph
+    # per-shard chunk layout (local node sweep order), stacked over PEs:
+    ch_nodes: np.ndarray      # (P, C, Nc) int32 local node ids, pad -1
+    ch_edge_dst: np.ndarray   # (P, C, Ec) int32 local-EXT ids, pad 0
+    ch_edge_w: np.ndarray     # (P, C, Ec) f32
+    ch_edge_slot: np.ndarray  # (P, C, Ec) int32
+    ch_edge_valid: np.ndarray  # (P, C, Ec) bool
+    ch_node_valid: np.ndarray  # (P, C, Nc) bool
+
+
+def build_plan(
+    g: GraphNP,
+    P_shards: int,
+    chunks_per_shard: int = 8,
+    order: str = "degree",
+    seed: int = 0,
+) -> DistLPPlan:
+    """Shard the graph and pack each shard's local sweep into chunks."""
+    sg = shard_graph(g, P_shards)
+    rng = np.random.default_rng(seed)
+    packs = []
+    for p in range(P_shards):
+        n_p = int(sg.n_local[p])
+        m_p = int(sg.m_local[p])
+        local = GraphNP(
+            indptr=sg.indptr[p, : n_p + 1].astype(np.int64),
+            indices=sg.indices[p, :m_p],
+            ew=sg.ew[p, :m_p],
+            nw=sg.nw[p, :n_p],
+        )
+        deg = local.degrees()
+        if order == "degree":
+            o = np.argsort(deg + rng.random(n_p), kind="stable")
+        else:
+            o = rng.permutation(n_p)
+        packs.append(
+            pack_chunks(
+                local,
+                o.astype(np.int64),
+                max_nodes=max(64, -(-n_p // chunks_per_shard)),
+                max_edges=max(512, -(-m_p // max(1, chunks_per_shard // 2))),
+            )
+        )
+    C = max(pk.num_chunks for pk in packs)
+    Nc = max(pk.nodes.shape[1] for pk in packs)
+    Ec = max(pk.edge_dst.shape[1] for pk in packs)
+    Pn = P_shards
+    ch_nodes = np.full((Pn, C, Nc), -1, np.int32)
+    ch_node_valid = np.zeros((Pn, C, Nc), bool)
+    ch_edge_dst = np.zeros((Pn, C, Ec), np.int32)
+    ch_edge_w = np.zeros((Pn, C, Ec), np.float32)
+    ch_edge_slot = np.zeros((Pn, C, Ec), np.int32)
+    ch_edge_valid = np.zeros((Pn, C, Ec), bool)
+    for p, pk in enumerate(packs):
+        c, nn = pk.nodes.shape
+        e = pk.edge_dst.shape[1]
+        n_p = int(sg.n_local[p])
+        nodes = pk.nodes.copy()
+        nodes[~pk.node_valid] = -1  # pack_chunks pads with local n; use -1
+        ch_nodes[p, :c, :nn] = nodes
+        ch_node_valid[p, :c, :nn] = pk.node_valid
+        dst = pk.edge_dst.copy()
+        dst[~pk.edge_valid] = 0  # in-range garbage; masked by edge_valid
+        ch_edge_dst[p, :c, :e] = dst
+        ch_edge_w[p, :c, :e] = pk.edge_w
+        ch_edge_slot[p, :c, :e] = pk.edge_src_slot
+        ch_edge_valid[p, :c, :e] = pk.edge_valid
+    return DistLPPlan(
+        sg=sg,
+        ch_nodes=ch_nodes,
+        ch_edge_dst=ch_edge_dst,
+        ch_edge_w=ch_edge_w,
+        ch_edge_slot=ch_edge_slot,
+        ch_edge_valid=ch_edge_valid,
+        ch_node_valid=ch_node_valid,
+    )
+
+
+# --------------------------------------------------------------------------
+# the per-shard sweep body (runs inside shard_map; axis name "pe")
+# --------------------------------------------------------------------------
+
+
+def _shard_sweep(
+    # chunk layout (local shapes, leading P axis stripped by shard_map)
+    ch_nodes, ch_node_valid, ch_edge_dst, ch_edge_w, ch_edge_slot, ch_edge_valid,
+    # shard structure
+    nw_local, ghost_nw, ghost_owner, ghost_slot, iface_nodes, n_local, n_ghost,
+    # state
+    labels_local, labels_ghost,
+    # constants
+    U, key,
+    *,
+    iters: int,
+    refine_mode: bool,
+    k: int,
+    maxN: int,
+    maxG: int,
+    maxI: int,
+):
+    """One shard's SCLaP: iters x C phases (one chunk per phase + exchange)."""
+    C, Nc = ch_nodes.shape[0], ch_nodes.shape[1]
+    Ec = ch_edge_dst.shape[1]
+    pe = jax.lax.axis_index("pe")
+    local_valid = jnp.arange(maxN) < n_local
+    ghost_valid = jnp.arange(maxG) < n_ghost
+
+    def phase(ph, carry):
+        """One phase == one local chunk sweep + ghost exchange (paper \u00a7IV-A:
+        updates of phase k-1 are consumed in phase k) + weight resync."""
+        c = ph % C
+        labels_local, labels_ghost, key, moves = carry
+        key, sub = jax.random.split(key)
+        labels_ext = jnp.concatenate([labels_local, labels_ghost])
+
+        # ---- per-phase weight tables (\u00a7IV-B) --------------------------
+        if refine_mode:
+            # exact global block weights via one allreduce per phase
+            local_bw = (
+                jnp.zeros((k + 1,), jnp.float32)
+                .at[jnp.where(local_valid, labels_local, k)]
+                .add(jnp.where(local_valid, nw_local, 0.0))
+            )
+            table_w = jax.lax.psum(local_bw, "pe")
+            table_w = table_w.at[k].set(jnp.inf)
+            table_ids = jnp.zeros((1,), jnp.int32)  # unused
+        else:
+            # local weight table over clusters of local+ghost nodes only
+            ids = jnp.concatenate(
+                [
+                    jnp.where(local_valid, labels_local, _SENT),
+                    jnp.where(ghost_valid, labels_ghost, _SENT),
+                ]
+            )
+            wgt = jnp.concatenate(
+                [
+                    jnp.where(local_valid, nw_local, 0.0),
+                    jnp.where(ghost_valid, ghost_nw, 0.0),
+                ]
+            )
+            order = jnp.argsort(ids)
+            sid = ids[order]
+            sw = wgt[order]
+            newrun = jnp.concatenate([jnp.ones((1,), bool), sid[1:] != sid[:-1]])
+            rid = jnp.cumsum(newrun) - 1
+            T = sid.shape[0]
+            table_ids = jnp.full((T,), _SENT, jnp.int32).at[rid].set(sid)
+            table_w = jnp.zeros((T,), jnp.float32).at[rid].add(sw)
+            table_w = jnp.where(table_ids == _SENT, jnp.inf, table_w)
+
+        def lookup_w(lbl):
+            if refine_mode:
+                return table_w[jnp.minimum(lbl, k)]
+            pos = jnp.minimum(jnp.searchsorted(table_ids, lbl), table_ids.shape[0] - 1)
+            return jnp.where(table_ids[pos] == lbl, table_w[pos], jnp.inf)
+
+        # ---- the chunk sweep ---------------------------------------------
+        nd = ch_nodes[c]
+        ndv = ch_node_valid[c]
+        dst = ch_edge_dst[c]
+        ev = ch_edge_valid[c]
+        slot = ch_edge_slot[c]
+        w0 = jnp.where(ev, ch_edge_w[c], 0.0)
+        cand = jnp.where(ev, labels_ext[dst], _SENT).astype(jnp.int32)
+
+        perm = jnp.lexsort((cand, slot))
+        s_slot = slot[perm]
+        s_lbl = cand[perm]
+        s_w = w0[perm]
+        nr = jnp.concatenate(
+            [jnp.ones((1,), bool), (s_slot[1:] != s_slot[:-1]) | (s_lbl[1:] != s_lbl[:-1])]
+        )
+        rid = jnp.cumsum(nr) - 1
+        run_w = jnp.zeros((Ec,), jnp.float32).at[rid].add(s_w)
+        run_slot = jnp.full((Ec,), Nc, jnp.int32).at[rid].set(s_slot)
+        run_lbl = jnp.full((Ec,), _SENT, jnp.int32).at[rid].set(s_lbl)
+
+        nd_c = jnp.maximum(nd, 0)
+        own = jnp.where(ndv, labels_local[nd_c], _SENT)
+        own_r = own[jnp.minimum(run_slot, Nc - 1)]
+        nwv = jnp.where(ndv, nw_local[nd_c], 0.0)
+        nw_r = nwv[jnp.minimum(run_slot, Nc - 1)]
+        cand_w = lookup_w(run_lbl)
+        fits = cand_w + nw_r <= U
+        if refine_mode:
+            own_w = lookup_w(own_r)
+            overloaded = own_w > U
+            eligible = jnp.where(
+                overloaded,
+                fits & (run_lbl != own_r),
+                (run_w > 0) & (fits | (run_lbl == own_r)),
+            )
+        else:
+            eligible = (run_w > 0) & (fits | (run_lbl == own_r))
+        eligible &= (run_slot < Nc) & (run_lbl < _SENT)
+        jit_ = jax.random.uniform(sub, (Ec,), jnp.float32, 0.0, 0.49)
+        score = jnp.where(eligible, run_w + jit_, _NEG)
+
+        seg = jnp.minimum(run_slot, Nc)
+        best = jnp.full((Nc + 1,), _NEG, jnp.float32).at[seg].max(score)
+        is_best = (score >= best[seg]) & (score > _NEG / 2)
+        win = (
+            jnp.full((Nc + 1,), _SENT, jnp.int32)
+            .at[seg]
+            .min(jnp.where(is_best, run_lbl, _SENT))
+        )[:Nc]
+        new_lbl = jnp.where(ndv & (win < _SENT), win, own)
+        moved = ndv & (new_lbl != own)
+
+        labels_local = labels_local.at[nd_c].set(
+            jnp.where(ndv, new_lbl, labels_local[nd_c]), mode="drop"
+        )
+        moves = moves + jnp.sum(moved)
+
+        # ---- phase exchange: interface labels -> ghosts -------------------
+        send = labels_local[jnp.maximum(iface_nodes, 0)]
+        all_buf = jax.lax.all_gather(send, "pe")           # (P, maxI)
+        new_ghost = all_buf[ghost_owner, ghost_slot]
+        labels_ghost = jnp.where(ghost_valid, new_ghost, labels_ghost)
+        return labels_local, labels_ghost, key, moves
+
+    key = jax.random.fold_in(key, pe)
+    labels_local, labels_ghost, key, moves = jax.lax.fori_loop(
+        0,
+        iters * C,  # one iteration == C phases (one chunk each)
+        phase,
+        (labels_local, labels_ghost, key, jnp.zeros((), jnp.int32)),
+    )
+    return labels_local, labels_ghost, jax.lax.psum(moves, "pe")
+
+
+def _make_mesh(P_shards: int) -> Mesh:
+    devs = np.array(jax.devices()[:P_shards])
+    return Mesh(devs, ("pe",))
+
+
+def _run_distributed(
+    plan: DistLPPlan,
+    labels_global: Optional[np.ndarray],
+    U: float,
+    iters: int,
+    seed: int,
+    refine_mode: bool,
+    k: int,
+) -> np.ndarray:
+    sg = plan.sg
+    Pn = sg.P
+    mesh = _make_mesh(Pn)
+    maxN, maxG, maxI = sg.max_local, sg.max_ghost, sg.max_iface
+
+    # initial labels: own global id (cluster mode) or the given partition
+    ll = np.zeros((Pn, maxN), np.int32)
+    lg = np.zeros((Pn, maxG), np.int32)
+    for p in range(Pn):
+        n_p, g_p = int(sg.n_local[p]), int(sg.n_ghost[p])
+        if refine_mode:
+            ll[p, :n_p] = labels_global[sg.range_start[p] : sg.range_start[p] + n_p]
+            lg[p, :g_p] = labels_global[sg.ghost_global[p, :g_p]]
+        else:
+            ll[p, :n_p] = np.arange(sg.range_start[p], sg.range_start[p] + n_p)
+            lg[p, :g_p] = sg.ghost_global[p, :g_p]
+
+    spec = P("pe")
+    args = [
+        plan.ch_nodes, plan.ch_node_valid, plan.ch_edge_dst, plan.ch_edge_w,
+        plan.ch_edge_slot, plan.ch_edge_valid,
+        sg.nw, sg.ghost_nw, sg.ghost_owner, sg.ghost_slot, sg.iface_nodes,
+        sg.n_local.astype(np.int32), sg.n_ghost.astype(np.int32),
+    ]
+    jargs = [jnp.asarray(a) for a in args]
+    jll, jlg = jnp.asarray(ll), jnp.asarray(lg)
+
+    # shard_map blocks keep a leading PE axis of size 1; strip it inside
+    def body(ch_nodes, ch_nv, ch_ed, ch_ew, ch_es, ch_ev, nw, gnw, gow, gsl,
+             ifn, nloc, ngho, ll_, lg_, key):
+        out = _shard_sweep(
+            ch_nodes[0], ch_nv[0], ch_ed[0], ch_ew[0], ch_es[0], ch_ev[0],
+            nw[0], gnw[0], gow[0], gsl[0], ifn[0], nloc[0], ngho[0],
+            ll_[0], lg_[0],
+            jnp.float32(U), key,
+            iters=iters, refine_mode=refine_mode, k=k,
+            maxN=maxN, maxG=maxG, maxI=maxI,
+        )
+        return out[0][None], out[1][None], out[2]
+
+    shmapped = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec,) * 15 + (P(),),
+        out_specs=(spec, spec, P()),
+        check_vma=False,
+    )
+    key = jax.random.PRNGKey(seed)
+    out_ll, out_lg, moves = jax.jit(shmapped)(
+        *jargs, jll, jlg, key
+    )
+    out_ll = np.asarray(out_ll)
+    labels = np.zeros(sg.n, np.int32)
+    for p in range(Pn):
+        n_p = int(sg.n_local[p])
+        labels[sg.range_start[p] : sg.range_start[p] + n_p] = out_ll[p, :n_p]
+    return labels
+
+
+def lp_cluster_distributed(
+    plan: DistLPPlan, U: float, iters: int = 3, seed: int = 0
+) -> np.ndarray:
+    """Distributed size-constrained LP clustering; returns global labels."""
+    return _run_distributed(plan, None, U, iters, seed, refine_mode=False, k=0)
+
+
+def lp_refine_distributed(
+    plan: DistLPPlan,
+    labels_global: np.ndarray,
+    k: int,
+    U: float,
+    iters: int = 6,
+    seed: int = 0,
+) -> np.ndarray:
+    """Distributed LP local search with exact psum block weights."""
+    return _run_distributed(
+        plan, labels_global, U, iters, seed, refine_mode=True, k=k
+    )
+
+
+# --------------------------------------------------------------------------
+# distributed contraction (paper §IV-C): each PE builds the weighted quotient
+# of its local subgraph on device (sort+dedup — the TPU stand-in for the
+# paper's hashing); the deduplicated per-PE arc lists are merged on host.
+# --------------------------------------------------------------------------
+
+
+def contract_distributed(plan: DistLPPlan, labels_global: np.ndarray):
+    """Returns (coarse GraphNP, fine->coarse mapping C) like core.contract,
+    but the O(m) quotient-building runs sharded on the device mesh."""
+    from ..graph.csr import GraphNP
+    from .contraction import contract_arcs_jnp, relabel
+
+    sg = plan.sg
+    Pn = sg.P
+    C_map, n_c = relabel(labels_global)
+    maxN, maxG, maxM = sg.max_local, sg.max_ghost, sg.indices.shape[1]
+
+    # per-shard coarse labels of local + ghost nodes
+    cl = np.zeros((Pn, maxN), np.int32)
+    cg = np.zeros((Pn, maxG), np.int32)
+    for p in range(Pn):
+        n_p, g_p = int(sg.n_local[p]), int(sg.n_ghost[p])
+        a = int(sg.range_start[p])
+        cl[p, :n_p] = C_map[a : a + n_p]
+        cg[p, :g_p] = C_map[sg.ghost_global[p, :g_p]]
+
+    mesh = _make_mesh(Pn)
+    spec = P("pe")
+
+    def body(indptr, indices, ew, m_local, cl_, cg_):
+        indptr, indices, ew = indptr[0], indices[0], ew[0]
+        m_local, cl_, cg_ = m_local[0], cl_[0], cg_[0]
+        labels_ext = jnp.concatenate([cl_, cg_])
+        arc = jnp.arange(maxM)
+        src = jnp.searchsorted(indptr, arc, side="right") - 1
+        valid = arc < m_local
+        cu = jnp.where(valid, cl_[jnp.clip(src, 0, maxN - 1)], 0)
+        cv = jnp.where(valid, labels_ext[indices], 0)
+        cu2, cv2, w2, v2 = contract_arcs_jnp(
+            cu.astype(jnp.int32), cv.astype(jnp.int32),
+            jnp.where(valid, ew, 0.0), valid, n_c,
+        )
+        return cu2[None], cv2[None], w2[None], v2[None]
+
+    out = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec,) * 6,
+        out_specs=(spec,) * 4,
+        check_vma=False,
+    ))(
+        jnp.asarray(sg.indptr), jnp.asarray(sg.indices), jnp.asarray(sg.ew),
+        jnp.asarray(sg.m_local), jnp.asarray(cl), jnp.asarray(cg),
+    )
+    cu, cv, w, v = (np.asarray(x) for x in out)
+    keep = v.reshape(-1)
+    uu = cu.reshape(-1)[keep]
+    vv = cv.reshape(-1)[keep]
+    ww = w.reshape(-1)[keep]
+    # host merge of the per-PE deduplicated quotient arcs
+    from ..graph.csr import from_edges
+
+    nw_c = np.zeros(n_c, np.float64)
+    np.add.at(nw_c, C_map, np.concatenate(
+        [sg.nw[p, : int(sg.n_local[p])] for p in range(Pn)]))
+    coarse = from_edges(n_c, uu, vv, ww, nw=nw_c.astype(np.float32),
+                        symmetrize=False, dedup=True)
+    return coarse, C_map

@@ -1,0 +1,263 @@
+"""The overall multilevel system (paper §IV-E) with iterated V-cycles.
+
+Pipeline per V-cycle:
+
+  coarsen:   l iterations of parallel SCLaP (U = max(max_v c(v), L_max/f),
+             degree order) -> cluster contraction, repeated until the graph
+             has <= coarsest_factor * k nodes or contraction stalls;
+  initial:   the island evolutionary algorithm (KaFFPaE) on the replicated
+             coarsest graph — seeded with the projected current solution
+             from the 2nd V-cycle on, so quality never regresses;
+  uncoarsen: project labels through the hierarchy, r iterations of SCLaP
+             local search per level (U = L_max, random order), final
+             feasibility repair at the finest level.
+
+Presets mirror the paper §V-A: *fast* (3/6 LP iters, 2 V-cycles, GA gets
+only its initial population), *eco* (5 V-cycles + GA generations), *minimal*
+(1 V-cycle).  f = 14 for social/web graphs, "20000" for meshes in the first
+V-cycle (scale-capped — the paper's value presumes billion-edge graphs),
+random in [10, 25] afterwards.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from ..graph.csr import GraphNP
+from .contraction import contract, project_labels
+from .evolutionary import EvoConfig, evolve
+from .initial_partition import repair_balance
+from .label_propagation import lp_cluster, lp_refine, sclap_numpy
+from .metrics import cut_np, imbalance_np, lmax
+
+__all__ = ["PartitionerConfig", "PartitionReport", "partition"]
+
+
+@dataclass
+class PartitionerConfig:
+    k: int = 2
+    eps: float = 0.03
+    preset: str = "fast"            # fast | eco | minimal
+    graph_type: str = "auto"        # social | mesh | auto
+    lp_iters_coarsen: int = 3
+    lp_iters_refine: int = 6
+    f_social: float = 14.0
+    f_mesh: float = 20000.0
+    coarsest_factor: int = 10000    # stop coarsening at coarsest_factor * k
+    max_levels: int = 64
+    shrink_stall: float = 0.95      # stop if n' > stall * n
+    seed: int = 0
+    # engine
+    engine: str = "auto"            # jnp | numpy | dist | auto
+    numpy_below: int = 4096         # use the sequential engine below this n
+    target_chunks: int = 64
+    dist_shards: int = 0            # engine="dist": number of mesh PEs
+    dist_chunks_per_shard: int = 4
+    # BEYOND-PAPER: gain-based FM pass on the finest level (the paper's fine
+    # refinement is LP-only; see EXPERIMENTS.md §Paper-validation for the
+    # separate accounting).  Enabled by the "strong" preset.
+    fm_finest: bool = False
+    fm_finest_max_n: int = 2_000_000
+    # evolutionary budget (scaled by preset)
+    islands: int = 2
+    pop_per_island: int = 2
+    generations: int = 0
+
+    def __post_init__(self):
+        if self.preset == "eco":
+            self.islands = max(self.islands, 4)
+            self.pop_per_island = max(self.pop_per_island, 3)
+            self.generations = max(self.generations, 8)
+            self.vcycles = 5
+        elif self.preset == "minimal":
+            self.vcycles = 1
+        elif self.preset == "strong":  # beyond-paper: eco + finest-level FM
+            self.islands = max(self.islands, 4)
+            self.pop_per_island = max(self.pop_per_island, 3)
+            self.generations = max(self.generations, 8)
+            self.vcycles = 5
+            self.fm_finest = True
+        else:  # fast
+            self.vcycles = 2
+
+    vcycles: int = field(default=2, init=False)
+
+
+@dataclass
+class PartitionReport:
+    labels: np.ndarray
+    cut: float
+    imbalance: float
+    feasible: bool
+    level_sizes: List[tuple]        # [(n, m) per level incl. finest]
+    shrink_first: float             # n_1 / n_0 after first contraction
+    cycle_cuts: List[float]
+    seconds: float
+
+
+def _detect_type(g: GraphNP) -> str:
+    deg = g.degrees().astype(np.float64)
+    if deg.size == 0:
+        return "mesh"
+    cv = deg.std() / max(deg.mean(), 1e-9)
+    return "social" if cv > 0.7 else "mesh"
+
+
+def _f_value(cfg: PartitionerConfig, gtype: str, cycle: int, rng) -> float:
+    if cycle > 0:
+        return float(rng.uniform(10.0, 25.0))
+    return cfg.f_social if gtype == "social" else cfg.f_mesh
+
+
+def _cluster(g, U, iters, seed, restrict, cfg) -> np.ndarray:
+    use_numpy = cfg.engine == "numpy" or (
+        cfg.engine in ("auto", "dist") and g.n < cfg.numpy_below
+    )
+    if use_numpy:
+        return sclap_numpy(
+            g, np.arange(g.n), U=U, iters=iters, seed=seed, restrict=restrict
+        ).labels
+    if cfg.engine == "dist" and restrict is None:
+        # V-cycle-restricted clustering keeps the single-mesh path; the
+        # unrestricted (hot) first cycle runs on the device mesh
+        from .distributed_lp import build_plan, lp_cluster_distributed
+
+        plan = build_plan(
+            g, cfg.dist_shards, chunks_per_shard=cfg.dist_chunks_per_shard,
+            order="degree", seed=seed,
+        )
+        return lp_cluster_distributed(plan, U=U, iters=iters, seed=seed)
+    max_nodes = max(256, -(-g.n // cfg.target_chunks))
+    max_edges = max(4096, -(-g.m // max(cfg.target_chunks // 2, 1)))
+    return lp_cluster(
+        g, U=U, iters=iters, seed=seed, restrict=restrict,
+        max_nodes=max_nodes, max_edges=max_edges,
+    ).labels
+
+
+def _refine(g, labels, k, Lmax, iters, seed, cfg) -> np.ndarray:
+    use_numpy = cfg.engine == "numpy" or (
+        cfg.engine in ("auto", "dist") and g.n < cfg.numpy_below
+    )
+    if not use_numpy and cfg.engine == "dist":
+        from .distributed_lp import build_plan, lp_refine_distributed
+
+        plan = build_plan(
+            g, cfg.dist_shards, chunks_per_shard=cfg.dist_chunks_per_shard,
+            order="random", seed=seed,
+        )
+        return lp_refine_distributed(plan, labels, k=k, U=Lmax, iters=iters, seed=seed)
+    if use_numpy:
+        from .fm import fm_refine
+
+        lab = sclap_numpy(
+            g, labels, U=Lmax, iters=iters, seed=seed, refine_mode=True, num_labels=k
+        ).labels
+        # strong gain-based search on small (coarse) levels, like KaFFPa
+        return fm_refine(g, lab, k, Lmax, seed=seed)
+    max_nodes = max(256, -(-g.n // cfg.target_chunks))
+    max_edges = max(4096, -(-g.m // max(cfg.target_chunks // 2, 1)))
+    return lp_refine(
+        g, labels, k=k, U=Lmax, iters=iters, seed=seed,
+        max_nodes=max_nodes, max_edges=max_edges,
+    ).labels
+
+
+def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
+    t0 = time.time()
+    rng = np.random.default_rng(cfg.seed)
+    k = cfg.k
+    L = lmax(g.total_node_weight, k, cfg.eps)
+    gtype = cfg.graph_type if cfg.graph_type != "auto" else _detect_type(g)
+    coarsest_target = cfg.coarsest_factor * k
+
+    best_labels: Optional[np.ndarray] = None
+    best_cut = np.inf
+    cycle_cuts: List[float] = []
+    level_sizes: List[tuple] = []
+    shrink_first = 1.0
+
+    cur_labels: Optional[np.ndarray] = None
+    for cycle in range(cfg.vcycles):
+        # ---------------- coarsening ----------------
+        f = _f_value(cfg, gtype, cycle, rng)
+        hierarchy = []  # [(graph, C)]
+        gg = g
+        restrict = cur_labels  # protect cut edges from the 2nd cycle on
+        for lev in range(cfg.max_levels):
+            if gg.n <= coarsest_target:
+                break
+            U = max(float(gg.nw.max()), L / f)
+            seed = int(rng.integers(1 << 30))
+            clus = _cluster(gg, U, cfg.lp_iters_coarsen, seed, restrict, cfg)
+            coarse, C = contract(gg, clus)
+            if coarse.n >= cfg.shrink_stall * gg.n:
+                break
+            hierarchy.append((gg, C))
+            if cycle == 0 and lev == 0:
+                shrink_first = coarse.n / max(gg.n, 1)
+            if restrict is not None:
+                rc = np.zeros(coarse.n, dtype=np.int64)
+                rc[C] = restrict  # consistent: clusters never straddle blocks
+                restrict = rc
+            gg = coarse
+        if cycle == 0:
+            level_sizes = [(h[0].n, h[0].m) for h in hierarchy] + [(gg.n, gg.m)]
+
+        # ---------------- initial partitioning ----------------
+        seeds = []
+        if cur_labels is not None:
+            seeds.append(restrict.astype(np.int32))  # projected current solution
+        evo = EvoConfig(
+            k=k,
+            Lmax=L,
+            islands=cfg.islands,
+            pop_per_island=cfg.pop_per_island,
+            generations=cfg.generations,
+            refine_iters=cfg.lp_iters_refine,
+            seed=int(rng.integers(1 << 30)),
+            seed_individuals=seeds,
+        )
+        lab = evolve(gg, evo)
+
+        # ---------------- uncoarsening + local search ----------------
+        for gg_f, C in reversed(hierarchy):
+            lab = project_labels(lab, C)
+            before = cut_np(gg_f, lab)
+            ref = _refine(
+                gg_f, lab, k, L, cfg.lp_iters_refine, int(rng.integers(1 << 30)), cfg
+            )
+            # monotonicity guard: chunked-synchronous LP may oscillate; keep
+            # the refined labels only if they did not worsen the cut (unless
+            # they were needed to restore feasibility)
+            bw_ref = np.bincount(ref, weights=gg_f.nw, minlength=k).max()
+            bw_old = np.bincount(lab, weights=gg_f.nw, minlength=k).max()
+            if cut_np(gg_f, ref) <= before or bw_old > L >= bw_ref:
+                lab = ref
+        if cfg.fm_finest and g.n <= cfg.fm_finest_max_n:
+            from .fm import fm_refine
+
+            lab = fm_refine(g, lab, k, L, seed=int(rng.integers(1 << 30)))
+        lab = repair_balance(g, lab, k, L, seed=cfg.seed)
+        c = cut_np(g, lab)
+        cycle_cuts.append(c)
+        cur_labels = lab.astype(np.int64)
+        if c < best_cut:
+            best_cut, best_labels = c, lab
+
+    return PartitionReport(
+        labels=best_labels,
+        cut=float(best_cut),
+        imbalance=imbalance_np(g, best_labels, k),
+        feasible=bool(
+            np.bincount(best_labels, weights=g.nw, minlength=k).max() <= L + 1e-6
+        ),
+        level_sizes=level_sizes,
+        shrink_first=shrink_first,
+        cycle_cuts=cycle_cuts,
+        seconds=time.time() - t0,
+    )

@@ -1,0 +1,35 @@
+"""Graph substrate: CSR containers, generators, static-shape packing."""
+
+from .csr import Graph, GraphNP, from_edges, to_device, to_host, validate
+from .generators import (
+    barabasi_albert,
+    mesh2d,
+    planted_partition,
+    rgg,
+    ring,
+    rmat,
+    star,
+)
+from .packing import ChunkPack, EllPack, ShardedGraph, ell_pack, pack_chunks, shard_graph
+
+__all__ = [
+    "Graph",
+    "GraphNP",
+    "from_edges",
+    "to_device",
+    "to_host",
+    "validate",
+    "rgg",
+    "mesh2d",
+    "rmat",
+    "barabasi_albert",
+    "planted_partition",
+    "ring",
+    "star",
+    "ChunkPack",
+    "EllPack",
+    "ShardedGraph",
+    "pack_chunks",
+    "ell_pack",
+    "shard_graph",
+]

@@ -1,0 +1,225 @@
+"""CSR graph container used throughout the partitioning engine.
+
+An undirected graph G = (V, E, c, omega) is stored as a *symmetric* CSR
+adjacency structure: every undirected edge {u, v} appears as the two arcs
+(u, v) and (v, u).  Edge weights ``ew`` are per-arc (both arcs of one edge
+carry the same weight); node weights ``nw`` are per-node.  This mirrors the
+adjacency-array representation of the paper (Section IV-A) and is the native
+layout for the sort/segment primitives the TPU adaptation is built on.
+
+Two twin types exist:
+
+* :class:`GraphNP` — host-side numpy arrays.  All *construction* (generators,
+  chunk packing, shard splitting, contraction between levels) happens here,
+  because level shapes change dynamically and the multilevel driver is a host
+  loop.
+* :class:`Graph` — a registered JAX pytree with the same fields, used inside
+  jitted/shard_mapped computations whose shapes are static per level.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Graph",
+    "GraphNP",
+    "from_edges",
+    "to_device",
+    "to_host",
+    "validate",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class Graph:
+    """Device-side CSR graph (a JAX pytree).
+
+    Attributes:
+      indptr:  (n + 1,) int32 — CSR row pointers.
+      indices: (m,)     int32 — arc heads (m counts *arcs*, i.e. 2x edges).
+      ew:      (m,)     float32 — arc weights.
+      nw:      (n,)     float32 — node weights.
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    ew: jax.Array
+    nw: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def m(self) -> int:  # number of arcs (2x undirected edges)
+        return self.indices.shape[0]
+
+    @property
+    def total_node_weight(self) -> jax.Array:
+        return jnp.sum(self.nw)
+
+    def degrees(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def arc_sources(self) -> jax.Array:
+        """(m,) int32 — source node of each arc (CSR row expansion)."""
+        return jnp.repeat(
+            jnp.arange(self.n, dtype=jnp.int32),
+            self.degrees(),
+            total_repeat_length=self.m,
+        )
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.ew, self.nw), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@dataclass(frozen=True)
+class GraphNP:
+    """Host-side CSR graph (numpy); see :class:`Graph` for field semantics."""
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    ew: np.ndarray
+    nw: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def m(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def total_node_weight(self) -> float:
+        return float(self.nw.sum())
+
+    def degrees(self) -> np.ndarray:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def arc_sources(self) -> np.ndarray:
+        return np.repeat(np.arange(self.n, dtype=np.int32), self.degrees())
+
+
+def from_edges(
+    n: int,
+    u: np.ndarray,
+    v: np.ndarray,
+    w: np.ndarray | None = None,
+    nw: np.ndarray | None = None,
+    symmetrize: bool = True,
+    dedup: bool = True,
+) -> GraphNP:
+    """Build a :class:`GraphNP` from an edge list.
+
+    Args:
+      n: number of nodes.
+      u, v: int arrays of endpoints.  Self loops are dropped.
+      w: optional edge weights (default: all ones).
+      nw: optional node weights (default: all ones).
+      symmetrize: if True, adds both arcs per input edge.
+      dedup: if True, parallel arcs are merged (weights summed).
+    """
+    u = np.asarray(u, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    if w is None:
+        w = np.ones(u.shape[0], dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+
+    keep = u != v
+    u, v, w = u[keep], v[keep], w[keep]
+
+    if symmetrize:
+        uu = np.concatenate([u, v])
+        vv = np.concatenate([v, u])
+        ww = np.concatenate([w, w])
+    else:
+        uu, vv, ww = u, v, w
+
+    if dedup and uu.size:
+        key = uu * np.int64(n) + vv
+        order = np.argsort(key, kind="stable")
+        key = key[order]
+        ww = ww[order]
+        boundary = np.empty(key.shape[0], dtype=bool)
+        boundary[0] = True
+        boundary[1:] = key[1:] != key[:-1]
+        run_id = np.cumsum(boundary) - 1
+        n_runs = int(run_id[-1]) + 1
+        merged_w = np.zeros(n_runs, dtype=np.float64)
+        np.add.at(merged_w, run_id, ww)
+        first = np.flatnonzero(boundary)
+        uu = (key[first] // n).astype(np.int32)
+        vv = (key[first] % n).astype(np.int32)
+        ww = merged_w.astype(np.float32)
+    else:
+        order = np.argsort(uu * np.int64(n) + vv, kind="stable")
+        uu = uu[order].astype(np.int32)
+        vv = vv[order].astype(np.int32)
+        ww = ww[order]
+
+    counts = np.bincount(uu, minlength=n).astype(np.int64)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    if nw is None:
+        nw = np.ones(n, dtype=np.float32)
+    return GraphNP(
+        indptr=indptr.astype(np.int64),
+        indices=vv.astype(np.int32),
+        ew=ww.astype(np.float32),
+        nw=np.asarray(nw, dtype=np.float32),
+    )
+
+
+def to_device(g: GraphNP) -> Graph:
+    return Graph(
+        indptr=jnp.asarray(g.indptr, dtype=jnp.int32)
+        if g.m < 2**31
+        else jnp.asarray(g.indptr),
+        indices=jnp.asarray(g.indices, dtype=jnp.int32),
+        ew=jnp.asarray(g.ew, dtype=jnp.float32),
+        nw=jnp.asarray(g.nw, dtype=jnp.float32),
+    )
+
+
+def to_host(g: Graph) -> GraphNP:
+    return GraphNP(
+        indptr=np.asarray(g.indptr, dtype=np.int64),
+        indices=np.asarray(g.indices),
+        ew=np.asarray(g.ew),
+        nw=np.asarray(g.nw),
+    )
+
+
+def validate(g: GraphNP) -> None:
+    """Raise AssertionError if the CSR structure is inconsistent/asymmetric."""
+    assert g.indptr[0] == 0 and g.indptr[-1] == g.m
+    assert np.all(np.diff(g.indptr) >= 0)
+    assert g.nw.shape == (g.n,)
+    assert g.ew.shape == (g.m,)
+    if g.m == 0:
+        return
+    assert g.indices.min() >= 0 and g.indices.max() < g.n
+    # symmetry: the multiset of (u, v, w) must equal the multiset of (v, u, w)
+    src = g.arc_sources().astype(np.int64)
+    dst = g.indices.astype(np.int64)
+    fwd = np.lexsort((dst, src))
+    bwd = np.lexsort((src, dst))
+    assert np.array_equal(src[fwd], dst[bwd])
+    assert np.array_equal(dst[fwd], src[bwd])
+    np.testing.assert_allclose(g.ew[fwd], g.ew[bwd], rtol=1e-5)

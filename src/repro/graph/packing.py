@@ -1,0 +1,323 @@
+"""Host-side packing: static-shape layouts consumed by the jitted LP engine.
+
+XLA requires static shapes, so all ragged-CSR → fixed-shape conversion
+happens here (numpy, once per multilevel level):
+
+* :func:`pack_chunks` — groups nodes (in a given traversal order) into
+  fixed-size *chunks* with bounded node and edge counts.  The label
+  propagation sweep is a ``lax.fori_loop`` over chunks: synchronous within a
+  chunk, sequential across chunks.  chunk=1 node reproduces the paper's
+  sequential sweep; one big chunk is fully synchronous LP.
+* :func:`ell_pack` — ELL layout with *row splitting* (a node of degree d
+  occupies ``ceil(d / width)`` rows) for the Pallas ``lp_score`` kernel.
+  Row splitting bounds the padding blow-up on power-law graphs.
+* :func:`shard_graph` — the paper's distributed graph structure (§IV-A):
+  contiguous node ranges per PE, local+ghost index spaces, interface-node
+  send buffers, owner/slot maps for the bulk-synchronous label exchange.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .csr import GraphNP
+
+__all__ = ["ChunkPack", "EllPack", "ShardedGraph", "pack_chunks", "ell_pack", "shard_graph"]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclass(frozen=True)
+class ChunkPack:
+    """Fixed-shape chunked traversal layout (all numpy, ready for jnp.asarray).
+
+    Shapes: C = number of chunks, N = max nodes/chunk, E = max arcs/chunk.
+    Sentinel for padded node slots is ``n`` (the graph order); padded edges
+    carry ``valid == False`` and weight 0.
+    """
+
+    nodes: np.ndarray        # (C, N) int32, node ids, padded with n
+    node_valid: np.ndarray   # (C, N) bool
+    edge_dst: np.ndarray     # (C, E) int32, arc heads, padded with n
+    edge_w: np.ndarray       # (C, E) float32, padded with 0
+    edge_src_slot: np.ndarray  # (C, E) int32 in [0, N)
+    edge_valid: np.ndarray   # (C, E) bool
+    n: int
+
+    @property
+    def num_chunks(self) -> int:
+        return self.nodes.shape[0]
+
+
+def pack_chunks(
+    g: GraphNP,
+    order: np.ndarray,
+    max_nodes: int = 4096,
+    max_edges: int = 32768,
+    block: int = 32,
+) -> ChunkPack:
+    """Greedy-pack nodes (taken in ``order``) into chunks.
+
+    Greedy runs over mini-blocks of ``block`` consecutive nodes so the host
+    loop is O(n / block).  ``max_edges`` is automatically raised to the
+    maximum block degree sum so no node's adjacency is ever split across
+    chunks (a split would corrupt the move decision).
+    """
+    n = g.n
+    order = np.asarray(order, dtype=np.int64)
+    deg = g.degrees().astype(np.int64)[order]
+    nb = _round_up(n, block) // block
+    pad_n = nb * block - n
+    deg_b = np.concatenate([deg, np.zeros(pad_n, np.int64)]).reshape(nb, block)
+    bdeg = deg_b.sum(axis=1)
+    max_edges = max(max_edges, int(bdeg.max(initial=0)))
+    max_nodes = max(block, min(max_nodes, n if n > 0 else block))
+
+    # greedy over blocks
+    chunk_of_block = np.zeros(nb, dtype=np.int64)
+    cur, ce, cn = 0, 0, 0
+    for i in range(nb):
+        if (ce + bdeg[i] > max_edges or cn + block > max_nodes) and (ce > 0 or cn > 0):
+            cur += 1
+            ce, cn = 0, 0
+        chunk_of_block[i] = cur
+        ce += int(bdeg[i])
+        cn += block
+    C = cur + 1
+
+    node_chunk = np.repeat(chunk_of_block, block)[:n]  # per ordered node
+    N = int(np.bincount(node_chunk, minlength=C).max())
+    N = _round_up(N, 8)
+    # edge counts per chunk
+    edeg = g.degrees().astype(np.int64)[order]
+    E = int(np.bincount(node_chunk, weights=edeg, minlength=C).max())
+    E = max(8, _round_up(E, 8))
+
+    nodes = np.full((C, N), n, dtype=np.int32)
+    node_valid = np.zeros((C, N), dtype=bool)
+    edge_dst = np.full((C, E), n, dtype=np.int32)
+    edge_w = np.zeros((C, E), dtype=np.float32)
+    edge_src_slot = np.zeros((C, E), dtype=np.int32)
+    edge_valid = np.zeros((C, E), dtype=bool)
+
+    # slot of each ordered node within its chunk
+    slot = np.zeros(n, dtype=np.int64)
+    fill_n = np.zeros(C, dtype=np.int64)
+    fill_e = np.zeros(C, dtype=np.int64)
+    # vectorized cumulative counts per chunk
+    for c in range(C):
+        sel = np.flatnonzero(node_chunk == c)
+        ids = order[sel]
+        cnt = sel.shape[0]
+        nodes[c, :cnt] = ids
+        node_valid[c, :cnt] = True
+        slot[sel] = np.arange(cnt)
+        fill_n[c] = cnt
+        # edges
+        ptr = 0
+        starts = g.indptr[ids]
+        ends = g.indptr[ids + 1]
+        lens = (ends - starts).astype(np.int64)
+        tot = int(lens.sum())
+        if tot:
+            # gather adjacency of all chunk nodes
+            idx = np.concatenate([np.arange(s, e) for s, e in zip(starts, ends)])
+            edge_dst[c, :tot] = g.indices[idx]
+            edge_w[c, :tot] = g.ew[idx]
+            edge_src_slot[c, :tot] = np.repeat(np.arange(cnt), lens)
+            edge_valid[c, :tot] = True
+            ptr = tot
+        fill_e[c] = ptr
+
+    return ChunkPack(
+        nodes=nodes,
+        node_valid=node_valid,
+        edge_dst=edge_dst,
+        edge_w=edge_w,
+        edge_src_slot=edge_src_slot,
+        edge_valid=edge_valid,
+        n=n,
+    )
+
+
+@dataclass(frozen=True)
+class EllPack:
+    """Row-split ELL layout for the Pallas ``lp_score`` kernel.
+
+    R rows of fixed ``width``; node of degree d owns ceil(d/width)
+    consecutive rows.  R is padded to a multiple of the kernel's node tile.
+    """
+
+    dst: np.ndarray       # (R, width) int32, padded with n
+    w: np.ndarray         # (R, width) float32, padded 0
+    row_node: np.ndarray  # (R,) int32, owning node, padded with n
+    n: int
+
+    @property
+    def rows(self) -> int:
+        return self.row_node.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.dst.shape[1]
+
+
+def ell_pack(g: GraphNP, width: int = 128, tile_rows: int = 256) -> EllPack:
+    n = g.n
+    deg = g.degrees().astype(np.int64)
+    nrows = np.maximum(1, (deg + width - 1) // width)
+    R = int(nrows.sum())
+    Rp = _round_up(max(R, 1), tile_rows)
+
+    row_node = np.full(Rp, n, dtype=np.int32)
+    row_node[:R] = np.repeat(np.arange(n, dtype=np.int32), nrows)
+    # per-row start offset inside the owning node's adjacency
+    row_first = np.zeros(R, dtype=np.int64)
+    starts = np.cumsum(np.concatenate([[0], nrows]))[:-1]  # first row of node
+    within = np.arange(R, dtype=np.int64) - np.repeat(starts, nrows)
+    row_first = np.repeat(g.indptr[:-1].astype(np.int64), nrows) + within * width
+    row_end = np.repeat(g.indptr[1:].astype(np.int64), nrows)
+
+    pos = row_first[:, None] + np.arange(width, dtype=np.int64)[None, :]
+    valid = pos < row_end[:, None]
+    pos_c = np.minimum(pos, max(g.m - 1, 0))
+    dst = np.full((Rp, width), n, dtype=np.int32)
+    w = np.zeros((Rp, width), dtype=np.float32)
+    if g.m:
+        dst[:R] = np.where(valid, g.indices[pos_c], n)
+        w[:R] = np.where(valid, g.ew[pos_c], 0.0)
+    return EllPack(dst=dst, w=w, row_node=row_node, n=n)
+
+
+@dataclass(frozen=True)
+class ShardedGraph:
+    """The paper's distributed graph (§IV-A) in stacked, padded numpy arrays.
+
+    All arrays have a leading PE axis of size P and are padded to the
+    per-field maxima across PEs, so they can be fed straight into
+    ``shard_map``.  Local index space per PE p: ``[0, n_p)`` are the owned
+    nodes (globals ``range_start[p] .. range_start[p] + n_p``), and
+    ``[n_p, n_p + g_p)`` are ghosts (sorted by global id).
+    """
+
+    P: int
+    n: int                       # global node count
+    range_start: np.ndarray      # (P,) int64 — first owned global id
+    n_local: np.ndarray          # (P,) int32 — owned nodes per PE
+    n_ghost: np.ndarray          # (P,) int32 — ghosts per PE
+    n_iface: np.ndarray          # (P,) int32 — interface nodes per PE
+    m_local: np.ndarray          # (P,) int32 — arcs per PE
+    indptr: np.ndarray           # (P, maxN + 1) int64 (local CSR, padded flat)
+    indices: np.ndarray          # (P, maxM) int32 — heads in LOCAL-EXT space
+    ew: np.ndarray               # (P, maxM) float32
+    nw: np.ndarray               # (P, maxN) float32 — owned node weights
+    ghost_global: np.ndarray     # (P, maxG) int64 — global id of each ghost
+    ghost_owner: np.ndarray      # (P, maxG) int32 — owning PE
+    ghost_slot: np.ndarray       # (P, maxG) int32 — slot in owner's iface buffer
+    ghost_nw: np.ndarray         # (P, maxG) float32 — ghost node weights
+    iface_nodes: np.ndarray      # (P, maxI) int32 — local ids of interface nodes
+
+    @property
+    def max_local(self) -> int:
+        return self.nw.shape[1]
+
+    @property
+    def max_ghost(self) -> int:
+        return self.ghost_global.shape[1]
+
+    @property
+    def max_iface(self) -> int:
+        return self.iface_nodes.shape[1]
+
+
+def shard_graph(g: GraphNP, P: int) -> ShardedGraph:
+    """Split ``g`` into P contiguous node-range shards with ghost/iface maps."""
+    n = g.n
+    per = (n + P - 1) // P
+    range_start = np.minimum(np.arange(P, dtype=np.int64) * per, n)
+    range_end = np.minimum(range_start + per, n)
+    src_all = g.arc_sources().astype(np.int64)
+    owner_of = lambda ids: np.minimum(ids // per, P - 1)
+
+    locals_per_pe = []
+    for p in range(P):
+        a, b = int(range_start[p]), int(range_end[p])
+        n_p = b - a
+        lo, hi = int(g.indptr[a]), int(g.indptr[b])
+        dst = g.indices[lo:hi].astype(np.int64)
+        is_ghost = (dst < a) | (dst >= b)
+        ghosts = np.unique(dst[is_ghost])
+        g_p = ghosts.shape[0]
+        # remap heads to local-ext space
+        heads = np.where(is_ghost, n_p + np.searchsorted(ghosts, dst), dst - a)
+        indptr_local = (g.indptr[a : b + 1] - lo).astype(np.int64)
+        # interface nodes: owned nodes with >= 1 ghost neighbour
+        deg = np.diff(indptr_local)
+        owns_ghost = np.zeros(n_p, dtype=bool)
+        if hi > lo:
+            src_local = np.repeat(np.arange(n_p), deg)
+            np.logical_or.at(owns_ghost, src_local[is_ghost], True)
+        iface = np.flatnonzero(owns_ghost).astype(np.int32)
+        locals_per_pe.append(
+            dict(
+                a=a,
+                n_p=n_p,
+                m_p=hi - lo,
+                indptr=indptr_local,
+                heads=heads.astype(np.int32),
+                ew=g.ew[lo:hi],
+                nw=g.nw[a:b],
+                ghosts=ghosts,
+                iface=iface,
+            )
+        )
+
+    maxN = max(1, _round_up(max(d["n_p"] for d in locals_per_pe), 8))
+    maxM = max(8, _round_up(max(d["m_p"] for d in locals_per_pe), 8))
+    maxG = max(8, _round_up(max(d["ghosts"].shape[0] for d in locals_per_pe), 8))
+    maxI = max(8, _round_up(max(d["iface"].shape[0] for d in locals_per_pe), 8))
+
+    # slot of every owned node in its PE's interface buffer (for ghost_slot)
+    iface_slot_of_global = np.full(n, -1, dtype=np.int64)
+    for p, d in enumerate(locals_per_pe):
+        iface_slot_of_global[d["a"] + d["iface"]] = np.arange(d["iface"].shape[0])
+
+    Z = lambda shape, dt, fill=0: np.full(shape, fill, dtype=dt)
+    out = ShardedGraph(
+        P=P,
+        n=n,
+        range_start=range_start,
+        n_local=np.array([d["n_p"] for d in locals_per_pe], np.int32),
+        n_ghost=np.array([d["ghosts"].shape[0] for d in locals_per_pe], np.int32),
+        n_iface=np.array([d["iface"].shape[0] for d in locals_per_pe], np.int32),
+        m_local=np.array([d["m_p"] for d in locals_per_pe], np.int32),
+        indptr=Z((P, maxN + 1), np.int64),
+        indices=Z((P, maxM), np.int32, fill=0),
+        ew=Z((P, maxM), np.float32),
+        nw=Z((P, maxN), np.float32),
+        ghost_global=Z((P, maxG), np.int64, fill=-1),
+        ghost_owner=Z((P, maxG), np.int32),
+        ghost_slot=Z((P, maxG), np.int32),
+        ghost_nw=Z((P, maxG), np.float32),
+        iface_nodes=Z((P, maxI), np.int32),
+    )
+    for p, d in enumerate(locals_per_pe):
+        n_p, m_p = d["n_p"], d["m_p"]
+        out.indptr[p, : n_p + 1] = d["indptr"]
+        out.indptr[p, n_p + 1 :] = d["indptr"][-1]
+        out.indices[p, :m_p] = d["heads"]
+        out.ew[p, :m_p] = d["ew"]
+        out.nw[p, :n_p] = d["nw"]
+        gs = d["ghosts"]
+        out.ghost_global[p, : gs.shape[0]] = gs
+        out.ghost_owner[p, : gs.shape[0]] = owner_of(gs)
+        out.ghost_slot[p, : gs.shape[0]] = iface_slot_of_global[gs]
+        out.ghost_nw[p, : gs.shape[0]] = g.nw[gs]
+        out.iface_nodes[p, : d["iface"].shape[0]] = d["iface"]
+    # every ghost must be an interface node of its owner
+    assert np.all(out.ghost_slot[out.ghost_global >= 0] >= 0)
+    return out

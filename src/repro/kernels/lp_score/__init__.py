@@ -1,0 +1,12 @@
+from .lp_score import lp_score_rows
+from .ops import lp_refine_dense_round, node_scores, pad_k
+from .ref import lp_score_rows_ref, node_scores_ref
+
+__all__ = [
+    "lp_score_rows",
+    "lp_score_rows_ref",
+    "node_scores",
+    "node_scores_ref",
+    "lp_refine_dense_round",
+    "pad_k",
+]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the lp_score kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lp_score_rows_ref", "node_scores_ref"]
+
+
+def lp_score_rows_ref(lbl: jnp.ndarray, w: jnp.ndarray, *, k_pad: int) -> jnp.ndarray:
+    """(R, W) labels/weights -> (R, k_pad) scores; labels >= k_pad contribute 0."""
+    onehot = (lbl[:, :, None] == jnp.arange(k_pad)[None, None, :]).astype(jnp.float32)
+    return jnp.sum(onehot * w[:, :, None], axis=1)
+
+
+def node_scores_ref(
+    g_indptr, g_indices, g_ew, labels, k: int
+) -> jnp.ndarray:
+    """Direct CSR oracle: S[v, b] = sum of w(v,u) for u in Gamma(v) with label b."""
+    n = g_indptr.shape[0] - 1
+    m = g_indices.shape[0]
+    src = jnp.repeat(
+        jnp.arange(n, dtype=jnp.int32), g_indptr[1:] - g_indptr[:-1],
+        total_repeat_length=m,
+    )
+    out = jnp.zeros((n, k), jnp.float32)
+    return out.at[src, labels[g_indices]].add(g_ew)

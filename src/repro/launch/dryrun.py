@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and extract roofline terms.
+
+MUST keep the two lines above first — jax locks the device count on first
+initialization, and the production meshes need 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --driver            # all cells, subprocesses
+  python -m repro.launch.dryrun --driver --mesh multi
+Results accumulate as JSON under results/dryrun/.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+VARIANTS = {
+    # name -> env toggles applied before model import (see layers.py)
+    "base": {"REPRO_CACHE_UPDATE": "dus", "REPRO_ATTN_DTYPE": "f32",
+             "REPRO_SSD_DTYPE": "f32"},
+    "where_update": {"REPRO_CACHE_UPDATE": "where", "REPRO_ATTN_DTYPE": "f32"},
+    "attn_bf16": {"REPRO_CACHE_UPDATE": "where", "REPRO_ATTN_DTYPE": "bf16"},
+    "opt": {"REPRO_CACHE_UPDATE": "where", "REPRO_ATTN_DTYPE": "bf16",
+            "REPRO_SSD_DTYPE": "bf16"},
+    "ssd_q128": {"REPRO_SSD_DTYPE": "bf16", "REPRO_SSD_CHUNK": "128"},
+    "ssd_q64": {"REPRO_SSD_DTYPE": "bf16", "REPRO_SSD_CHUNK": "64"},
+    "ssd_bf16": {"REPRO_SSD_DTYPE": "bf16"},
+}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             variant: str = "base") -> dict:
+    for k, v in VARIANTS.get(variant, {}).items():
+        os.environ[k] = v
+    import gzip
+
+    import jax
+
+    from ..configs import SHAPES, get_config
+    from .hlo_analysis import analyze_hlo
+    from .mesh import make_production_mesh
+    from .roofline import param_counts, roofline
+    from .steps import compile_decode, compile_prefill, compile_train_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = compile_train_step(cfg, mesh, shape, multi_pod=multi_pod)
+    elif shape.kind == "prefill":
+        lowered = compile_prefill(cfg, mesh, shape, multi_pod=multi_pod)
+    else:
+        lowered = compile_decode(cfg, mesh, shape, multi_pod=multi_pod)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    hlo_path = cell_path(out_dir, arch, shape_name, mesh_kind, variant).replace(
+        ".json", ".hlo.txt.gz")
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(txt)
+    # trip-count-aware analysis (cost_analysis counts loop bodies once)
+    hc = analyze_hlo(txt)
+    rl = roofline(hc, n_chips, cfg, shape)
+    rl["xla_cost_analysis_flops"] = float(cost.get("flops", 0.0))
+    rl["xla_cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
+    rl["unknown_trip_loops"] = hc.unknown_trip_loops
+    pc = param_counts(cfg)
+
+    bytes_per_dev = None
+    if mem is not None:
+        bytes_per_dev = int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+        )
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "kind": shape.kind,
+        "n_chips": n_chips,
+        "status": "ok",
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "bytes_per_device": bytes_per_dev,
+        "gib_per_device": round(bytes_per_dev / 2**30, 3) if bytes_per_dev else None,
+        "params_total": pc["total"],
+        "params_active": pc["active"],
+        "roofline": rl,
+    }
+    return rec
+
+
+def cell_path(out_dir, arch, shape, mesh_kind, variant="base"):
+    safe = arch.replace("/", "_").replace(".", "_")
+    return os.path.join(out_dir, f"{safe}__{shape}__{mesh_kind}__{variant}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--driver", action="store_true",
+                    help="run every cell in a fresh subprocess")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.driver:
+        from ..configs import cells
+
+        todo = []
+        for aid, sname, skip in cells():
+            for mesh_kind in ("single", "multi"):
+                p = cell_path(args.out, aid, sname, mesh_kind)
+                if skip:
+                    with open(p, "w") as f:
+                        json.dump({"arch": aid, "shape": sname, "mesh": mesh_kind,
+                                   "status": "skip", "reason": skip}, f, indent=1)
+                    continue
+                if os.path.exists(p) and not args.force:
+                    continue
+                todo.append((aid, sname, mesh_kind, p))
+        print(f"[driver] {len(todo)} cells to run")
+        for i, (aid, sname, mesh_kind, p) in enumerate(todo):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", aid, "--shape", sname, "--mesh", mesh_kind,
+                   "--out", args.out]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            ok = os.path.exists(p)
+            print(f"[driver {i+1}/{len(todo)}] {aid} x {sname} x {mesh_kind}: "
+                  f"{'ok' if ok and r.returncode == 0 else 'FAIL'} "
+                  f"({time.time()-t0:.0f}s)")
+            if r.returncode != 0:
+                err = {"arch": aid, "shape": sname, "mesh": mesh_kind,
+                       "status": "error",
+                       "error": r.stderr[-4000:]}
+                with open(p, "w") as f:
+                    json.dump(err, f, indent=1)
+        return
+
+    p = cell_path(args.out, args.arch, args.shape, args.mesh, args.variant)
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.out, args.variant)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "variant": args.variant, "status": "error",
+               "error": traceback.format_exc()[-4000:]}
+        with open(p, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "status")}))
+        sys.exit(1)
+    with open(p, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

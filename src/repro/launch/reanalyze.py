@@ -1,0 +1,48 @@
+"""Re-derive roofline terms for every stored dry-run cell from its saved
+HLO text (no recompilation)."""
+
+import glob
+import gzip
+import json
+import sys
+
+from ..configs import SHAPES, get_config
+from .hlo_analysis import analyze_hlo
+from .roofline import HW, roofline
+
+
+def main(out_dir="results/dryrun"):
+    for jf in sorted(glob.glob(f"{out_dir}/*.json")):
+        d = json.load(open(jf))
+        if d.get("status") != "ok":
+            continue
+        hf = jf.replace(".json", ".hlo.txt.gz")
+        try:
+            txt = gzip.open(hf, "rt").read()
+        except FileNotFoundError:
+            continue
+        hc = analyze_hlo(txt)
+        if d["arch"] == "paper-sclap":
+            terms = {
+                "compute_s": hc.flops / HW["peak_flops"],
+                "memory_s": hc.hbm_bytes / HW["hbm_bw"],
+                "collective_s": hc.collective_total / HW["link_bw"],
+            }
+            d["roofline"].update(terms)
+            d["roofline"]["dominant"] = max(terms, key=terms.get)
+            d["roofline"]["hlo_bytes_per_dev"] = hc.hbm_bytes
+        else:
+            cfg = get_config(d["arch"])
+            shape = SHAPES[d["shape"]]
+            old = d["roofline"]
+            rl = roofline(hc, d["n_chips"], cfg, shape)
+            rl["xla_cost_analysis_flops"] = old.get("xla_cost_analysis_flops")
+            rl["xla_cost_analysis_bytes"] = old.get("xla_cost_analysis_bytes")
+            rl["unknown_trip_loops"] = hc.unknown_trip_loops
+            d["roofline"] = rl
+        json.dump(d, open(jf, "w"), indent=1)
+        print(jf.split("/")[-1], "mem=%.3g" % d["roofline"]["memory_s"])
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

@@ -1,0 +1,153 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs_per_device / 197e12            [s]
+  memory term     = HLO_bytes_per_device / 819e9             [s]
+  collective term = collective_bytes_per_device / 50e9       [s]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the partitioned,
+per-device module).  collective_bytes is NOT in cost_analysis: we parse the
+compiled HLO text and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (ragged
+variants included).  This counts payload entering each collective once per
+device — a ring-transfer lower bound (actual wire bytes for a ring
+all-reduce are ~2x operand).
+
+MODEL_FLOPS uses the 6·N·D convention (6·N_active·D for MoE; attention
+flops excluded), so MODEL_FLOPS / HLO_FLOPs is the "useful compute"
+fraction — remat recompute, dense-MoE waste and padding all push it down.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes", "roofline", "model_flops", "param_counts"]
+
+HW = {
+    "peak_flops": 197e12,   # bf16 / chip
+    "hbm_bw": 819e9,        # B/s / chip
+    "link_bw": 50e9,        # B/s / link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^(]*\((?P<args>.*)$"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device operand bytes entering each collective kind."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        args = m.group("args")
+        # operand shapes appear inline in the arg list: sum them
+        total = 0
+        for sm in _SHAPE_RE.finditer(args.split("channel_id")[0]):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        if total == 0:
+            # fallback: result shape on the lhs
+            lhs = line.split("=")[0] + "=" + line.split("=", 1)[1]
+            for sm in _SHAPE_RE.finditer(line.split(" " + kind)[0]):
+                total += _shape_bytes(sm.group(1), sm.group(2))
+        out[kind] = out.get(kind, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def param_counts(cfg) -> Dict[str, float]:
+    """(total params, active params) from the config analytically."""
+    D, V = cfg.d_model, cfg.vocab
+    n_total = 0.0
+    n_active = 0.0
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    n_total += emb
+    n_active += emb
+    for mix, ffnk in cfg.layer_plan():
+        if mix in ("attn", "attn_local"):
+            h = cfg.n_heads * cfg.d_head
+            kvh = cfg.n_kv_heads * cfg.d_head
+            a = D * h + 2 * D * kvh + h * D
+            n_total += a
+            n_active += a
+        else:
+            s = cfg.ssm
+            d_in = s.expand * D
+            H = d_in // s.headdim
+            a = 2 * D * d_in + 2 * D * s.d_state + D * H + d_in * D
+            n_total += a
+            n_active += a
+        if ffnk == "dense":
+            f = D * cfg.d_ff * (3 if cfg.glu else 2)
+            n_total += f
+            n_active += f
+        elif ffnk == "moe":
+            per = D * cfg.moe.d_ff * (3 if cfg.glu else 2)
+            n_total += per * cfg.moe.n_experts + D * cfg.moe.n_experts
+            n_active += per * cfg.moe.topk + D * cfg.moe.n_experts
+    return {"total": n_total, "active": n_active}
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS for this cell (6ND train / 2ND inference)."""
+    pc = param_counts(cfg)
+    n_act = pc["active"]
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.batch * shape.seq
+    return 2.0 * n_act * shape.batch  # decode: one token per sequence
+
+
+def roofline(hc, n_chips: int, cfg, shape) -> dict:
+    """hc: launch.hlo_analysis.HloCosts (trip-count-aware, per device)."""
+    flops_dev = float(hc.flops)
+    bytes_dev = float(hc.hbm_bytes)
+    coll_dev = float(hc.collective_total)
+    t_comp = flops_dev / HW["peak_flops"]
+    t_mem = bytes_dev / HW["hbm_bw"]
+    t_coll = coll_dev / HW["link_bw"]
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / n_chips
+    t_bound = max(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll_dev,
+        "collectives": dict(hc.collective_bytes),
+        "model_flops_global": mf,
+        "useful_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        # fraction of the compute roofline achieved if the step ran at the
+        # bound of its dominant term (the score we hillclimb):
+        "roofline_fraction": (mf_dev / HW["peak_flops"]) / t_bound if t_bound else 0.0,
+    }

@@ -1,0 +1,251 @@
+"""AOT-compilable train / prefill / decode steps with explicit shardings.
+
+These builders are shared by the real drivers (train.py, serve.py) and the
+multi-pod dry-run (dryrun.py): the dry-run lowers exactly the functions the
+drivers execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, Shape
+from ..models.model import (
+    decode_step as _decode,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill as _prefill,
+)
+from ..models.sharding import DP, TP, act_specs, param_pspecs
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.compression import compress_decompress
+
+__all__ = [
+    "input_specs",
+    "state_specs",
+    "norm_spec",
+    "make_train_step",
+    "make_prefill",
+    "make_decode_step",
+    "abstract_params",
+    "abstract_opt",
+]
+
+
+def norm_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on axes that don't divide the dimension."""
+    parts = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            parts.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        parts.append(ax if shape[i] % size == 0 else None)
+    parts += [None] * (len(shape) - len(parts))
+    return P(*parts)
+
+
+def _shardings(tree, specs, mesh):
+    return jax.tree.map(
+        lambda leaf, spec: NamedSharding(mesh, norm_spec(spec, leaf.shape, mesh)),
+        tree, specs,
+    )
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def abstract_opt(aparams):
+    return jax.eval_shape(adamw_init, aparams)
+
+
+def input_specs(cfg: ArchConfig, shape: Shape):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.n_prefix:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), jnp.float32
+            )
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.n_prefix:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), jnp.float32
+            )
+        return out
+    # decode: one new token against an S-length cache
+    caches = jax.eval_shape(lambda: init_caches(cfg, B, S))
+    return {
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_specs(cfg: ArchConfig, mesh: Mesh, multi_pod: bool):
+    """(abstract params, abstract opt, param shardings, opt shardings)."""
+    ap = abstract_params(cfg)
+    specs = param_pspecs(ap, multi_pod)
+    psh = _shardings(ap, specs, mesh)
+    ao = abstract_opt(ap)
+    osh = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=psh, nu=psh, master=psh,
+    )
+    return ap, ao, psh, osh
+
+
+def _batch_shardings(cfg, shape, mesh, multi_pod):
+    dp = DP(multi_pod)
+    dp = dp if len(dp) > 1 else dp[0]
+    ins = input_specs(cfg, shape)
+    out = {}
+    for k, v in ins.items():
+        if k == "tokens":
+            out[k] = NamedSharding(mesh, norm_spec(P(dp, None), v.shape, mesh))
+        elif k == "prefix_embeds":
+            out[k] = NamedSharding(mesh, norm_spec(P(dp, None, None), v.shape, mesh))
+        elif k == "token":
+            out[k] = NamedSharding(mesh, norm_spec(P(dp), v.shape, mesh))
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        elif k == "caches":
+            def cache_shard(path, leaf):
+                # leaf names: k/v (B,S,kv,dh), h (B,H,P,N), conv (B,W,d_in);
+                # scan-stacked variants carry a leading (n_units,) axis
+                name = [getattr(q, "key", None) for q in path][-1]
+                stacked = leaf.ndim in (4, 5) and name in ("k", "v") and leaf.ndim == 5
+                stacked = stacked or (name in ("h",) and leaf.ndim == 5) or (
+                    name == "conv" and leaf.ndim == 4)
+                if name in ("k", "v"):
+                    base = P(dp, TP, None, None)      # seq over TP
+                elif name == "h":
+                    base = P(dp, TP, None, None)      # SSM heads over TP
+                elif name == "conv":
+                    base = P(dp, None, TP)            # d_inner over TP
+                else:
+                    base = P(*([None] * (leaf.ndim,)))
+                if stacked:
+                    base = P(None, *base)
+                return NamedSharding(mesh, norm_spec(base, leaf.shape, mesh))
+            out[k] = jax.tree_util.tree_map_with_path(cache_shard, v)
+    return out
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    *,
+    multi_pod: bool = False,
+    lr: float = 3e-4,
+    remat: bool = True,
+    compress_grads: bool = False,
+    donate: bool = True,
+):
+    """Returns (jitted train_step, batch shardings, param/opt shardings)."""
+    ap, ao, psh, osh = state_specs(cfg, mesh, multi_pod)
+
+    def train_step(params, opt, batch):
+        if compress_grads:
+            opt, residuals = opt
+
+        def lf(p):
+            return loss_fn(cfg, p, batch, mesh=mesh, multi_pod=multi_pod, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if compress_grads:
+            # int8 error-feedback compression on the DP-axis reduction
+            grads, residuals = compress_decompress(grads, residuals)
+        new_params, new_opt, gnorm = adamw_update(grads, opt, params, lr=lr)
+        if compress_grads:
+            new_opt = (new_opt, residuals)
+        return new_params, new_opt, {
+            "loss": loss, "ce": metrics["ce"], "gnorm": gnorm,
+        }
+
+    if compress_grads:
+        osh = (osh, psh)
+    return train_step, psh, osh
+
+
+def compile_train_step(cfg, mesh, shape, *, multi_pod=False, lr=3e-4, remat=True):
+    """AOT lower+compile the train step for the dry-run."""
+    ap, ao, psh, osh = state_specs(cfg, mesh, multi_pod)
+    bsh = _batch_shardings(cfg, shape, mesh, multi_pod)
+    fn, _, _ = make_train_step(cfg, mesh, multi_pod=multi_pod, lr=lr, remat=remat)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, None),
+        donate_argnums=(0, 1),
+    )
+    lowered = jitted.lower(ap, ao, input_specs(cfg, shape))
+    return lowered
+
+
+def compile_prefill(cfg, mesh, shape, *, multi_pod=False):
+    ap, _, psh, _ = state_specs(cfg, mesh, multi_pod)
+    bsh = _batch_shardings(cfg, shape, mesh, multi_pod)
+    ins = input_specs(cfg, shape)
+
+    def prefill_step(params, batch):
+        return _prefill(
+            cfg, params, batch["tokens"], mesh=mesh, multi_pod=multi_pod,
+            prefix_embeds=batch.get("prefix_embeds"),
+        )
+
+    jitted = jax.jit(prefill_step, in_shardings=(psh, bsh))
+    return jitted.lower(ap, ins)
+
+
+def compile_decode(cfg, mesh, shape, *, multi_pod=False):
+    ap, _, psh, _ = state_specs(cfg, mesh, multi_pod)
+    bsh = _batch_shardings(cfg, shape, mesh, multi_pod)
+    ins = input_specs(cfg, shape)
+
+    def serve_step(params, token, caches, pos):
+        return _decode(cfg, params, token, caches, pos, mesh=mesh,
+                       multi_pod=multi_pod)
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(psh, bsh["token"], bsh["caches"], bsh["pos"]),
+        out_shardings=(None, bsh["caches"]),
+        donate_argnums=(2,),
+    )
+    return jitted.lower(ap, ins["token"], ins["caches"], ins["pos"])
+
+
+def make_prefill(cfg, mesh, *, multi_pod=False):
+    _, _, psh, _ = state_specs(cfg, mesh, multi_pod)
+
+    def prefill_step(params, batch):
+        return _prefill(cfg, params, batch["tokens"], mesh=mesh,
+                        multi_pod=multi_pod,
+                        prefix_embeds=batch.get("prefix_embeds"))
+
+    return jax.jit(prefill_step, in_shardings=(psh, None))
+
+
+def make_decode_step(cfg, mesh, *, multi_pod=False):
+    _, _, psh, _ = state_specs(cfg, mesh, multi_pod)
+
+    def serve_step(params, token, caches, pos):
+        return _decode(cfg, params, token, caches, pos, mesh=mesh,
+                       multi_pod=multi_pod)
+
+    return jax.jit(serve_step, in_shardings=(psh, None, None, None),
+                   donate_argnums=(2,))

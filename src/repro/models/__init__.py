@@ -1,0 +1,5 @@
+from .model import decode_step, forward, init_caches, init_params, loss_fn, prefill
+from .sharding import DP, TP, act_specs, param_pspecs
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_caches", "param_pspecs", "act_specs", "DP", "TP"]

@@ -1,0 +1,241 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full /
+sliding-window / decode-with-cache), dense FFN (GLU or plain).
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Attention
+is *query-chunked* (lax.scan over query blocks) so the (S, S) score matrix
+is never materialized — the pure-XLA stand-in for a flash kernel that keeps
+32k-token prefill inside HBM and lets remat recompute cheaply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---- perf-variant toggles (see EXPERIMENTS.md §Perf) ----------------------
+# KV-cache update strategy for decode:
+#   "where" (default): elementwise predicated write — partitions cleanly
+#       along a sequence-sharded cache (GSPMD keeps every shard local);
+#   "dus": dynamic-update-slice — the textbook formulation, but GSPMD
+#       re-gathers a sequence-sharded cache around it (baseline variant).
+_CACHE_UPDATE = os.environ.get("REPRO_CACHE_UPDATE", "where")
+# attention intermediate dtype: "f32" keeps K/V/P in fp32 through the
+# softmax pipeline; "bf16" keeps matmul operands bf16 (softmax stats in f32)
+_ATTN_DT = os.environ.get("REPRO_ATTN_DTYPE", "f32")
+
+__all__ = [
+    "rmsnorm",
+    "rope_table",
+    "apply_rope",
+    "attention",
+    "decode_attention",
+    "ffn",
+    "init_attn_params",
+    "init_ffn_params",
+]
+
+_NEG = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope_table(positions: jnp.ndarray, d_head: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin tables (..., d_head/2)."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., H, d_head); cos/sin broadcastable (..., 1, d_head/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _qkv(params, x, n_heads, n_kv, d_head):
+    B, S, D = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, n_heads, d_head)
+    k = k.reshape(B, S, n_kv, d_head)
+    v = v.reshape(B, S, n_kv, d_head)
+    return q, k, v
+
+
+def attention(
+    params: dict,
+    x: jnp.ndarray,                 # (B, S, D)
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float = 10_000.0,
+    window: Optional[int] = None,   # sliding-window width (None = global)
+    q_chunk: int = 1024,
+    positions: Optional[jnp.ndarray] = None,
+    return_cache: bool = False,
+):
+    """Causal self-attention (training / prefill). Query-chunked."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(params, x, n_heads, n_kv, d_head)
+    cos, sin = rope_table(positions, d_head, rope_theta)
+    q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+    rep = n_heads // n_kv
+    scale = d_head ** -0.5
+
+    qc = max(1, min(q_chunk, S))
+    n_chunks = (S + qc - 1) // qc
+    Sp = n_chunks * qc
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qs = q.reshape(B, n_chunks, qc, n_heads, d_head).transpose(1, 0, 2, 3, 4)
+
+    acc_dt = jnp.float32 if _ATTN_DT == "f32" else jnp.bfloat16
+    kT = k.astype(acc_dt)
+    vT = v.astype(acc_dt)
+
+    def chunk(carry, inp):
+        ci, qb = inp  # qb (B, qc, H, dh)
+        qpos = ci * qc + jnp.arange(qc)
+        kpos = jnp.arange(S)
+        mask = qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        # scores: (B, H, qc, S)
+        qg = qb.reshape(B, qc, n_kv, rep, d_head)
+        s = jnp.einsum("bqgrd,bsgd->bgrqs", qg.astype(acc_dt), kT).astype(
+            jnp.float32) * scale
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(acc_dt)
+        o = jnp.einsum("bgrqs,bsgd->bqgrd", p, vT).astype(jnp.float32)
+        return carry, o.reshape(B, qc, n_heads, d_head)
+
+    _, outs = jax.lax.scan(chunk, None, (jnp.arange(n_chunks), qs))
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, n_heads, d_head)[:, :S]
+    y = o.astype(x.dtype).reshape(B, S, n_heads * d_head) @ params["wo"]
+    if not return_cache:
+        return y, None
+    # serving cache: keep only the window for sliding-window layers
+    if window is not None and S >= window:
+        kc, vc = k[:, S - window :], v[:, S - window :]
+    else:
+        kc, vc = k, v
+    return y, {"k": kc, "v": vc}
+
+
+def decode_attention(
+    params: dict,
+    x: jnp.ndarray,                # (B, 1, D)
+    cache: dict,                   # {"k","v"}: (B, S_cache, n_kv, d_head)
+    pos: jnp.ndarray,              # () int32 — current position
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    rope_theta: float = 10_000.0,
+    window: Optional[int] = None,
+):
+    """Single-token decode with KV cache (ring buffer for windowed layers)."""
+    B = x.shape[0]
+    S_c = cache["k"].shape[1]
+    q, k, v = _qkv(params, x, n_heads, n_kv, d_head)
+    cos, sin = rope_table(pos[None], d_head, rope_theta)
+    q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+    slot = pos % S_c if window is not None else pos
+    if _CACHE_UPDATE == "where":
+        # predicated elementwise write: every shard of a sequence-sharded
+        # cache updates (or keeps) only its local slice — no re-gather
+        sel = (jnp.arange(S_c) == slot)[None, :, None, None]
+        ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    rep = n_heads // n_kv
+    scale = d_head ** -0.5
+    acc_dt = jnp.float32 if _ATTN_DT == "f32" else cache["k"].dtype
+    qg = q.reshape(B, n_kv, rep, d_head)
+    # contract against the cache in ITS dtype (an f32 upcast would
+    # materialize a full-cache-sized temp — 2x decode HBM traffic)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qg.astype(acc_dt), ck).astype(
+        jnp.float32) * scale
+    idx = jnp.arange(S_c)
+    if window is not None:
+        valid = (idx <= slot) | (pos >= S_c)  # ring buffer: all slots valid once full
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(acc_dt)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p, cv).astype(jnp.float32)
+    y = o.reshape(B, 1, n_heads * d_head).astype(x.dtype) @ params["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+
+
+def ffn(params: dict, x: jnp.ndarray, *, glu: bool = True, act: str = "silu") -> jnp.ndarray:
+    a = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+    if glu:
+        return (a(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    return a(x @ params["w_up"]) @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+
+def init_attn_params(key, d_model, n_heads, n_kv, d_head, qkv_bias, dtype):
+    ks = jax.random.split(key, 4)
+    sc = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d_model, n_heads * d_head), dtype) * sc,
+        "wk": jax.random.normal(ks[1], (d_model, n_kv * d_head), dtype) * sc,
+        "wv": jax.random.normal(ks[2], (d_model, n_kv * d_head), dtype) * sc,
+        "wo": jax.random.normal(ks[3], (n_heads * d_head, d_model), dtype) * sc,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv * d_head,), dtype)
+    return p
+
+
+def init_ffn_params(key, d_model, d_ff, glu, dtype):
+    ks = jax.random.split(key, 3)
+    si, so = d_model ** -0.5, d_ff ** -0.5
+    p = {
+        "w_up": jax.random.normal(ks[0], (d_model, d_ff), dtype) * si,
+        "w_down": jax.random.normal(ks[1], (d_ff, d_model), dtype) * so,
+    }
+    if glu:
+        p["w_gate"] = jax.random.normal(ks[2], (d_model, d_ff), dtype) * si
+    return p

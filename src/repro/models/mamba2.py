@@ -1,0 +1,226 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked scan formulation.
+
+The SSD recurrence per head h (state size N, head dim P):
+
+    h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t        a_t = exp(dt_t * A_h)
+    y_t = C_t . h_t + D_h * x_t
+
+computed chunk-parallel (arXiv:2405.21060): within a chunk of Q tokens the
+quadratic "attention-like" form runs on the MXU; across chunks a
+``lax.scan`` carries the (B, H, P, N) state.  Linear in sequence length —
+this is what makes the 524k-token decode/long-context shapes feasible for
+the ssm/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from .layers import rmsnorm
+from .sharding import wsc
+
+__all__ = ["init_mamba_params", "mamba_block", "mamba_decode", "init_mamba_cache"]
+
+
+def init_mamba_params(key, d_model, d_state, headdim, expand, conv_width, dtype):
+    d_inner = expand * d_model
+    H = d_inner // headdim
+    ks = jax.random.split(key, 8)
+    sc = d_model ** -0.5
+    return {
+        "wz": jax.random.normal(ks[0], (d_model, d_inner), dtype) * sc,
+        "wx": jax.random.normal(ks[1], (d_model, d_inner), dtype) * sc,
+        "wB": jax.random.normal(ks[2], (d_model, d_state), dtype) * sc,
+        "wC": jax.random.normal(ks[3], (d_model, d_state), dtype) * sc,
+        "wdt": jax.random.normal(ks[4], (d_model, H), dtype) * sc,
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_w": jax.random.normal(ks[5], (conv_width, d_inner), dtype) * 0.2,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "norm_w": jnp.zeros((d_inner,), jnp.float32),
+        "wo": jax.random.normal(ks[6], (d_inner, d_model), dtype) * (d_inner ** -0.5),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x (B,S,C), w (W,C) causal depthwise conv + bias."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(X, dt, A, Bm, Cm, h0, chunk: int, head_block: int = 8,
+                 mesh=None, dp=None, tp=None):
+    """X (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N), h0 (B,H,P,N).
+
+    One ``lax.scan`` over chunks carries the state; within a chunk the
+    quadratic term is computed per *head block* (``lax.map``) so the
+    (B,Q,Q,hb) working set stays bounded for 256-head models.
+    Returns (Y (B,S,H,P), h_final)."""
+    B, S0, H, Pd = X.shape
+    N = Bm.shape[-1]
+    # REPRO_SSD_CHUNK overrides the chunk length: the intra-chunk decay
+    # stream costs O(B*S*Q*H) bytes/flops while the inter-chunk state path
+    # is Q-independent, so smaller Q trades MXU tile size for bandwidth
+    Q = int(os.environ.get("REPRO_SSD_CHUNK", "0")) or chunk
+    Q = min(Q, S0)
+    nc = (S0 + Q - 1) // Q
+    S = nc * Q
+    if S != S0:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input leave the
+        # carried state untouched; padded outputs are sliced away below
+        pad = [(0, 0), (0, S - S0)]
+        X = jnp.pad(X, pad + [(0, 0), (0, 0)])
+        dt = jnp.pad(dt, pad + [(0, 0)])
+        Bm = jnp.pad(Bm, pad + [(0, 0)])
+        Cm = jnp.pad(Cm, pad + [(0, 0)])
+    hb = head_block
+    while H % hb:
+        hb //= 2
+    nh = H // hb
+    la = dt * A[None, None, :]                      # log a_t  (B,S,H), negative
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def to_chunks(x):                                # (B,S,...) -> (nc,B,Q,...)
+        return jnp.moveaxis(x.reshape(B, nc, Q, *x.shape[2:]), 1, 0)
+
+    # REPRO_SSD_DTYPE=bf16 keeps the big X/B/C streams in bf16 (halves the
+    # SSD working set); decay cumsums/exps and the carried state stay f32
+    ssd_dt = jnp.bfloat16 if os.environ.get("REPRO_SSD_DTYPE") == "bf16" \
+        else jnp.float32
+    Xc, dtc, lac = to_chunks(X.astype(ssd_dt)), to_chunks(dt), to_chunks(la)
+    Bc, Cc = to_chunks(Bm.astype(ssd_dt)), to_chunks(Cm.astype(ssd_dt))
+
+    def step(h, inp):
+        Xq, dtq, laq, Bq, Cq = inp                  # (B,Q,H,P),(B,Q,H),(B,Q,H),(B,Q,N)
+        # keep heads sharded over TP through the chunk scan
+        Xq = wsc(Xq, P(dp, None, tp, None), mesh)
+        h = wsc(h, P(dp, tp, None, None), mesh)
+        cs = jnp.cumsum(laq, axis=1)                # (B,Q,H) inclusive
+        seg = cs[:, -1, :]                          # (B,H)
+        CB = jnp.einsum("bqn,bsn->bqs", Cq, Bq).astype(jnp.float32)  # MXU
+        # intra-chunk, head-blocked
+        cs_h = jnp.moveaxis(cs.reshape(B, Q, nh, hb), 2, 0)       # (nh,B,Q,hb)
+        dt_h = jnp.moveaxis(dtq.reshape(B, Q, nh, hb), 2, 0)
+        X_h = jnp.moveaxis(Xq.reshape(B, Q, nh, hb, Pd), 2, 0)    # (nh,B,Q,hb,P)
+
+        def hblk(args):
+            csb, dtb, Xb = args
+            M = jnp.exp(csb[:, :, None, :] - csb[:, None, :, :])
+            M = jnp.where(tri[None, :, :, None], M, 0.0)          # (B,Q,Q,hb)
+            sc = (CB[:, :, :, None] * M * dtb[:, None, :, :]).astype(Xb.dtype)
+            return jnp.einsum("bqsh,bshp->bqhp", sc, Xb).astype(jnp.float32)
+
+        Yi = jax.lax.map(hblk, (cs_h, dt_h, X_h))                 # (nh,B,Q,hb,P)
+        Y_intra = jnp.moveaxis(Yi, 0, 2).reshape(B, Q, H, Pd)
+        # inter-chunk from carried state
+        Y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Cq.astype(jnp.float32),
+                             jnp.exp(cs), h)
+        # state update
+        dec_to_end = jnp.exp(seg[:, None, :] - cs)                # (B,Q,H)
+        st = jnp.einsum("bqh,bqn,bqhp->bhpn", dtq * dec_to_end,
+                        Bq.astype(jnp.float32), Xq.astype(jnp.float32))
+        h_new = jnp.exp(seg)[:, :, None, None] * h + st
+        h_new = wsc(h_new, P(dp, tp, None, None), mesh)
+        return h_new, wsc(Y_intra + Y_inter, P(dp, None, tp, None), mesh)
+
+    h_fin, Ys = jax.lax.scan(step, h0.astype(jnp.float32), (Xc, dtc, lac, Bc, Cc))
+    Y = jnp.moveaxis(Ys, 0, 1).reshape(B, S, H, Pd)[:, :S0]
+    return Y, h_fin
+
+
+def mamba_block(
+    params: dict,
+    x: jnp.ndarray,                  # (B,S,D)
+    *,
+    d_state: int,
+    headdim: int,
+    chunk: int = 256,
+    h0: Optional[jnp.ndarray] = None,
+    conv_state: Optional[jnp.ndarray] = None,
+    return_cache: bool = False,
+    mesh=None,
+    dp=None,
+    tp=None,
+):
+    B, S, D = x.shape
+    d_inner = params["wx"].shape[1]
+    H = d_inner // headdim
+    z = x @ params["wz"]
+    xc = x @ params["wx"]
+    xc = jax.nn.silu(_causal_depthwise_conv(xc, params["conv_w"], params["conv_b"]))
+    Bm = x @ params["wB"]
+    Cm = x @ params["wC"]
+    dt = jax.nn.softplus(
+        (x @ params["wdt"]).astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(params["A_log"])
+    X = wsc(xc.reshape(B, S, H, headdim), P(dp, None, tp, None), mesh)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, headdim, d_state), jnp.float32)
+    Y, h_fin = _ssd_chunked(X, dt, A, Bm, Cm, h0, chunk, mesh=mesh, dp=dp, tp=tp)
+    Y = Y + params["D_skip"][None, None, :, None] * X.astype(jnp.float32)
+    y = Y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["wo"]
+    if not return_cache:
+        return out, None
+    W = params["conv_w"].shape[0]
+    conv_cache = (x @ params["wx"])[:, -(W - 1) :, :] if S >= W - 1 else jnp.pad(
+        (x @ params["wx"]), ((0, 0), (W - 1 - S, 0), (0, 0))
+    )
+    return out, {"h": h_fin, "conv": conv_cache}
+
+
+def init_mamba_cache(batch, d_model, d_state, headdim, expand, conv_width, dtype):
+    d_inner = expand * d_model
+    H = d_inner // headdim
+    return {
+        "h": jnp.zeros((batch, H, headdim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode(
+    params: dict,
+    x: jnp.ndarray,                  # (B,1,D)
+    cache: dict,
+    *,
+    d_state: int,
+    headdim: int,
+):
+    """Single-token recurrent step: O(1) state update (the SSM decode path)."""
+    B = x.shape[0]
+    d_inner = params["wx"].shape[1]
+    H = d_inner // headdim
+    z = x @ params["wz"]
+    xr = x @ params["wx"]                            # (B,1,d_inner)
+    hist = jnp.concatenate([cache["conv"], xr], axis=1)  # (B,W,d_inner)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"]
+    xc = jax.nn.silu(conv_out)[:, None, :]           # (B,1,d_inner)
+    Bm = (x @ params["wB"])[:, 0]                    # (B,N)
+    Cm = (x @ params["wC"])[:, 0]
+    dt = jax.nn.softplus(
+        (x @ params["wdt"])[:, 0].astype(jnp.float32) + params["dt_bias"][None, :]
+    )                                                # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])                     # (B,H)
+    X = xc.reshape(B, H, headdim)
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), X.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + params["D_skip"][None, :, None] * X.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ params["wo"]
+    return out, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,355 @@
+"""Unified decoder-only model covering every assigned architecture family.
+
+One parameterized stack supports: dense GQA transformers (qwen/internlm/
+musicgen/phi3v backbones), 5:1 local:global sliding-window stacks (gemma3),
+pure SSD stacks (mamba2), MoE FFNs (dbrx/granite) and hybrid
+mamba+attention+MoE interleaves (jamba) — driven by ``ArchConfig.pattern_unit``
+/ ``ffn_unit``.
+
+Layers are *scanned* over repeating units (HLO size ~ O(unit), not O(L));
+any remainder layers are unrolled.  Each unit body is rematerialized
+(``jax.checkpoint``) during training.
+
+The modality frontends of the [audio]/[vlm] entries are STUBS per the
+brief: ``prefix_embeds`` (precomputed patch/frame embeddings) are
+concatenated in front of the token embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ArchConfig, Shape
+from .layers import (
+    attention,
+    decode_attention,
+    ffn,
+    init_attn_params,
+    init_ffn_params,
+    rmsnorm,
+)
+from .mamba2 import init_mamba_params, mamba_block, mamba_decode
+from .moe import init_moe_params, moe_dense, moe_ep
+from .sharding import DP, TP, act_specs
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step", "init_caches"]
+
+
+def _wsc(x, spec, mesh):
+    """with_sharding_constraint that is a no-op without a mesh (CPU smoke)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+# --------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ArchConfig, mix: str, ffnk: str, key) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"mix_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if mix in ("attn", "attn_local"):
+        p["attn"] = init_attn_params(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.qkv_bias, dt
+        )
+    elif mix == "mamba":
+        s = cfg.ssm
+        p["mamba"] = init_mamba_params(
+            k1, cfg.d_model, s.d_state, s.headdim, s.expand, s.conv_width, dt
+        )
+    else:
+        raise ValueError(mix)
+    if ffnk == "dense":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["ffn"] = init_ffn_params(k2, cfg.d_model, cfg.d_ff, cfg.glu, dt)
+    elif ffnk == "moe":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["moe"] = init_moe_params(
+            k2, cfg.d_model, cfg.moe.d_ff, cfg.moe.n_experts, cfg.glu, dt
+        )
+    elif ffnk != "none":
+        raise ValueError(ffnk)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    n_units, unit, rem = cfg.scan_split()
+    keys = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dt) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab), dt) * cfg.d_model ** -0.5
+        )
+    # scanned unit params: stacked (n_units, ...) per unit position
+    scan_params = []
+    for i, (mix, ffnk) in enumerate(unit):
+        ks = jax.random.split(jax.random.fold_in(keys[2], i), n_units)
+        stacked = jax.vmap(lambda k: _init_layer(cfg, mix, ffnk, k))(ks)
+        scan_params.append(stacked)
+    params["scan"] = scan_params
+    params["rem"] = [
+        _init_layer(cfg, mix, ffnk, jax.random.fold_in(keys[3], i))
+        for i, (mix, ffnk) in enumerate(rem)
+    ]
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+
+def _dp_axis(multi_pod):
+    dp = DP(multi_pod)
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _apply_mix(cfg, mix, lp, x, mesh, multi_pod, positions, return_cache):
+    if mix in ("attn", "attn_local"):
+        window = cfg.sliding_window if mix == "attn_local" else None
+        theta = cfg.rope_theta_local if mix == "attn_local" else cfg.rope_theta
+        y, cache = attention(
+            lp["attn"], x,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+            rope_theta=theta, window=window, positions=positions,
+            return_cache=return_cache,
+        )
+    else:
+        s = cfg.ssm
+        y, cache = mamba_block(
+            lp["mamba"], x, d_state=s.d_state, headdim=s.headdim, chunk=s.chunk,
+            return_cache=return_cache, mesh=mesh,
+            dp=_dp_axis(multi_pod) if mesh is not None else None,
+            tp=TP if mesh is not None else None,
+        )
+    return y, cache
+
+
+def _apply_ffn(cfg, ffnk, lp, x, mesh, multi_pod):
+    if ffnk == "none":
+        return x * 0.0, 0.0
+    h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+    if ffnk == "dense":
+        return ffn(lp["ffn"], h, glu=cfg.glu, act=cfg.act), 0.0
+    use_ep = mesh is not None and mesh.shape.get(TP, 1) > 1
+    if use_ep:
+        y, aux = moe_ep(
+            lp["moe"], h, mesh=mesh, topk=cfg.moe.topk,
+            n_experts=cfg.moe.n_experts, capacity_factor=cfg.moe.capacity_factor,
+            glu=cfg.glu, act=cfg.act, dp_axes=DP(multi_pod), tp_axis=TP,
+        )
+    else:
+        y, aux = moe_dense(lp["moe"], h, topk=cfg.moe.topk, glu=cfg.glu, act=cfg.act)
+    return y, aux
+
+
+def _apply_layer(cfg, mix, ffnk, lp, x, mesh, multi_pod, positions,
+                 return_cache=False):
+    h = rmsnorm(x, lp["mix_norm"], cfg.norm_eps)
+    y, cache = _apply_mix(cfg, mix, lp, h, mesh, multi_pod, positions, return_cache)
+    x = x + y
+    y2, aux = _apply_ffn(cfg, ffnk, lp, x, mesh, multi_pod)
+    return x + y2, aux, cache
+
+
+# --------------------------------------------------------------------------
+# full forward
+# --------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens, prefix_embeds, multi_pod, mesh):
+    sp = act_specs(multi_pod)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return _wsc(x, sp["hidden"], mesh)
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jnp.ndarray,                    # (B, S)
+    *,
+    mesh: Optional[Mesh] = None,
+    multi_pod: bool = False,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    remat: bool = True,
+    collect_caches: bool = False,
+):
+    """Returns (logits (B,S,V), aux, caches|None)."""
+    n_units, unit, rem = cfg.scan_split()
+    sp = act_specs(multi_pod)
+    x = _embed_tokens(cfg, params, tokens, prefix_embeds, multi_pod, mesh)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def unit_body(x, unit_params):
+        aux = 0.0
+        caches = []
+        for i, (mix, ffnk) in enumerate(unit):
+            x, a, c = _apply_layer(
+                cfg, mix, ffnk, unit_params[i], x, mesh, multi_pod, positions,
+                return_cache=collect_caches,
+            )
+            x = _wsc(x, sp["hidden"], mesh)
+            aux = aux + a
+            caches.append(c)
+        return x, (aux, caches if collect_caches else None)
+
+    body = jax.checkpoint(unit_body) if remat else unit_body
+
+    def scan_fn(x, unit_params):
+        x, (aux, caches) = body(x, unit_params)
+        return x, (aux, caches)
+
+    x, (auxs, scan_caches) = jax.lax.scan(scan_fn, x, params["scan"])
+    aux = jnp.sum(auxs)
+    rem_caches = []
+    for (mix, ffnk), lp in zip(rem, params["rem"]):
+        x, a, c = _apply_layer(
+            cfg, mix, ffnk, lp, x, mesh, multi_pod, positions,
+            return_cache=collect_caches,
+        )
+        aux = aux + a
+        rem_caches.append(c)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    logits = _wsc(logits, sp["logits"], mesh)
+    caches = {"scan": scan_caches, "rem": rem_caches} if collect_caches else None
+    return logits, aux, caches
+
+
+def loss_fn(cfg, params, batch, *, mesh=None, multi_pod=False, remat=True):
+    """Next-token CE.  The forward runs on the FULL sequence length and the
+    shift happens on the label side: a 4095-long forward would break the
+    sequence-divisibility that lets the MoE dispatch shard tokens over the
+    model axis (16x token duplication otherwise — see EXPERIMENTS.md §Perf).
+    """
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    logits, aux, _ = forward(
+        cfg, params, tokens, mesh=mesh, multi_pod=multi_pod,
+        prefix_embeds=prefix, remat=remat,
+    )
+    npfx = 0 if prefix is None else prefix.shape[1]
+    if npfx:
+        logits = logits[:, npfx:]
+    logits = logits[:, :-1]                      # predict token t+1 from t
+    labels = tokens[:, 1:]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)          # vocab-sharded reduce
+    tgt = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - tgt)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# --------------------------------------------------------------------------
+
+
+def prefill(cfg, params, tokens, *, mesh=None, multi_pod=False,
+            prefix_embeds=None):
+    """Full-sequence forward that also emits per-layer caches; returns
+    (last-position logits, caches)."""
+    logits, _, caches = forward(
+        cfg, params, tokens, mesh=mesh, multi_pod=multi_pod,
+        prefix_embeds=prefix_embeds, remat=False, collect_caches=True,
+    )
+    return logits[:, -1], caches
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
+    """Zeroed decode caches (the dry-run lowers decode against these specs)."""
+    dt = _dtype(cfg)
+    n_units, unit, rem = cfg.scan_split()
+
+    def one(mix):
+        if mix == "attn":
+            return {
+                "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.d_head), dt),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.d_head), dt),
+            }
+        if mix == "attn_local":
+            w = min(cfg.sliding_window, max_seq)
+            return {
+                "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.d_head), dt),
+                "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.d_head), dt),
+            }
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        return {
+            "h": jnp.zeros((batch, d_inner // s.headdim, s.headdim, s.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_width - 1, d_inner), dt),
+        }
+
+    scan_caches = [
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), one(mix))
+        for (mix, _) in unit
+    ]
+    rem_caches = [one(mix) for (mix, _) in rem]
+    return {"scan": scan_caches, "rem": rem_caches}
+
+
+def decode_step(cfg, params, token, caches, pos, *, mesh=None, multi_pod=False):
+    """One-token decode: (B,) token ids + caches -> (B,V) logits + caches."""
+    n_units, unit, rem = cfg.scan_split()
+    sp = act_specs(multi_pod)
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(_dtype(cfg))
+
+    def one_layer(mix, ffnk, lp, cache, x):
+        h = rmsnorm(x, lp["mix_norm"], cfg.norm_eps)
+        if mix in ("attn", "attn_local"):
+            window = cfg.sliding_window if mix == "attn_local" else None
+            theta = cfg.rope_theta_local if mix == "attn_local" else cfg.rope_theta
+            y, cache = decode_attention(
+                lp["attn"], h, cache, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                rope_theta=theta, window=window,
+            )
+        else:
+            s = cfg.ssm
+            y, cache = mamba_decode(lp["mamba"], h, cache, d_state=s.d_state,
+                                    headdim=s.headdim)
+        x = x + y
+        y2, _ = _apply_ffn(cfg, ffnk, lp, x, mesh, multi_pod)
+        return x + y2, cache
+
+    def scan_fn(x, inp):
+        unit_params, unit_caches = inp
+        new_caches = []
+        for i, (mix, ffnk) in enumerate(unit):
+            x, c = one_layer(mix, ffnk, unit_params[i], unit_caches[i], x)
+            new_caches.append(c)
+        return x, new_caches
+
+    x, new_scan = jax.lax.scan(scan_fn, x, (params["scan"], caches["scan"]))
+    new_rem = []
+    for (mix, ffnk), lp, c in zip(rem, params["rem"], caches["rem"]):
+        x, c2 = one_layer(mix, ffnk, lp, c, x)
+        new_rem.append(c2)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    logits = _wsc(logits, P(sp["logits"][0], sp["logits"][2]), mesh)
+    return logits, {"scan": new_scan, "rem": new_rem}

@@ -1,0 +1,99 @@
+"""Parameter/activation sharding rules: FSDP over the data (+pod) axes,
+tensor parallelism over the model axis, expert parallelism for MoE.
+
+Rules are name-based over the param pytree (the same builder produces both
+params and specs, so names are authoritative).  Scanned (stacked) params get
+a leading ``None`` axis for the unit dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_pspecs", "act_specs", "DP", "TP", "wsc"]
+
+
+def wsc(x, spec, mesh):
+    """with_sharding_constraint that is a no-op without a mesh."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+TP = "model"
+
+
+def DP(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _rule(name: str, ndim: int, dp, tp):
+    """PartitionSpec for a leaf called ``name`` with ``ndim`` dims."""
+    two = {
+        # (in, out) projections: FSDP on input dim, TP on output dim
+        "wq": P(dp, tp), "wk": P(dp, tp), "wv": P(dp, tp),
+        "w_up": P(dp, tp), "w_gate": P(dp, tp),
+        "wz": P(dp, tp), "wx": P(dp, tp),
+        "wB": P(dp, None), "wC": P(dp, None), "wdt": P(dp, None),
+        # (in, out) with TP on input dim (row-parallel)
+        "wo": P(tp, dp), "w_down": P(tp, dp),
+        "embed": P(tp, dp),          # vocab-sharded embedding
+        "lm_head": P(dp, tp),        # vocab-sharded logits
+        "conv_w": P(None, tp),
+        "router": P(None, None),
+    }
+    three = {
+        # MoE expert weights: experts over TP, FSDP on d_model dim
+        "w_up": P(tp, dp, None),
+        "w_gate": P(tp, dp, None),
+        "w_down": P(tp, None, dp),
+    }
+    one = {
+        "bq": P(tp), "bk": P(tp), "bv": P(tp),
+        "conv_b": P(tp),
+    }
+    if ndim >= 3 and name in three:
+        spec = three[name]
+        return P(*spec, *([None] * (ndim - 3)))
+    if ndim >= 2 and name in two:
+        spec = two[name]
+        return P(*spec, *([None] * (ndim - 2)))
+    if ndim == 1 and name in one:
+        return one[name]
+    return P(*([None] * ndim))  # norms, scalars, biases: replicated
+
+
+def param_pspecs(params, multi_pod: bool, scanned_prefixes=("scan",)):
+    """Mirror a params pytree with PartitionSpecs."""
+    dp = DP(multi_pod)
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def spec_of(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        name = keys[-1]
+        scanned = keys[0] in scanned_prefixes
+        nd = leaf.ndim - (1 if scanned else 0)
+        s = _rule(name, nd, dp, TP)
+        if scanned:
+            s = P(None, *s)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def act_specs(multi_pod: bool):
+    """Common activation PartitionSpecs."""
+    dp = DP(multi_pod)
+    dp = dp if len(dp) > 1 else dp[0]
+    return {
+        "tokens": P(dp, None),
+        "hidden": P(dp, None, None),
+        "hidden_tp": P(dp, None, TP),
+        "logits": P(dp, None, TP),
+        "kv_cache": P(dp, TP, None, None),   # (B, S, n_kv, d_head): seq over TP
+        "ssm_state": P(dp, TP, None, None),  # (B, H, P, N): heads over TP
+    }

@@ -1,0 +1,6 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .compression import compress_decompress, ef_init
+from .schedule import warmup_cosine
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "warmup_cosine",
+           "ef_init", "compress_decompress"]

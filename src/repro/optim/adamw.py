@@ -1,0 +1,70 @@
+"""AdamW with decoupled weight decay, global-norm clipping and mixed
+precision (bf16 params + fp32 master/optimizer states), built for sharded
+training: states mirror the param shardings, so FSDP shards optimizer
+memory for free."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+    master: dict          # fp32 master copy of params
+
+
+def adamw_init(params):
+    # copy=True: for fp32 params astype would alias the same buffer, and
+    # donating params AND master in one call is a double-donation error
+    f32 = lambda x: jnp.array(x, dtype=jnp.float32, copy=True)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+        nu=jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params),
+        master=jax.tree.map(f32, params),
+    )
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: float | jnp.ndarray = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, clip_norm / gnorm)
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, m):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        m = m - lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * m)
+        return mu, nu, m
+
+    out = jax.tree.map(upd, g32, state.mu, state.nu, state.master)
+    mu = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu, master=master), gnorm

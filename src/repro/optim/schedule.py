@@ -1,0 +1,13 @@
+"""LR schedules: linear warmup + cosine decay."""
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, *, peak=3e-4, warmup=100, total=1000, floor=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,10 @@
+# NOTE: do NOT set XLA_FLAGS / device counts here — smoke tests and benches
+# must see 1 device.  Multi-device tests spawn subprocesses with their own
+# XLA_FLAGS (see tests/_subproc.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

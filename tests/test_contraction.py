@@ -1,0 +1,37 @@
+"""Cluster contraction: the cut/balance-preservation property the whole
+multilevel scheme rests on."""
+
+import numpy as np
+
+from repro.core import contract, project_labels, relabel
+from repro.core.metrics import cut_np
+from repro.graph import rmat
+
+
+def test_relabel_contiguous():
+    lab = np.array([7, 3, 7, 9, 3])
+    C, n = relabel(lab)
+    assert n == 3
+    assert set(C.tolist()) == {0, 1, 2}
+
+
+def test_contraction_preserves_cut_and_weight():
+    g = rmat(11, 8, seed=5)
+    rng = np.random.default_rng(0)
+    clusters = rng.integers(0, 200, g.n)
+    coarse, C = contract(g, clusters)
+    assert coarse.nw.sum() == g.nw.sum()
+    # any partition of the coarse graph induces the same cut on the fine graph
+    for k in (2, 5):
+        lab_c = rng.integers(0, k, coarse.n).astype(np.int32)
+        lab_f = project_labels(lab_c, C)
+        assert abs(cut_np(coarse, lab_c) - cut_np(g, lab_f)) < 1e-3
+        bw_c = np.bincount(lab_c, weights=coarse.nw, minlength=k)
+        bw_f = np.bincount(lab_f, weights=g.nw, minlength=k)
+        np.testing.assert_allclose(bw_c, bw_f, rtol=1e-6)
+
+
+def test_contract_self_loops_dropped():
+    g = rmat(10, 8, seed=6)
+    coarse, C = contract(g, np.zeros(g.n, dtype=np.int64))
+    assert coarse.n == 1 and coarse.m == 0

@@ -1,0 +1,79 @@
+"""Distributed SCLaP via shard_map — run in subprocesses with 8 host devices."""
+
+import pytest
+
+from _subproc import run_with_devices
+
+
+@pytest.mark.slow
+def test_distributed_cluster_and_refine():
+    out = run_with_devices("""
+import numpy as np
+from repro.graph import rmat, mesh2d
+from repro.core.distributed_lp import build_plan, lp_cluster_distributed, lp_refine_distributed
+from repro.core.metrics import cut_np, imbalance_np, lmax
+
+g = rmat(12, 8, seed=2)
+L = lmax(g.n, 2, 0.03)
+plan = build_plan(g, 8, chunks_per_shard=4)
+clus = lp_cluster_distributed(plan, U=L/14, iters=3, seed=1)
+ncl = np.unique(clus).size
+assert ncl < g.n / 2, ncl            # clustering actually merges
+cw = np.bincount(clus, weights=g.nw)
+assert cw.max() <= 4 * (L/14)        # soft bound (PE-local weights overshoot)
+
+gm = mesh2d(64); side = 64
+truth = (np.arange(gm.n)//side >= side//2).astype(np.int32)
+rng = np.random.default_rng(0); noisy = truth.copy()
+noisy[rng.random(gm.n) < 0.15] ^= 1
+Lm = lmax(gm.n, 2, 0.03)
+planm = build_plan(gm, 8, chunks_per_shard=4, order="random")
+ref = lp_refine_distributed(planm, noisy, k=2, U=Lm, iters=6, seed=0)
+assert cut_np(gm, ref) < cut_np(gm, noisy) / 5
+assert imbalance_np(gm, ref, 2) <= 0.031
+print("DIST-OK")
+""")
+    assert "DIST-OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_multilevel_end_to_end():
+    out = run_with_devices("""
+import numpy as np
+from repro.graph import barabasi_albert
+from repro.core import partition, PartitionerConfig, hash_partition
+from repro.core.metrics import cut_np
+
+g = barabasi_albert(8192, 6, seed=3)
+rep = partition(g, PartitionerConfig(k=2, preset="minimal", coarsest_factor=100,
+                                     seed=0, engine="dist", dist_shards=8))
+assert rep.feasible
+assert rep.cut < cut_np(g, hash_partition(g.n, 2))
+print("DIST-ML-OK", rep.cut)
+""")
+    assert "DIST-ML-OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_contraction_matches_host():
+    out = run_with_devices("""
+import numpy as np
+from repro.graph import rmat
+from repro.core.contraction import contract
+from repro.core.distributed_lp import build_plan, contract_distributed
+from repro.graph.csr import validate
+
+g = rmat(11, 8, seed=7)
+rng = np.random.default_rng(0)
+labels = rng.integers(0, 300, g.n)
+plan = build_plan(g, 8)
+c_host, C1 = contract(g, labels)
+c_dist, C2 = contract_distributed(plan, labels)
+assert np.array_equal(C1, C2)
+validate(c_dist)
+assert c_dist.n == c_host.n and c_dist.m == c_host.m
+np.testing.assert_allclose(np.sort(c_dist.ew), np.sort(c_host.ew), rtol=1e-5)
+np.testing.assert_allclose(c_dist.nw, c_host.nw, rtol=1e-6)
+print("DIST-CONTRACT-OK")
+""")
+    assert "DIST-CONTRACT-OK" in out

@@ -1,0 +1,29 @@
+"""KaFFPaE-style island GA on the coarsest graph."""
+
+import numpy as np
+
+from repro.core import EvoConfig, evolve, initial_partition
+from repro.core.metrics import cut_np, is_feasible, lmax
+from repro.graph import planted_partition
+
+
+def test_evolve_feasible_and_competitive():
+    g = planted_partition(1024, 4, p_in=0.03, p_out=0.001, seed=1)
+    L = lmax(g.n, 2, 0.03)
+    single = initial_partition(g, 2, L, seed=7)
+    lab = evolve(g, EvoConfig(k=2, Lmax=L, islands=2, pop_per_island=2,
+                              generations=4, seed=0))
+    assert is_feasible(g, lab, 2, 0.03)
+    assert cut_np(g, lab) <= cut_np(g, single) * 1.05
+
+
+def test_seeded_evolve_never_worse_than_seed():
+    """V-cycle guarantee: the previous solution is an individual, so the
+    result can only match or improve it."""
+    g = planted_partition(1024, 4, p_in=0.03, p_out=0.001, seed=2)
+    L = lmax(g.n, 2, 0.03)
+    seed_lab = initial_partition(g, 2, L, seed=3)
+    lab = evolve(g, EvoConfig(k=2, Lmax=L, islands=2, pop_per_island=2,
+                              generations=3, seed=1,
+                              seed_individuals=[seed_lab.astype(np.int64)]))
+    assert cut_np(g, lab) <= cut_np(g, seed_lab)

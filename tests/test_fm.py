@@ -1,0 +1,32 @@
+"""Gain-based FM local search."""
+
+import numpy as np
+
+from repro.core import fm_refine
+from repro.core.metrics import block_weights_np, cut_np, lmax
+from repro.graph import mesh2d, rmat
+
+
+def test_fm_never_worsens_and_respects_balance():
+    g = rmat(11, 8, seed=4)
+    rng = np.random.default_rng(0)
+    k = 4
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    L = lmax(g.n, k, 0.03)
+    out = fm_refine(g, lab, k, L, seed=1)
+    assert cut_np(g, out) <= cut_np(g, lab)
+    assert block_weights_np(g, out, k).max() <= max(
+        block_weights_np(g, lab, k).max(), L
+    )
+
+
+def test_fm_improves_noisy_split():
+    side = 32
+    g = mesh2d(side)
+    truth = (np.arange(g.n) // side >= side // 2).astype(np.int32)
+    rng = np.random.default_rng(1)
+    noisy = truth.copy()
+    noisy[rng.random(g.n) < 0.1] ^= 1
+    L = lmax(g.n, 2, 0.03)
+    out = fm_refine(g, noisy, 2, L, seed=0)
+    assert cut_np(g, out) < cut_np(g, noisy) / 3

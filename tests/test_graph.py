@@ -1,0 +1,71 @@
+"""Graph substrate: CSR validity, generators, packing layouts."""
+
+import numpy as np
+import pytest
+
+from repro.graph import (
+    barabasi_albert, ell_pack, from_edges, mesh2d, pack_chunks,
+    planted_partition, rgg, ring, rmat, shard_graph, star, validate,
+)
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: rmat(10, 8, seed=1),
+    lambda: rgg(10, seed=1),
+    lambda: mesh2d(20),
+    lambda: barabasi_albert(1500, 4, seed=1),
+    lambda: planted_partition(1024, 4, seed=1),
+    lambda: ring(64),
+    lambda: star(64),
+])
+def test_generators_valid(maker):
+    g = maker()
+    validate(g)
+    assert g.n > 0 and g.m > 0
+
+
+def test_from_edges_dedup():
+    g = from_edges(4, np.array([0, 0, 1]), np.array([1, 1, 0]))
+    # three parallel arcs merged into one undirected edge with weight 3
+    assert g.m == 2
+    assert g.ew.sum() == 6.0
+
+
+def test_chunk_pack_covers_everything():
+    g = rmat(11, 8, seed=2)
+    cp = pack_chunks(g, np.argsort(g.degrees()), max_nodes=256, max_edges=2048)
+    nodes = cp.nodes[cp.node_valid]
+    assert np.array_equal(np.sort(nodes), np.arange(g.n))
+    assert int(cp.edge_valid.sum()) == g.m
+    c = cp.num_chunks // 2
+    sel = cp.node_valid[c]
+    ids = cp.nodes[c][sel]
+    dst = cp.edge_dst[c][cp.edge_valid[c]]
+    exp = np.concatenate([g.indices[g.indptr[v]:g.indptr[v + 1]] for v in ids])
+    assert np.array_equal(dst, exp)
+
+
+def test_ell_pack_row_splitting():
+    g = star(500)  # hub degree 499 >> width
+    ep = ell_pack(g, width=32, tile_rows=64)
+    assert (ep.dst < g.n).sum() == g.m
+    hub_rows = np.flatnonzero(ep.row_node == 0)
+    assert hub_rows.size == -(-499 // 32)
+    got = ep.dst[hub_rows].ravel()
+    assert np.array_equal(np.sort(got[got < g.n]), np.arange(1, 500))
+
+
+def test_shard_graph_roundtrip():
+    g = rmat(11, 8, seed=3)
+    P = 4
+    sg = shard_graph(g, P)
+    assert int(sg.m_local.sum()) == g.m
+    assert int(sg.n_local.sum()) == g.n
+    # every ghost is an interface node of its owner
+    for p in range(P):
+        gp = int(sg.n_ghost[p])
+        for gi in range(0, gp, max(1, gp // 13)):
+            owner = int(sg.ghost_owner[p, gi])
+            slot = int(sg.ghost_slot[p, gi])
+            glob = int(sg.ghost_global[p, gi])
+            assert sg.iface_nodes[owner, slot] + sg.range_start[owner] == glob

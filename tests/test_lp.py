@@ -1,0 +1,68 @@
+"""Size-constrained label propagation: both engines, both modes."""
+
+import numpy as np
+
+from repro.core import lp_cluster, lp_refine, sclap_numpy
+from repro.core.metrics import cut_np, imbalance_np, lmax
+from repro.graph import mesh2d, planted_partition
+
+
+def _noisy_split(g, side, p=0.15, seed=1):
+    truth = (np.arange(g.n) // side >= side // 2).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    lab = truth.copy()
+    lab[rng.random(g.n) < p] ^= 1
+    return truth, lab
+
+
+def test_cluster_respects_soft_bound():
+    g = planted_partition(2048, 8, p_in=0.04, p_out=0.001, seed=0)
+    U = 60.0
+    res = lp_cluster(g, U=U, iters=3, seed=1, max_nodes=512)
+    cw = np.bincount(res.labels, weights=g.nw)
+    # chunked-synchronous moves may overshoot within a chunk; the paper's
+    # constraint is soft — bound the overshoot instead of requiring exactness
+    assert cw.max() <= 2.5 * U
+    assert np.unique(res.labels).size < g.n / 4  # actually clusters
+
+
+def test_cluster_restriction_invariant():
+    g = planted_partition(1024, 4, seed=1)
+    restrict = (np.arange(g.n) % 2).astype(np.int64)
+    res = lp_cluster(g, U=100.0, iters=3, seed=0, restrict=restrict, max_nodes=256)
+    # no cluster may straddle a restriction cell (V-cycle guarantee)
+    for c in np.unique(res.labels):
+        cells = np.unique(restrict[res.labels == c])
+        assert cells.size == 1
+
+
+def test_refine_recovers_noisy_mesh_split():
+    side = 48
+    g = mesh2d(side)
+    truth, noisy = _noisy_split(g, side)
+    L = lmax(g.n, 2, 0.03)
+    before = cut_np(g, noisy)
+    res = lp_refine(g, noisy, k=2, U=L, iters=6, seed=3, max_nodes=256)
+    after = cut_np(g, res.labels)
+    assert after < before / 5
+    assert imbalance_np(g, res.labels, 2) <= 0.031
+
+
+def test_numpy_engine_matches_quality():
+    side = 48
+    g = mesh2d(side)
+    truth, noisy = _noisy_split(g, side)
+    L = lmax(g.n, 2, 0.03)
+    res = sclap_numpy(g, noisy, U=L, iters=6, seed=3, refine_mode=True, num_labels=2)
+    assert cut_np(g, res.labels) < cut_np(g, noisy) / 5
+
+
+def test_refine_fixes_overload():
+    side = 32
+    g = mesh2d(side)
+    lab = np.zeros(g.n, dtype=np.int32)
+    lab[: g.n // 8] = 1  # heavily imbalanced
+    L = lmax(g.n, 2, 0.03)
+    res = lp_refine(g, lab, k=2, U=L, iters=8, seed=0, max_nodes=128)
+    bw = np.bincount(res.labels, weights=g.nw, minlength=2)
+    assert bw.max() <= L * 1.05  # overload rule pushes toward feasibility

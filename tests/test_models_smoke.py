@@ -1,0 +1,117 @@
+"""Per-arch smoke tests: REDUCED same-family config, one forward/train step
+on CPU, output shapes + no NaNs (the FULL configs are exercised only via the
+dry-run)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cells
+from repro.models import decode_step, forward, init_caches, init_params, loss_fn
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_loss_decode(arch):
+    cfg = ARCHS[arch].smoke()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    pe = (jax.random.normal(key, (B, cfg.n_prefix, cfg.d_model), jnp.float32)
+          if cfg.n_prefix else None)
+    logits, aux, _ = forward(cfg, params, tokens, prefix_embeds=pe, remat=False)
+    assert logits.shape == (B, S + cfg.n_prefix, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    batch = {"tokens": tokens}
+    if pe is not None:
+        batch["prefix_embeds"] = pe
+    loss, metrics = loss_fn(cfg, params, batch, remat=True)
+    assert np.isfinite(float(loss))
+    caches = init_caches(cfg, B, 48)
+    lg, caches = decode_step(cfg, params, tokens[:, 0], caches, jnp.int32(0))
+    assert lg.shape == (B, cfg.vocab)
+    assert not bool(jnp.isnan(lg).any())
+
+
+def test_configs_match_assignment():
+    """Exact figures from the assignment table."""
+    c = ARCHS["qwen2.5-3b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (36, 2048, 16, 2, 11008, 151936) and c.qkv_bias
+    c = ARCHS["qwen1.5-110b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (80, 8192, 64, 8, 49152, 152064) and c.qkv_bias
+    c = ARCHS["gemma3-27b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (62, 5376, 32, 16, 21504, 262144)
+    assert c.pattern_unit.count("attn_local") == 5  # 5:1 local:global
+    c = ARCHS["internlm2-20b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (48, 6144, 48, 8, 16384, 92544)
+    c = ARCHS["musicgen-large"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (48, 2048, 32, 8192, 2048)
+    c = ARCHS["phi-3-vision-4.2b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (32, 3072, 32, 8192, 32064)
+    c = ARCHS["mamba2-2.7b"]
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm.d_state) == (64, 2560, 50280, 128)
+    assert c.pattern_unit == ("mamba",)
+    c = ARCHS["dbrx-132b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (40, 6144, 48, 8, 100352)
+    assert (c.moe.n_experts, c.moe.topk, c.moe.d_ff) == (16, 4, 10752)
+    c = ARCHS["granite-moe-1b-a400m"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == \
+        (24, 1024, 16, 8, 49155)
+    assert (c.moe.n_experts, c.moe.topk, c.moe.d_ff) == (32, 8, 512)
+    c = ARCHS["jamba-1.5-large-398b"]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (72, 8192, 64, 8, 24576, 65536)
+    assert (c.moe.n_experts, c.moe.topk) == (16, 2)
+    assert c.pattern_unit.count("mamba") == 7 and c.pattern_unit.count("attn") == 1
+
+
+def test_cell_grid_counts():
+    cs = cells()
+    assert len(cs) == 40  # 10 archs x 4 shapes
+    skips = [c for c in cs if c[2]]
+    # long_500k skipped exactly for the 7 pure full-attention archs
+    assert len(skips) == 7
+    assert all(s == "long_500k" for _, s, _ in skips)
+    runs_500k = {a for a, s, skip in cs if s == "long_500k" and not skip}
+    assert runs_500k == {"mamba2-2.7b", "jamba-1.5-large-398b", "gemma3-27b"}
+
+
+def test_attention_sliding_window_masks_correctly():
+    from repro.models.layers import attention, init_attn_params
+    key = jax.random.PRNGKey(0)
+    D, H, dh = 32, 4, 8
+    p = init_attn_params(key, D, H, H, dh, False, jnp.float32)
+    x = jax.random.normal(key, (1, 12, D))
+    yw, _ = attention(p, x, n_heads=H, n_kv=H, d_head=dh, window=4, q_chunk=4)
+    # perturbing a token > window positions in the past must not change output
+    x2 = x.at[0, 0].add(10.0)
+    yw2, _ = attention(p, x2, n_heads=H, n_kv=H, d_head=dh, window=4, q_chunk=4)
+    np.testing.assert_allclose(np.asarray(yw[0, 6:]), np.asarray(yw2[0, 6:]),
+                               atol=1e-5)
+    yf2, _ = attention(p, x2, n_heads=H, n_kv=H, d_head=dh, window=None, q_chunk=4)
+    assert float(jnp.abs(yf2[0, 6:] - yw2[0, 6:]).max()) > 1e-4
+
+
+def test_attention_prefill_decode_consistency():
+    from repro.models.layers import attention, decode_attention, init_attn_params
+    key = jax.random.PRNGKey(3)
+    D, H, KV, dh = 32, 4, 2, 8
+    p = init_attn_params(key, D, H, KV, dh, True, jnp.float32)
+    x = jax.random.normal(key, (2, 9, D)) * 0.5
+    y_full, _ = attention(p, x, n_heads=H, n_kv=KV, d_head=dh, q_chunk=4)
+    _, cache = attention(p, x[:, :-1], n_heads=H, n_kv=KV, d_head=dh,
+                         q_chunk=4, return_cache=True)
+    cache = {k: jnp.pad(v, ((0, 0), (0, 8), (0, 0), (0, 0)))
+             for k, v in cache.items()}
+    y_dec, _ = decode_attention(p, x[:, -1:], cache, jnp.int32(8),
+                                n_heads=H, n_kv=KV, d_head=dh)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full[:, -1:]),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,65 @@
+"""End-to-end multilevel partitioner vs the paper's claims (scaled down)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PartitionerConfig, hash_partition, matching_multilevel, partition,
+)
+from repro.core.metrics import cut_np, is_feasible
+from repro.graph import barabasi_albert, mesh2d, planted_partition
+
+
+@pytest.fixture(scope="module")
+def social():
+    return barabasi_albert(8192, 6, seed=3)
+
+
+def test_fast_feasible_and_beats_hash(social):
+    g = social
+    rep = partition(g, PartitionerConfig(k=2, preset="fast", coarsest_factor=100,
+                                         seed=0))
+    assert rep.feasible
+    assert rep.imbalance <= 0.031
+    assert rep.cut < cut_np(g, hash_partition(g.n, 2)) * 0.85
+
+
+def test_cluster_coarsening_shrinks_social_graphs(social):
+    """The paper's central claim: cluster contraction shrinks complex
+    networks drastically where matching cannot (Table II discussion)."""
+    rep = partition(social, PartitionerConfig(k=2, preset="fast",
+                                              coarsest_factor=100, seed=0))
+    mb = matching_multilevel(social, 2, seed=0)
+    assert rep.shrink_first < 0.35
+    assert rep.shrink_first < mb.shrink_first / 2
+
+
+def test_vcycles_never_worsen_final(social):
+    rep = partition(social, PartitionerConfig(k=2, preset="fast",
+                                              coarsest_factor=100, seed=0))
+    assert rep.cut == min(rep.cycle_cuts)
+
+
+def test_k32(social):
+    rep = partition(social, PartitionerConfig(k=32, preset="minimal",
+                                              coarsest_factor=20, seed=0))
+    assert rep.feasible
+    assert rep.cut < cut_np(social, hash_partition(social.n, 32))
+
+
+def test_mesh_type_graph():
+    g = mesh2d(48)
+    rep = partition(g, PartitionerConfig(k=2, preset="fast", coarsest_factor=50,
+                                         f_mesh=64, seed=0))
+    assert rep.feasible
+    # a 48x48 triangulated grid has a ~2*48-edge bisection; stay in its orbit
+    assert rep.cut < 6 * 48
+
+
+def test_strong_preset_beats_fast():
+    g = planted_partition(4096, 8, p_in=0.02, p_out=0.0005, seed=2)
+    fast = partition(g, PartitionerConfig(k=2, preset="fast", coarsest_factor=100,
+                                          seed=0))
+    strong = partition(g, PartitionerConfig(k=2, preset="strong",
+                                            coarsest_factor=100, seed=0))
+    assert strong.cut <= fast.cut

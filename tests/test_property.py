@@ -1,0 +1,44 @@
+"""Hypothesis property tests for the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import contract, project_labels, repair_balance
+from repro.core.metrics import block_weights_np, cut_np, lmax
+from repro.graph import from_edges
+
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(4, 60))
+    m = draw(st.integers(1, 150))
+    u = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    v = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    w = draw(st.lists(st.integers(1, 5), min_size=m, max_size=m))
+    g = from_edges(n, np.array(u), np.array(v), np.array(w, dtype=np.float32))
+    return g
+
+
+@given(graphs(), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_contraction_preserves_cut(g, seed):
+    rng = np.random.default_rng(seed)
+    clusters = rng.integers(0, max(2, g.n // 3), g.n)
+    coarse, C = contract(g, clusters)
+    assert np.isclose(coarse.nw.sum(), g.nw.sum())
+    lab_c = rng.integers(0, 3, coarse.n).astype(np.int32)
+    lab_f = project_labels(lab_c, C)
+    assert np.isclose(cut_np(coarse, lab_c), cut_np(g, lab_f))
+    # total edge weight of coarse graph == weight of inter-cluster edges
+    inter = cut_np(g, clusters.astype(np.int32))
+    assert np.isclose(coarse.ew.sum() / 2.0, inter)
+
+
+@given(graphs(), st.integers(2, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_repair_balance_reaches_feasibility(g, k, seed):
+    rng = np.random.default_rng(seed)
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    L = lmax(g.total_node_weight, k, 0.3)  # generous eps: always repairable
+    out = repair_balance(g, lab, k, L, seed=seed)
+    assert block_weights_np(g, out, k).max() <= L + 1e-6

@@ -15,12 +15,23 @@ at laptop scale, preserving the paper's *relative* claims:
   weak_scaling        -> Fig. 5 (rgg/mesh families, k=16, shards 1..8
                          via the distributed shard_map engine)
   strong_scaling      -> Fig. 6 (fixed graph, shards 1..8)
+  lp_sweep_hot        -> PR 1 perf trajectory: _lp_sweep jit-compile count
+                         across a 2-V-cycle multilevel run (shape-bucketed
+                         engine) + steady-state sweep us/iter
+  dense_refine        -> PR 1: chunked vs Pallas-dense refinement engine on
+                         the rmat-web graph (cut parity + time)
 
 Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
+With ``--json PATH``, tables additionally emit machine-readable rows
+``{name, us_per_call, derived}`` merged into PATH (existing content from
+earlier invocations is preserved), seeding the perf trajectory for later
+PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -250,6 +261,131 @@ def kernel_bench():
         print(f"lp_score_{tag},{us:.0f},m={g.m}")
 
 
+def lp_sweep_hot():
+    """PR 1 microbenchmark: jit cache behaviour of the bucketed LP engine.
+
+    Pre-engine, _lp_sweep re-jitted at every level of every V-cycle (chunk
+    shapes were derived from each level's exact (n, m)) — one compile per
+    sweep call.  The engine's shape buckets + traced num_labels/num_chunks
+    collapse that to one compile per (bucket, statics) combination.
+    """
+    from repro.core import LPEngine, PartitionerConfig, partition
+    from repro.core.label_propagation import _lp_sweep
+    from repro.core.metrics import lmax
+    from repro.graph import barabasi_albert
+
+    rows = []
+    g = barabasi_albert(16384, 6, seed=3)
+    cfg = PartitionerConfig(k=2, preset="fast", coarsest_factor=20, seed=0,
+                            engine="jnp")
+    try:
+        _lp_sweep._clear_cache()
+    except Exception:
+        pass
+    t0 = time.time()
+    rep = partition(g, cfg)
+    t_part = time.time() - t0
+    st = rep.engine_stats
+    jit_sz = LPEngine.jit_cache_size()
+    levels = len(rep.level_sizes)
+    print("metric,value")
+    print(f"levels,{levels}")
+    print(f"vcycles,{cfg.vcycles}")
+    print(f"sweep_calls,{st['sweep_calls']}")
+    print(f"sweep_compiles,{st['sweep_compiles']}")
+    print(f"jit_cache_entries,{jit_sz}")
+    print(f"bucket_count,{st['bucket_count']}")
+    print(f"pack_builds,{st['pack_builds']}")
+    print(f"pack_hits,{st['pack_hits']}")
+    print(f"partition_s,{t_part:.1f}")
+    print(f"# pre-engine compile count would be sweep_calls = "
+          f"{st['sweep_calls']} (one jit per level x cycle x mode); engine "
+          f"compiles {st['sweep_compiles']}")
+    rows.append(dict(
+        name="lp_sweep_hot_partition",
+        us_per_call=t_part * 1e6,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, cut=rep.cut,
+            feasible=bool(rep.feasible), levels=levels, vcycles=cfg.vcycles,
+            sweep_calls=st["sweep_calls"],
+            sweep_compiles=st["sweep_compiles"],
+            jit_cache_entries=jit_sz,
+            bucket_count=st["bucket_count"],
+            pack_builds=st["pack_builds"], pack_hits=st["pack_hits"],
+            pre_engine_compiles=st["sweep_calls"],
+        ),
+    ))
+
+    # steady-state sweep throughput on the finest (hot) level, warm caches,
+    # vs the seed behaviour (exact shapes, repacked on host every call) —
+    # interleaved so machine-load drift cancels
+    from repro.core.label_propagation import lp_refine
+    from repro.graph import chunk_geometry
+
+    eng = LPEngine(g, seed=0)
+    L = lmax(g.n, 2, 0.03)
+    lab = (np.arange(g.n) % 2).astype(np.int32)
+    max_nodes, max_edges = chunk_geometry(g.n, g.m)
+    out = eng.refine(g, lab, 2, L, 1, 0)      # pack + compile warmup
+    np.asarray(out)
+    lp_refine(g, lab, 2, L, iters=1, seed=0,
+              max_nodes=max_nodes, max_edges=max_edges)
+    iters, reps = 6, 3
+    t_seed, t_eng = [], []
+    for r in range(reps):
+        t0 = time.time()
+        lp_refine(g, lab, 2, L, iters=iters, seed=r + 1,
+                  max_nodes=max_nodes, max_edges=max_edges)
+        t_seed.append((time.time() - t0) / iters)
+        t0 = time.time()
+        np.asarray(eng.refine(g, lab, 2, L, iters, r + 1))
+        t_eng.append((time.time() - t0) / iters)
+    us = min(t_eng) * 1e6
+    us_seed = min(t_seed) * 1e6
+    print(f"steady_state_us_per_sweep_iter,{us:.0f}")
+    print(f"seed_style_us_per_sweep_iter,{us_seed:.0f}  # exact shapes, "
+          f"repacked per call")
+    rows.append(dict(
+        name="lp_sweep_hot_steady",
+        us_per_call=us,
+        derived=dict(graph="ba-16384", n=g.n, m=g.m, iters_per_call=iters,
+                     repeats=reps, chunk_bucket=list(eng.stats_dict()["chunk_bucket"]),
+                     seed_style_us_per_iter=us_seed),
+    ))
+    return rows
+
+
+def dense_refine():
+    """PR 1: refine_engine='dense' (Pallas path) vs chunked on rmat-web."""
+    from repro.core import PartitionerConfig, partition
+    from repro.graph import rmat
+
+    g = rmat(13, 8, seed=2)
+    base = dict(k=2, preset="fast", coarsest_factor=50, seed=0)
+    t0 = time.time()
+    rc = partition(g, PartitionerConfig(**base))
+    t_c = time.time() - t0
+    t0 = time.time()
+    rd = partition(g, PartitionerConfig(**base, refine_engine="dense"))
+    t_d = time.time() - t0
+    ratio = rd.cut / max(rc.cut, 1.0)
+    print("engine,cut,feasible,seconds,dense_rounds")
+    print(f"chunked,{rc.cut:.0f},{rc.feasible},{t_c:.1f},0")
+    print(f"dense,{rd.cut:.0f},{rd.feasible},{t_d:.1f},"
+          f"{rd.engine_stats['dense_rounds']}")
+    print(f"# dense/chunked cut ratio {ratio:.3f} (acceptance: <= 1.10)")
+    return [
+        dict(name="dense_refine_chunked", us_per_call=t_c * 1e6,
+             derived=dict(graph="rmat-web", n=g.n, m=g.m, cut=rc.cut,
+                          feasible=bool(rc.feasible))),
+        dict(name="dense_refine_dense", us_per_call=t_d * 1e6,
+             derived=dict(graph="rmat-web", n=g.n, m=g.m, cut=rd.cut,
+                          feasible=bool(rd.feasible),
+                          dense_rounds=rd.engine_stats["dense_rounds"],
+                          cut_ratio_vs_chunked=ratio)),
+    ]
+
+
 TABLES = {
     "table2_quality": table2_quality,
     "table3_k32": table3_k32,
@@ -260,18 +396,50 @@ TABLES = {
     "strong_scaling": strong_scaling,
     "modularity_clustering": modularity_clustering,
     "kernel_bench": kernel_bench,
+    "lp_sweep_hot": lp_sweep_hot,
+    "dense_refine": dense_refine,
 }
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            sys.exit("error: --json requires a path argument")
+        json_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    only = args[0] if args else None
+    if only and only not in TABLES:
+        sys.exit(f"error: unknown table {only!r}; available: "
+                 + ", ".join(TABLES))
+    # parse any existing results file up front so a corrupt file fails the
+    # run before hours of benchmarking, not after
+    merged = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            merged = json.load(f)
+    results = {}
     for name, fn in TABLES.items():
         if only and name != only:
             continue
         print(f"\n==== {name} ====")
         t0 = time.time()
-        fn()
-        print(f"# [{name} done in {time.time() - t0:.0f}s]")
+        rows = fn()
+        elapsed = time.time() - t0
+        print(f"# [{name} done in {elapsed:.0f}s]")
+        if rows is None:  # print-only tables still get a summary row
+            rows = [dict(name=name, us_per_call=elapsed * 1e6, derived={})]
+        results[name] = rows
+    if json_path:
+        merged.update(results)
+        tmp = json_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, json_path)  # atomic: never leave a truncated file
+        print(f"# wrote {json_path} ({len(merged)} tables)")
 
 
 if __name__ == "__main__":

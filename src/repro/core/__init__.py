@@ -5,6 +5,7 @@ evolutionary algorithm on the coarsest graph."""
 from .autoshard import expert_placement, pipeline_stages
 from .baselines import hash_partition, matching_multilevel, random_balanced
 from .contraction import contract, project_labels, relabel
+from .engine import EngineStats, LPEngine
 from .evolutionary import EvoConfig, evolve
 from .fm import fm_refine
 from .initial_partition import greedy_growing, initial_partition, repair_balance
@@ -29,6 +30,8 @@ __all__ = [
     "lp_refine",
     "sclap_numpy",
     "LPResult",
+    "LPEngine",
+    "EngineStats",
     "contract",
     "project_labels",
     "relabel",

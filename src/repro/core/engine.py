@@ -1,0 +1,456 @@
+"""Device-resident LP engine: pack caching, shape bucketing, sweep dispatch.
+
+The multilevel driver (``repro.core.multilevel``) used to derive fresh chunk
+shapes from every level's exact ``(n, m)`` and re-jit ``_lp_sweep`` at every
+level of every V-cycle, repacking and re-uploading the graph for each
+``lp_cluster``/``lp_refine`` call.  :class:`LPEngine` owns all of that state
+for one ``partition()`` run instead:
+
+* **Shape bucketing** — chunk geometry is frozen from the finest graph and
+  every level's :class:`~repro.graph.packing.ChunkPack` is padded
+  (:func:`~repro.graph.packing.pad_pack`) up to shared power-of-two buckets
+  ``(C, N, E)``; label/weight arrays live in a power-of-two *arena*
+  ``A >= n_finest + 1``.  Combined with the sweep's traced ``num_labels`` /
+  ``num_chunks`` scalars, one compiled executable per
+  ``(iters, mode, restrict)`` combination serves the whole hierarchy —
+  compile count is ``O(#buckets)``, not ``O(#levels x #cycles)``.
+* **Pack caching** — packs, ELL packs, and per-graph device arrays (arena
+  node weights, cluster weight bases, arc endpoints for cut evaluation) are
+  cached per ``(graph, order-mode)`` and uploaded once.  The finest graph is
+  identical across V-cycles, so cycles 2..N reuse cycle-1 packs; traversal
+  is re-randomized by permuting chunk visit order *on device* (see
+  ``_lp_sweep``), not by repacking on host.
+* **Device-resident refinement** — ``refine``/``refine_dense`` take and
+  return arena-sized device label arrays; projection through the hierarchy
+  (``project``), cut evaluation (``cut``) and block weights
+  (``block_weights``) all run on device, so uncoarsening never round-trips
+  labels through numpy between levels.
+* **Dense fast path** — ``refine_dense`` iterates the Pallas-backed
+  synchronous round (``repro.kernels.lp_score.dense_round_device``) on a
+  cached ELL pack: one kernel launch per iteration instead of a sequential
+  chunk walk.
+
+Engine state is per-``partition()``-run; it is not thread-safe and holds
+strong references to every level's graph until released.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.csr import GraphNP
+from ..graph.packing import chunk_geometry, ell_pack, pack_chunks, pad_pack
+from .label_propagation import _lp_sweep, make_order
+
+__all__ = ["LPEngine", "EngineStats"]
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+@dataclass
+class _DevicePack:
+    """A chunk pack padded to bucket shape, uploaded once."""
+
+    graph: GraphNP          # strong ref: pins id(graph) for cache identity
+    nodes: jax.Array
+    node_valid: jax.Array
+    edge_dst: jax.Array
+    edge_w: jax.Array
+    edge_src_slot: jax.Array
+    edge_valid: jax.Array
+    num_chunks: int         # live chunks (<= padded C)
+    shape: Tuple[int, int, int]
+
+
+@dataclass
+class _Arena:
+    """Per-graph device arrays shared by every sweep over that graph."""
+
+    graph: GraphNP
+    nw_arena: jax.Array     # (A,) f32 — node weights, 0 beyond n
+    cluster_w: jax.Array    # (A,) f32 — per-node weights, +inf beyond n
+    src: jax.Array          # (m,) int32 — arc sources (for cut/guard)
+    dst: jax.Array          # (m,) int32
+    ew: jax.Array           # (m,) f32
+
+
+@dataclass
+class _DeviceEll:
+    graph: GraphNP
+    dst: jax.Array
+    w: jax.Array
+    row_node: jax.Array
+    nw: jax.Array           # (n,) f32
+
+
+@dataclass
+class EngineStats:
+    """Counters surfaced through ``PartitionReport.engine_stats``."""
+
+    sweep_calls: int = 0
+    sweep_compiles: int = 0         # distinct (bucket, statics) combinations
+    pack_builds: int = 0
+    pack_hits: int = 0
+    dense_rounds: int = 0
+    buckets: set = field(default_factory=set)   # distinct (C, N, E, A, W)
+
+    @property
+    def bucket_count(self) -> int:
+        return len(self.buckets)
+
+
+class LPEngine:
+    """Owns packing, caching, and sweep dispatch for one multilevel run."""
+
+    def __init__(
+        self,
+        g0: GraphNP,
+        *,
+        target_chunks: int = 64,
+        seed: int = 0,
+        use_pallas: bool = True,
+        interpret: Optional[bool] = None,
+        pack_block: int = 8,
+    ):
+        n0, m0 = g0.n, g0.m
+        # Small packing mini-blocks keep the max block-degree-sum (which
+        # forces the per-chunk edge capacity) low on coarse power-law levels,
+        # so levels rarely overflow the shared E bucket.
+        self.pack_block = int(pack_block)
+        # Chunk geometry frozen from the finest level (same request floors
+        # the driver used to recompute per level).  N is rounded to a power
+        # of two; the shared edge bucket E_floor is *learned* from the first
+        # pack actually built (the finest, hottest level), so the hot level
+        # pays near-zero edge-axis padding and coarser levels pad up into
+        # its bucket.
+        n_req, e_req = chunk_geometry(n0, m0, target_chunks)
+        self.N = _pow2(n_req)
+        self._e_request = e_req
+        self.E_floor = 0
+        self._g0_id = id(g0)
+        self.A = _pow2(n0 + 1)              # label/weight arena size
+        self.C_bucket = 8                   # grows to the finest pack's C
+        self.seed = int(seed)
+        self.use_pallas = bool(use_pallas)
+        self.interpret = (
+            (jax.default_backend() != "tpu") if interpret is None else bool(interpret)
+        )
+        self.stats = EngineStats()
+        self._packs: Dict[Tuple[int, str], _DevicePack] = {}
+        self._arenas: Dict[int, _Arena] = {}
+        self._ells: Dict[int, _DeviceEll] = {}
+        self._iota_cache: Optional[jax.Array] = None  # lazy: dist path may never sweep
+        self._compile_keys = set()
+
+    @property
+    def _iota(self) -> jax.Array:
+        if self._iota_cache is None:
+            self._iota_cache = jnp.arange(self.A, dtype=jnp.int32)
+        return self._iota_cache
+
+    # ------------------------------------------------------------------ caches
+
+    def _arena(self, g: GraphNP) -> _Arena:
+        hit = self._arenas.get(id(g))
+        if hit is not None and hit.graph is g:
+            return hit
+        n = g.n
+        nw = np.zeros(self.A, np.float32)
+        nw[:n] = g.nw
+        cw = np.full(self.A, np.inf, np.float32)
+        cw[:n] = g.nw
+        ar = _Arena(
+            graph=g,
+            nw_arena=jnp.asarray(nw),
+            cluster_w=jnp.asarray(cw),
+            src=jnp.asarray(g.arc_sources(), dtype=jnp.int32),
+            dst=jnp.asarray(g.indices, dtype=jnp.int32),
+            ew=jnp.asarray(g.ew, dtype=jnp.float32),
+        )
+        self._arenas[id(g)] = ar
+        return ar
+
+    def _pack(self, g: GraphNP, mode: str) -> _DevicePack:
+        key = (id(g), mode)
+        hit = self._packs.get(key)
+        if hit is not None and hit.graph is g:
+            self.stats.pack_hits += 1
+            return hit
+        self.stats.pack_builds += 1
+        order = make_order(g, mode, self.seed)
+        pack = pack_chunks(
+            g, order, max_nodes=self.N,
+            max_edges=max(self._e_request, self.E_floor),
+            block=self.pack_block,
+        )
+        C, N = pack.nodes.shape
+        E = pack.edge_dst.shape[1]
+        # Bucket up: N is bounded by the frozen geometry; E only exceeds the
+        # floor when a level's max block-degree-sum does (rare; power-law
+        # hubs on coarse levels), C only grows at the finest level.
+        self.C_bucket = max(self.C_bucket, _pow2(C))
+        # E snaps to 512-arc multiples, not powers of two: a pack just past
+        # the current bucket (one hub-heavy block) would otherwise pay a ~2x
+        # sort-width tax on every chunk.  The raise is sticky, so later
+        # levels (and the next V-cycle) land in the same bucket instead of
+        # re-compiling.
+        Eb = max(self.E_floor, -(-E // 512) * 512)
+        self.E_floor = Eb
+        padded = pad_pack(pack, self.C_bucket, self.N, Eb)
+        dp = _DevicePack(
+            graph=g,
+            nodes=jnp.asarray(padded.nodes),
+            node_valid=jnp.asarray(padded.node_valid),
+            edge_dst=jnp.asarray(padded.edge_dst),
+            edge_w=jnp.asarray(padded.edge_w),
+            edge_src_slot=jnp.asarray(padded.edge_src_slot),
+            edge_valid=jnp.asarray(padded.edge_valid),
+            num_chunks=pack.num_chunks,
+            shape=(self.C_bucket, self.N, Eb),
+        )
+        self._packs[key] = dp
+        return dp
+
+    def _ell(self, g: GraphNP) -> _DeviceEll:
+        hit = self._ells.get(id(g))
+        if hit is not None and hit.graph is g:
+            self.stats.pack_hits += 1
+            return hit
+        self.stats.pack_builds += 1
+        ell = ell_pack(g)
+        de = _DeviceEll(
+            graph=g,
+            dst=jnp.asarray(ell.dst),
+            w=jnp.asarray(ell.w),
+            row_node=jnp.asarray(ell.row_node),
+            nw=jnp.asarray(g.nw, dtype=jnp.float32),
+        )
+        self._ells[id(g)] = de
+        return de
+
+    def _drop_single_use(self, g: GraphNP, mode: str) -> None:
+        """Release a coarse level's pack right after its one use.
+
+        Only the finest graph's packs are ever re-hit (V-cycles 2..N reuse
+        them; coarse graphs are rebuilt every cycle), and every cached pack
+        is padded to the finest bucket shape — so keeping a coarse pack
+        around would cost O(finest pack) device memory per level for zero
+        reuse.  Arenas (O(graph)) stay until cycle-end ``evict``: the same
+        level's refine/guard calls still need them.
+        """
+        if id(g) != self._g0_id:
+            self._packs.pop((id(g), mode), None)
+
+    def evict(self, keep: Tuple[GraphNP, ...] = ()) -> None:
+        """Drop cached packs/arenas/ELLs for all graphs not in ``keep``.
+
+        Coarse graphs are rebuilt fresh every V-cycle (restricted clustering
+        changes the hierarchy), so their cache entries — each padded to the
+        finest bucket shape — are dead weight once the cycle ends.  The
+        driver calls this at the end of each cycle keeping only the finest
+        graph, whose packs are the ones cycles 2..N actually reuse.
+        """
+        keep_ids = {id(g) for g in keep}
+        self._packs = {k: v for k, v in self._packs.items() if k[0] in keep_ids}
+        self._arenas = {k: v for k, v in self._arenas.items() if k in keep_ids}
+        self._ells = {k: v for k, v in self._ells.items() if k in keep_ids}
+
+    # ------------------------------------------------------------------ sweeps
+
+    def _sweep(self, dp, labels, weights, nw_arena, restrict, U, seed, num_labels,
+               *, iters, refine_mode, use_restrict, permute_chunks):
+        self.stats.sweep_calls += 1
+        bucket = dp.shape + (labels.shape[0], weights.shape[0])
+        self.stats.buckets.add(bucket)
+        ckey = bucket + (restrict.shape[0], iters, refine_mode, use_restrict,
+                         permute_chunks)
+        if ckey not in self._compile_keys:
+            self._compile_keys.add(ckey)
+            self.stats.sweep_compiles += 1
+        return _lp_sweep(
+            dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w, dp.edge_src_slot,
+            dp.edge_valid,
+            labels, weights, nw_arena, restrict,
+            jnp.float32(U),
+            jnp.int32(seed & 0x7FFFFFFF),
+            jnp.int32(num_labels),
+            jnp.int32(dp.num_chunks),
+            iters=iters,
+            refine_mode=refine_mode,
+            use_restrict=use_restrict,
+            permute_chunks=permute_chunks,
+        )
+
+    def cluster(
+        self,
+        g: GraphNP,
+        U: float,
+        iters: int,
+        seed: int,
+        restrict: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """SCLaP clustering for coarsening; returns host labels (contraction
+        is a host step).  Degree traversal order, packs cached per graph."""
+        dp = self._pack(g, "degree")
+        ar = self._arena(g)
+        if restrict is not None:
+            r = np.full(self.A, -1, np.int32)
+            r[: g.n] = restrict
+            r_dev = jnp.asarray(r)
+        else:
+            r_dev = jnp.zeros(1, jnp.int32)
+        labels, _, _ = self._sweep(
+            dp, self._iota, ar.cluster_w, ar.nw_arena, r_dev, U, seed, g.n,
+            iters=iters, refine_mode=False,
+            use_restrict=restrict is not None, permute_chunks=False,
+        )
+        self._drop_single_use(g, "degree")
+        return np.asarray(labels[: g.n])
+
+    def refine(
+        self,
+        g: GraphNP,
+        labels: Union[np.ndarray, jax.Array],
+        k: int,
+        U: float,
+        iters: int,
+        seed: int,
+    ) -> jax.Array:
+        """Chunked-sequential SCLaP local search; arena labels in/out (device
+        arrays stay device-resident across levels)."""
+        dp = self._pack(g, "random")
+        ar = self._arena(g)
+        lab = self.to_arena(labels, g.n, fill=k)
+        # (k + 1)-sized block weights: k is constant for the whole run, so
+        # this costs no extra compiles and keeps the sweep's weight updates
+        # and influx gating O(k) instead of O(arena) per chunk.
+        bw = jnp.zeros((k + 1,), jnp.float32).at[jnp.minimum(lab, k)].add(
+            ar.nw_arena
+        )
+        w0 = bw.at[k].set(jnp.inf)
+        lab_out, _, _ = self._sweep(
+            dp, lab, w0, ar.nw_arena, jnp.zeros(1, jnp.int32), U, seed, k,
+            iters=iters, refine_mode=True,
+            use_restrict=False, permute_chunks=True,
+        )
+        self._drop_single_use(g, "random")
+        return lab_out
+
+    def refine_dense(
+        self,
+        g: GraphNP,
+        labels: Union[np.ndarray, jax.Array],
+        k: int,
+        U: float,
+        iters: int,
+        seed: int,
+        move_fraction: float = 0.5,
+    ) -> jax.Array:
+        """Synchronous dense refinement: ``iters`` Pallas-scored rounds on a
+        cached ELL pack, labels device-resident throughout."""
+        from ..kernels.lp_score.ops import dense_round_device
+
+        de = self._ell(g)
+        lab = self.to_arena(labels, g.n, fill=k)[: g.n]
+        for r in range(iters):
+            lab = dense_round_device(
+                de.dst, de.w, de.row_node, lab, de.nw,
+                jnp.float32(U),
+                jnp.int32((seed + 0x9E37 * r) & 0x7FFFFFFF),
+                jnp.float32(move_fraction),
+                k=k, n=g.n,
+                use_pallas=self.use_pallas, interpret=self.interpret,
+            )
+            self.stats.dense_rounds += 1
+        if id(g) != self._g0_id:
+            self._ells.pop(id(g), None)
+        return self.to_arena(lab, g.n, fill=k)
+
+    # --------------------------------------------------------- device helpers
+
+    def to_arena(
+        self, labels: Union[np.ndarray, jax.Array], n: int, fill: int
+    ) -> jax.Array:
+        """Lift labels of length >= n into an (A,) int32 arena array."""
+        if isinstance(labels, jax.Array):
+            lab = labels.astype(jnp.int32)
+            if lab.shape[0] == self.A:
+                return lab
+            lab = lab[:n]
+            return jnp.concatenate(
+                [lab, jnp.full((self.A - n,), fill, jnp.int32)]
+            )
+        out = np.full(self.A, fill, np.int32)
+        out[:n] = np.asarray(labels[:n], dtype=np.int32)
+        return jnp.asarray(out)
+
+    def project(
+        self,
+        coarse_labels: Union[np.ndarray, jax.Array],
+        C: np.ndarray,
+        fill: int,
+    ) -> jax.Array:
+        """Project coarse labels through a contraction map C (fine -> coarse)
+        entirely on device; returns arena-sized fine labels."""
+        n_f = C.shape[0]
+        C_dev = jnp.asarray(np.asarray(C, dtype=np.int32))
+        if isinstance(coarse_labels, jax.Array):
+            base = coarse_labels.astype(jnp.int32)
+        else:
+            base = jnp.asarray(np.asarray(coarse_labels, dtype=np.int32))
+        fine = base[C_dev]
+        return jnp.concatenate(
+            [fine, jnp.full((self.A - n_f,), fill, jnp.int32)]
+        )
+
+    def cut(self, g: GraphNP, labels: jax.Array) -> float:
+        """Edge cut of arena labels, evaluated on device (one scalar sync)."""
+        ar = self._arena(g)
+        diff = labels[ar.src] != labels[ar.dst]
+        return float(jnp.sum(jnp.where(diff, ar.ew, 0.0)) / 2.0)
+
+    def block_weights(self, g: GraphNP, labels: jax.Array, k: int) -> np.ndarray:
+        ar = self._arena(g)
+        bw = jnp.zeros((k + 1,), jnp.float32).at[jnp.minimum(labels, k)].add(
+            ar.nw_arena
+        )
+        return np.asarray(bw[:k])
+
+    def to_host(self, labels: jax.Array, n: int) -> np.ndarray:
+        return np.asarray(labels[:n])
+
+    # ---------------------------------------------------------------- metrics
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct sweep (bucket, statics) combinations dispatched — each is
+        one XLA compilation of ``_lp_sweep``."""
+        return self.stats.sweep_compiles
+
+    @staticmethod
+    def jit_cache_size() -> Optional[int]:
+        """Size of the jit cache of ``_lp_sweep`` itself, when available."""
+        try:
+            return int(_lp_sweep._cache_size())
+        except Exception:
+            return None
+
+    def stats_dict(self) -> dict:
+        return dict(
+            sweep_calls=self.stats.sweep_calls,
+            sweep_compiles=self.stats.sweep_compiles,
+            bucket_count=self.stats.bucket_count,
+            pack_builds=self.stats.pack_builds,
+            pack_hits=self.stats.pack_hits,
+            dense_rounds=self.stats.dense_rounds,
+            arena=self.A,
+            chunk_bucket=(self.C_bucket, self.N, self.E_floor),
+        )

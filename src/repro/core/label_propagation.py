@@ -15,14 +15,38 @@ TPU adaptation (DESIGN.md §2): the sequential sweep becomes a
 *chunked-sequential* sweep.  Nodes are host-packed into fixed-shape chunks;
 a ``lax.fori_loop`` walks chunks sequentially and moves all nodes of a chunk
 synchronously.  The per-chunk "strongest eligible cluster" reduction is
-sort-based (lexsort by (node, label) + run segmentation) instead of the
-paper's linear-probing hash tables — hashing is hostile to TPUs, sorting is
-native.  Tie-breaking is random via sub-0.5 jitter (valid because all
-cluster-connection weights are integral for integer-weight inputs).
+sort-based (a single argsort on the fused key ``slot * A + cand`` + run
+segmentation) instead of the paper's linear-probing hash tables — hashing is
+hostile to TPUs, sorting is native.  Tie-breaking is random via sub-0.5
+jitter (valid because all cluster-connection weights are integral for
+integer-weight inputs).
 
 The same kernel serves the V-cycle restriction (§IV-D): when ``restrict`` is
 given, a node may only join clusters inside its own restriction cell, so cut
 edges of the input partition are never contracted.
+
+Shape-bucketing contract (PR 1, consumed by ``repro.core.engine.LPEngine``):
+``_lp_sweep`` is written so that one compiled executable serves *every*
+level of a multilevel hierarchy once the inputs are padded to a common
+bucket shape:
+
+* the label universe size ``num_labels`` and the live chunk count
+  ``num_chunks`` are **traced** scalars, not static — padded chunks beyond
+  ``num_chunks`` are simply never visited, and label/weight arrays are
+  arena-sized (``A >= n + 1``) with +inf weight sentinels above
+  ``num_labels``;
+* the tie-break jitter is a stateless integer hash of
+  ``(seed, iteration, chunk, node slot, candidate label)`` rather than a
+  draw from a shape-``(E,)`` PRNG stream, so padding the edge axis cannot
+  change any move decision — bucketed and exact-shape packs produce
+  *bit-identical* labels (tested in tests/test_engine.py);
+* refinement sweeps re-randomize the traversal *per call* (per level, per
+  V-cycle) by permuting the chunk visit order **on device** (same hash
+  family), which is what lets V-cycles 2..N reuse the packs built in cycle 1
+  instead of repacking.  The order is deliberately held fixed across the
+  iterations of one call: chunked-synchronous LP needs a stationary visit
+  order to damp oscillation (re-shuffling every iteration was measured to
+  blow up the cut on the mesh bisection task).
 """
 
 from __future__ import annotations
@@ -65,9 +89,36 @@ def make_order(g: GraphNP, mode: str, seed: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
+def _hash_mix(h, x):
+    """One round of a murmur-style integer mixer (uint32, wrap-around mul)."""
+    h = (h ^ x.astype(jnp.uint32)) * jnp.uint32(0xC2B2AE35)
+    return h ^ (h >> 15)
+
+
+def _hash_jitter(base, a, b):
+    """Stateless tie-break jitter in [0, 0.49) from integer coordinates.
+
+    Unlike a ``jax.random.uniform(key, (E,))`` draw, the value of each
+    element depends only on ``(base, a[i], b[i])`` — never on the array
+    *shape* — so padding the edge axis to a bucket size cannot perturb any
+    tie-break (the parity guarantee of the bucketed engine).
+    """
+    h = _hash_mix(_hash_mix(base, a), b)
+    return (h & jnp.uint32(0xFFFFFF)).astype(jnp.float32) / float(1 << 24) * 0.49
+
+
+def _hash_base(seed, it, extra):
+    s = (
+        seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+        + it.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+        + jnp.uint32(extra) * jnp.uint32(0x27D4EB2F)
+    )
+    return _hash_mix(jnp.uint32(0x165667B1), s)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("iters", "refine_mode", "num_labels", "use_restrict"),
+    static_argnames=("iters", "refine_mode", "use_restrict", "permute_chunks"),
 )
 def _lp_sweep(
     nodes,          # (C, N) int32, padded with n
@@ -76,109 +127,168 @@ def _lp_sweep(
     edge_w,         # (C, E) f32
     edge_src_slot,  # (C, E) int32
     edge_valid,     # (C, E) bool
-    labels,         # (n + 1,) int32; slot n is the sentinel
-    weights,        # (T + 1,) f32 cluster/block weights; slot T is +inf
-    nw_ext,         # (n + 1,) f32 node weights; slot n is 0
-    restrict,       # (n + 1,) int32 or dummy
+    labels,         # (A,) int32 arena, A >= n + 1; slots >= n are unused
+    weights,        # (W,) f32 cluster/block weights; slots >= num_labels +inf
+    nw_ext,         # (A,) f32 node weights; slots >= n hold 0
+    restrict,       # (A,) int32 or (1,) dummy
     U,              # scalar f32
-    key,
+    seed,           # scalar int32 — drives the stateless tie-break hash
+    num_labels,     # traced scalar int32 — T: n in cluster mode, k in refine
+    num_chunks,     # traced scalar int32 — live chunks; <= C (rest is pad)
     *,
     iters: int,
     refine_mode: bool,
-    num_labels: int,  # T: n for cluster mode, k for refine mode
     use_restrict: bool,
+    permute_chunks: bool,
 ):
     C, N = nodes.shape
     E = edge_dst.shape[1]
-    n = labels.shape[0] - 1
-    sent_lbl = num_labels  # padded-weight slot (holds +inf)
+    A = labels.shape[0]
+    sent_lbl = num_labels.astype(jnp.int32)  # padded-weight slot (holds +inf)
 
-    def chunk_step(c, carry):
-        labels, weights, key, moves = carry
-        key, sub = jax.random.split(key)
-        nd = nodes[c]
-        ndv = node_valid[c]
-        dst = edge_dst[c]
-        w0 = edge_w[c]
-        slot = edge_src_slot[c]
-        ev = edge_valid[c]
+    def chunk_step_for(it, perm):
+        def chunk_step(c, carry):
+            labels, weights, moves = carry
+            cc = perm[c]
+            nd = nodes[cc]
+            ndv = node_valid[cc]
+            dst = edge_dst[cc]
+            w0 = edge_w[cc]
+            slot = edge_src_slot[cc]
+            ev = edge_valid[cc]
 
-        lbl_d = labels[dst]                      # candidate label per arc
-        src_node = nd[slot]
-        if use_restrict:
-            ok = ev & (restrict[dst] == restrict[src_node])
-        else:
-            ok = ev
-        cand = jnp.where(ok, lbl_d, sent_lbl).astype(jnp.int32)
-        wv = jnp.where(ok, w0, 0.0)
+            lbl_d = labels[dst]                      # candidate label per arc
+            src_node = nd[slot]
+            if use_restrict:
+                ok = ev & (restrict[dst] == restrict[src_node])
+            else:
+                ok = ev
+            cand = jnp.where(ok, lbl_d, sent_lbl).astype(jnp.int32)
+            wv = jnp.where(ok, w0, 0.0)
 
-        # ---- sort-based (node, label) run reduction -----------------------
-        perm = jnp.lexsort((cand, slot))
-        s_slot = slot[perm]
-        s_lbl = cand[perm]
-        s_w = wv[perm]
-        new_run = jnp.concatenate(
-            [
-                jnp.ones((1,), bool),
-                (s_slot[1:] != s_slot[:-1]) | (s_lbl[1:] != s_lbl[:-1]),
-            ]
-        )
-        run_id = jnp.cumsum(new_run) - 1          # (E,) in [0, E)
-        run_w = jnp.zeros((E,), jnp.float32).at[run_id].add(s_w)
-        run_slot = jnp.full((E,), N, jnp.int32).at[run_id].set(s_slot)
-        run_lbl = jnp.full((E,), sent_lbl, jnp.int32).at[run_id].set(s_lbl)
-
-        # ---- eligibility + scoring ---------------------------------------
-        own = labels[nd]                          # (N,)
-        own_r = own[jnp.minimum(run_slot, N - 1)]
-        node_w_r = nw_ext[nd[jnp.minimum(run_slot, N - 1)]]
-        cand_w = weights[jnp.minimum(run_lbl, num_labels)]
-        fits = cand_w + node_w_r <= U
-        if refine_mode:
-            own_w = weights[jnp.minimum(own, num_labels)]
-            overloaded = own_w[jnp.minimum(run_slot, N - 1)] > U
-            eligible = jnp.where(
-                overloaded,
-                fits & (run_lbl != own_r),                     # must leave
-                (run_w > 0) & (fits | (run_lbl == own_r)),
+            # ---- sort-based (node, label) run reduction -------------------
+            # Packing emits each chunk's arcs grouped by source slot (see
+            # graph/packing.py), so the fused key `slot * A + cand` both
+            # orders runs correctly and keeps the sort a *single* key pass
+            # instead of the two passes of lexsort((cand, slot)).  cand is
+            # always <= num_labels < A, so the key is collision-free; the
+            # int32 fast path is valid whenever N * A fits in 31 bits.
+            if N * A < 2**31:
+                perm_e = jnp.argsort(slot * jnp.int32(A) + cand)
+            else:
+                perm_e = jnp.lexsort((cand, slot))
+            s_slot = slot[perm_e]
+            s_lbl = cand[perm_e]
+            s_w = wv[perm_e]
+            new_run = jnp.concatenate(
+                [
+                    jnp.ones((1,), bool),
+                    (s_slot[1:] != s_slot[:-1]) | (s_lbl[1:] != s_lbl[:-1]),
+                ]
             )
-        else:
-            eligible = (run_w > 0) & (fits | (run_lbl == own_r))
-        eligible &= run_slot < N
-        jitter = jax.random.uniform(sub, (E,), jnp.float32, 0.0, 0.49)
-        score = jnp.where(eligible, run_w + jitter, _NEG)
+            run_id = jnp.cumsum(new_run) - 1          # (E,) in [0, E)
+            run_w = jnp.zeros((E,), jnp.float32).at[run_id].add(s_w)
+            run_slot = jnp.full((E,), N, jnp.int32).at[run_id].set(s_slot)
+            run_lbl = jnp.full((E,), sent_lbl, jnp.int32).at[run_id].set(s_lbl)
 
-        # ---- per-node argmax over runs ------------------------------------
-        seg = jnp.minimum(run_slot, N)            # runs of padded slots -> N
-        best = jnp.full((N + 1,), _NEG, jnp.float32).at[seg].max(score)
-        is_best = (score >= best[seg]) & (score > _NEG / 2)
-        win = (
-            jnp.full((N + 1,), sent_lbl, jnp.int32)
-            .at[seg]
-            .min(jnp.where(is_best, run_lbl, sent_lbl))
-        )[:N]
-        new_lbl = jnp.where(ndv & (win < sent_lbl), win, own)
+            # ---- eligibility + scoring -----------------------------------
+            own = labels[nd]                          # (N,)
+            own_r = own[jnp.minimum(run_slot, N - 1)]
+            node_w_r = nw_ext[nd[jnp.minimum(run_slot, N - 1)]]
+            cand_w = weights[jnp.minimum(run_lbl, num_labels)]
+            fits = cand_w + node_w_r <= U
+            if refine_mode:
+                own_w = weights[jnp.minimum(own, num_labels)]
+                overloaded = own_w[jnp.minimum(run_slot, N - 1)] > U
+                eligible = jnp.where(
+                    overloaded,
+                    fits & (run_lbl != own_r),                     # must leave
+                    (run_w > 0) & (fits | (run_lbl == own_r)),
+                )
+            else:
+                eligible = (run_w > 0) & (fits | (run_lbl == own_r))
+            eligible &= run_slot < N
+            base = _hash_base(seed, it, 0x51ED2701) + cc.astype(jnp.uint32)
+            jitter = _hash_jitter(base, run_slot, run_lbl)
+            score = jnp.where(eligible, run_w + jitter, _NEG)
 
-        moved = ndv & (new_lbl != own)
-        nwv = nw_ext[nd]
-        labels = labels.at[nd].set(jnp.where(ndv, new_lbl, own), mode="drop")
-        weights = weights.at[jnp.where(moved, own, num_labels)].add(
-            jnp.where(moved, -nwv, 0.0), mode="drop"
-        )
-        weights = weights.at[jnp.where(moved, new_lbl, num_labels)].add(
-            jnp.where(moved, nwv, 0.0), mode="drop"
-        )
-        # keep the sentinel weight slot at +inf (the adds above target it
-        # with value 0 for unmoved nodes; re-pin to be safe)
-        weights = weights.at[num_labels].set(jnp.inf)
-        moves = moves + jnp.sum(moved)
-        return labels, weights, key, moves
+            # ---- per-node argmax over runs --------------------------------
+            seg = jnp.minimum(run_slot, N)            # runs of padded slots -> N
+            best = jnp.full((N + 1,), _NEG, jnp.float32).at[seg].max(score)
+            is_best = (score >= best[seg]) & (score > _NEG / 2)
+            win = (
+                jnp.full((N + 1,), sent_lbl, jnp.int32)
+                .at[seg]
+                .min(jnp.where(is_best, run_lbl, sent_lbl))
+            )[:N]
+            new_lbl = jnp.where(ndv & (win < sent_lbl), win, own)
 
-    def iter_step(_, carry):
-        return jax.lax.fori_loop(0, C, chunk_step, carry)
+            moved = ndv & (new_lbl != own)
+            nwv = nw_ext[nd]
+            if refine_mode:
+                # Influx gating: every node of a chunk sees the same stale
+                # block weights, so a chunk can pile far more weight into a
+                # block than its headroom — overshooting U and triggering a
+                # synchronous "must leave" stampede out of the now-overloaded
+                # block (measured: sustained oscillation at ~chunk-size moves
+                # per iteration under unlucky visit orders).  Cap each
+                # block's *net* inflow at its headroom in expectation:
+                # accept an incoming mover with probability
+                # clip((U - w + outflow) / inflow, 0, 1).  Swap-heavy
+                # refinement (inflow ~ outflow) passes through untouched.
+                mv_w = jnp.where(moved, nwv, 0.0)
+                tgt_i = jnp.where(moved, new_lbl, num_labels)
+                src_i = jnp.where(moved, own, num_labels)
+                zero_w = jnp.zeros(weights.shape, jnp.float32)
+                inflow = zero_w.at[tgt_i].add(mv_w, mode="drop")
+                outflow = zero_w.at[src_i].add(mv_w, mode="drop")
+                head = U - weights + outflow
+                p_in = jnp.clip(head / jnp.maximum(inflow, 1e-9), 0.0, 1.0)
+                gate_u = _hash_jitter(
+                    _hash_base(seed, it, 0x2545F491) + cc.astype(jnp.uint32),
+                    nd, new_lbl,
+                ) / 0.49
+                moved &= gate_u < p_in[jnp.minimum(new_lbl, num_labels)]
+                new_lbl = jnp.where(moved, new_lbl, own)
+            labels = labels.at[nd].set(jnp.where(ndv, new_lbl, own), mode="drop")
+            weights = weights.at[jnp.where(moved, own, num_labels)].add(
+                jnp.where(moved, -nwv, 0.0), mode="drop"
+            )
+            weights = weights.at[jnp.where(moved, new_lbl, num_labels)].add(
+                jnp.where(moved, nwv, 0.0), mode="drop"
+            )
+            # keep the sentinel weight slot at +inf (the adds above target it
+            # with value 0 for unmoved nodes; re-pin to be safe)
+            weights = weights.at[num_labels].set(jnp.inf)
+            moves = moves + jnp.sum(moved)
+            return labels, weights, moves
 
-    labels, weights, key, moves = jax.lax.fori_loop(
-        0, iters, iter_step, (labels, weights, key, jnp.zeros((), jnp.int32))
+        return chunk_step
+
+    if permute_chunks:
+        # Device-side traversal re-randomization: pseudo-random visit order
+        # over the *live* chunks, padded chunks sorted last (and never
+        # visited — the loop stops at num_chunks).  Hash-based, so
+        # independent of the padded chunk-axis size.  The order is fixed for
+        # the whole call (it varies with the per-call seed, i.e. per level
+        # and per V-cycle): re-shuffling every iteration was measured to
+        # *prevent* convergence — chunked-synchronous LP relies on a
+        # stationary visit order to damp oscillation, exactly like the
+        # sequential oracle converges under any fixed sweep order.
+        hc = _hash_mix(
+            _hash_base(seed, jnp.int32(0), 0x7F4A7C15),
+            jnp.arange(C, dtype=jnp.int32),
+        ).astype(jnp.float32)
+        hc = hc + jnp.where(jnp.arange(C) >= num_chunks, jnp.float32(1e10), 0.0)
+        perm = jnp.argsort(hc).astype(jnp.int32)
+    else:
+        perm = jnp.arange(C, dtype=jnp.int32)
+
+    def iter_step(it, carry):
+        return jax.lax.fori_loop(0, num_chunks, chunk_step_for(it, perm), carry)
+
+    labels, weights, moves = jax.lax.fori_loop(
+        0, iters, iter_step, (labels, weights, jnp.zeros((), jnp.int32))
     )
     return labels, weights, moves
 
@@ -228,11 +338,13 @@ def lp_cluster(
         jnp.asarray(nw_ext),
         jnp.asarray(r),
         jnp.float32(U),
-        jax.random.PRNGKey(seed),
+        jnp.int32(seed & 0x7FFFFFFF),
+        jnp.int32(n),
+        jnp.int32(pack.num_chunks),
         iters=iters,
         refine_mode=False,
-        num_labels=n,
         use_restrict=restrict is not None,
+        permute_chunks=False,
     )
     return LPResult(labels=np.asarray(labels[:n]), moves=int(moves), iters=iters)
 
@@ -271,11 +383,13 @@ def lp_refine(
         jnp.asarray(nw_ext),
         jnp.zeros(1, jnp.int32),
         jnp.float32(U),
-        jax.random.PRNGKey(seed),
+        jnp.int32(seed & 0x7FFFFFFF),
+        jnp.int32(k),
+        jnp.int32(pack.num_chunks),
         iters=iters,
         refine_mode=True,
-        num_labels=k,
         use_restrict=False,
+        permute_chunks=False,
     )
     return LPResult(labels=np.asarray(labels[:n]), moves=int(moves), iters=iters)
 

@@ -28,7 +28,9 @@ from typing import List, Optional
 import numpy as np
 
 from ..graph.csr import GraphNP
+from ..graph.packing import chunk_geometry
 from .contraction import contract, project_labels
+from .engine import LPEngine
 from .evolutionary import EvoConfig, evolve
 from .initial_partition import repair_balance
 from .label_propagation import lp_cluster, lp_refine, sclap_numpy
@@ -57,6 +59,11 @@ class PartitionerConfig:
     target_chunks: int = 64
     dist_shards: int = 0            # engine="dist": number of mesh PEs
     dist_chunks_per_shard: int = 4
+    # refinement engine for the jnp path: "chunked" = chunked-sequential LP
+    # sweep; "dense" = synchronous Pallas-scored dense rounds at fine levels
+    # (>= dense_min_n nodes), falling back to chunked/numpy below.
+    refine_engine: str = "chunked"  # chunked | dense
+    dense_min_n: int = 4096
     # BEYOND-PAPER: gain-based FM pass on the finest level (the paper's fine
     # refinement is LP-only; see EXPERIMENTS.md §Paper-validation for the
     # separate accounting).  Enabled by the "strong" preset.
@@ -97,6 +104,7 @@ class PartitionReport:
     shrink_first: float             # n_1 / n_0 after first contraction
     cycle_cuts: List[float]
     seconds: float
+    engine_stats: Optional[dict] = None  # LPEngine counters (jnp path only)
 
 
 def _detect_type(g: GraphNP) -> str:
@@ -113,11 +121,14 @@ def _f_value(cfg: PartitionerConfig, gtype: str, cycle: int, rng) -> float:
     return cfg.f_social if gtype == "social" else cfg.f_mesh
 
 
-def _cluster(g, U, iters, seed, restrict, cfg) -> np.ndarray:
-    use_numpy = cfg.engine == "numpy" or (
+def _use_numpy(g, cfg) -> bool:
+    return cfg.engine == "numpy" or (
         cfg.engine in ("auto", "dist") and g.n < cfg.numpy_below
     )
-    if use_numpy:
+
+
+def _cluster(g, U, iters, seed, restrict, cfg, eng=None) -> np.ndarray:
+    if _use_numpy(g, cfg):
         return sclap_numpy(
             g, np.arange(g.n), U=U, iters=iters, seed=seed, restrict=restrict
         ).labels
@@ -131,8 +142,9 @@ def _cluster(g, U, iters, seed, restrict, cfg) -> np.ndarray:
             order="degree", seed=seed,
         )
         return lp_cluster_distributed(plan, U=U, iters=iters, seed=seed)
-    max_nodes = max(256, -(-g.n // cfg.target_chunks))
-    max_edges = max(4096, -(-g.m // max(cfg.target_chunks // 2, 1)))
+    if eng is not None:
+        return eng.cluster(g, U=U, iters=iters, seed=seed, restrict=restrict)
+    max_nodes, max_edges = chunk_geometry(g.n, g.m, cfg.target_chunks)
     return lp_cluster(
         g, U=U, iters=iters, seed=seed, restrict=restrict,
         max_nodes=max_nodes, max_edges=max_edges,
@@ -140,9 +152,10 @@ def _cluster(g, U, iters, seed, restrict, cfg) -> np.ndarray:
 
 
 def _refine(g, labels, k, Lmax, iters, seed, cfg) -> np.ndarray:
-    use_numpy = cfg.engine == "numpy" or (
-        cfg.engine in ("auto", "dist") and g.n < cfg.numpy_below
-    )
+    """Host-path refinement (numpy / dist / legacy jnp without an engine).
+
+    The engine-owned device-resident path lives in ``_uncoarsen``."""
+    use_numpy = _use_numpy(g, cfg)
     if not use_numpy and cfg.engine == "dist":
         from .distributed_lp import build_plan, lp_refine_distributed
 
@@ -159,12 +172,61 @@ def _refine(g, labels, k, Lmax, iters, seed, cfg) -> np.ndarray:
         ).labels
         # strong gain-based search on small (coarse) levels, like KaFFPa
         return fm_refine(g, lab, k, Lmax, seed=seed)
-    max_nodes = max(256, -(-g.n // cfg.target_chunks))
-    max_edges = max(4096, -(-g.m // max(cfg.target_chunks // 2, 1)))
+    max_nodes, max_edges = chunk_geometry(g.n, g.m, cfg.target_chunks)
     return lp_refine(
         g, labels, k=k, U=Lmax, iters=iters, seed=seed,
         max_nodes=max_nodes, max_edges=max_edges,
     ).labels
+
+
+def _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng):
+    """Project + refine through the hierarchy (uncoarsening local search).
+
+    On the engine (jnp) path, labels stay device-resident across levels:
+    projection, the sweep/dense rounds, and the monotonicity-guard cut and
+    balance evaluations all run on device; only two scalars per level cross
+    back to host.  Host-path levels (numpy below ``numpy_below``, dist)
+    keep the original numpy flow.
+    """
+    lab_dev = None  # engine arena labels, device-resident once set
+    for gg_f, C in reversed(hierarchy):
+        seed_r = int(rng.integers(1 << 30))
+        eng_level = (
+            eng is not None
+            and cfg.engine in ("auto", "jnp")
+            and not _use_numpy(gg_f, cfg)
+        )
+        if eng_level:
+            lab_dev = eng.project(lab_dev if lab_dev is not None else lab, C, fill=k)
+            lab = None
+            before = eng.cut(gg_f, lab_dev)
+            if cfg.refine_engine == "dense" and gg_f.n >= cfg.dense_min_n:
+                ref = eng.refine_dense(
+                    gg_f, lab_dev, k, L, cfg.lp_iters_refine, seed_r
+                )
+            else:
+                ref = eng.refine(gg_f, lab_dev, k, L, cfg.lp_iters_refine, seed_r)
+            # monotonicity guard: chunked-synchronous LP may oscillate; keep
+            # the refined labels only if they did not worsen the cut (unless
+            # they were needed to restore feasibility)
+            bw_ref = float(eng.block_weights(gg_f, ref, k).max())
+            bw_old = float(eng.block_weights(gg_f, lab_dev, k).max())
+            if eng.cut(gg_f, ref) <= before or bw_old > L >= bw_ref:
+                lab_dev = ref
+        else:
+            if lab is None:  # leaving the device path (defensive; host levels
+                lab = np.asarray(lab_dev)  # precede device levels in practice)
+                lab_dev = None
+            lab = project_labels(lab, C)
+            before = cut_np(gg_f, lab)
+            ref = _refine(gg_f, lab, k, L, cfg.lp_iters_refine, seed_r, cfg)
+            bw_ref = np.bincount(ref, weights=gg_f.nw, minlength=k).max()
+            bw_old = np.bincount(lab, weights=gg_f.nw, minlength=k).max()
+            if cut_np(gg_f, ref) <= before or bw_old > L >= bw_ref:
+                lab = ref
+    if lab is None:
+        lab = eng.to_host(lab_dev, g.n)
+    return lab
 
 
 def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
@@ -174,6 +236,13 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
     L = lmax(g.total_node_weight, k, cfg.eps)
     gtype = cfg.graph_type if cfg.graph_type != "auto" else _detect_type(g)
     coarsest_target = cfg.coarsest_factor * k
+    # One LP engine per run: owns pack/jit caches and device-resident state
+    # for every level of every V-cycle (numpy engine needs none).
+    eng = (
+        LPEngine(g, target_chunks=cfg.target_chunks, seed=cfg.seed)
+        if cfg.engine != "numpy"
+        else None
+    )
 
     best_labels: Optional[np.ndarray] = None
     best_cut = np.inf
@@ -193,7 +262,7 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
                 break
             U = max(float(gg.nw.max()), L / f)
             seed = int(rng.integers(1 << 30))
-            clus = _cluster(gg, U, cfg.lp_iters_coarsen, seed, restrict, cfg)
+            clus = _cluster(gg, U, cfg.lp_iters_coarsen, seed, restrict, cfg, eng)
             coarse, C = contract(gg, clus)
             if coarse.n >= cfg.shrink_stall * gg.n:
                 break
@@ -225,19 +294,7 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
         lab = evolve(gg, evo)
 
         # ---------------- uncoarsening + local search ----------------
-        for gg_f, C in reversed(hierarchy):
-            lab = project_labels(lab, C)
-            before = cut_np(gg_f, lab)
-            ref = _refine(
-                gg_f, lab, k, L, cfg.lp_iters_refine, int(rng.integers(1 << 30)), cfg
-            )
-            # monotonicity guard: chunked-synchronous LP may oscillate; keep
-            # the refined labels only if they did not worsen the cut (unless
-            # they were needed to restore feasibility)
-            bw_ref = np.bincount(ref, weights=gg_f.nw, minlength=k).max()
-            bw_old = np.bincount(lab, weights=gg_f.nw, minlength=k).max()
-            if cut_np(gg_f, ref) <= before or bw_old > L >= bw_ref:
-                lab = ref
+        lab = _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng)
         if cfg.fm_finest and g.n <= cfg.fm_finest_max_n:
             from .fm import fm_refine
 
@@ -248,6 +305,8 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
         cur_labels = lab.astype(np.int64)
         if c < best_cut:
             best_cut, best_labels = c, lab
+        if eng is not None:
+            eng.evict(keep=(g,))  # coarse graphs never recur across cycles
 
     return PartitionReport(
         labels=best_labels,
@@ -260,4 +319,5 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
         shrink_first=shrink_first,
         cycle_cuts=cycle_cuts,
         seconds=time.time() - t0,
+        engine_stats=eng.stats_dict() if eng is not None else None,
     )

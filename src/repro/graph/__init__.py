@@ -10,7 +10,16 @@ from .generators import (
     rmat,
     star,
 )
-from .packing import ChunkPack, EllPack, ShardedGraph, ell_pack, pack_chunks, shard_graph
+from .packing import (
+    ChunkPack,
+    EllPack,
+    ShardedGraph,
+    chunk_geometry,
+    ell_pack,
+    pack_chunks,
+    pad_pack,
+    shard_graph,
+)
 
 __all__ = [
     "Graph",
@@ -29,7 +38,9 @@ __all__ = [
     "ChunkPack",
     "EllPack",
     "ShardedGraph",
+    "chunk_geometry",
     "pack_chunks",
+    "pad_pack",
     "ell_pack",
     "shard_graph",
 ]

@@ -14,6 +14,27 @@ happens here (numpy, once per multilevel level):
 * :func:`shard_graph` — the paper's distributed graph structure (§IV-A):
   contiguous node ranges per PE, local+ghost index spaces, interface-node
   send buffers, owner/slot maps for the bulk-synchronous label exchange.
+
+Pack invariants (relied upon by the jitted LP sweep and the LP engine):
+
+* **Slot grouping** — within every chunk, the valid arcs are emitted in
+  source-slot order: arc ``j`` belongs to the node in slot
+  ``edge_src_slot[c, j]`` and slots appear as contiguous non-decreasing
+  runs (``np.repeat(arange(cnt), degree)``).  Padded arcs trail the valid
+  region with ``edge_valid == False`` and slot 0.  This grouping is what
+  makes the sweep's fused single-key sort ``slot * A + cand`` equivalent to
+  the two-pass ``lexsort((cand, slot))``: the key's high bits preserve the
+  slot partition while the low bits order candidate labels within it.
+* **No adjacency splits** — a node's arcs never straddle chunks
+  (``max_edges`` is raised to the max block degree sum), so a chunk's move
+  decisions see every incident edge.
+* **Bucket padding** (:func:`pad_pack`) — padding chunks/slots/arcs to a
+  larger bucket shape is *semantically inert*: padded nodes carry the
+  sentinel id ``n`` with ``node_valid == False``, padded arcs carry
+  ``edge_valid == False`` and weight 0.  The LP engine
+  (``repro.core.engine``) exploits this by rounding every level's pack up
+  to shared power-of-two buckets so one compiled sweep serves the whole
+  hierarchy.
 """
 
 from __future__ import annotations
@@ -24,11 +45,32 @@ import numpy as np
 
 from .csr import GraphNP
 
-__all__ = ["ChunkPack", "EllPack", "ShardedGraph", "pack_chunks", "ell_pack", "shard_graph"]
+__all__ = [
+    "ChunkPack",
+    "EllPack",
+    "ShardedGraph",
+    "chunk_geometry",
+    "pack_chunks",
+    "pad_pack",
+    "ell_pack",
+    "shard_graph",
+]
 
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def chunk_geometry(n: int, m: int, target_chunks: int = 64) -> tuple:
+    """Per-chunk (max_nodes, max_edges) request for an (n, m)-graph.
+
+    Single source of truth for the chunk-shape floors shared by the
+    multilevel driver's legacy per-level path, the LP engine's frozen
+    geometry, and the benchmark harness — tune it here, not in callers.
+    """
+    max_nodes = max(256, -(-n // target_chunks))
+    max_edges = max(4096, -(-m // max(target_chunks // 2, 1)))
+    return max_nodes, max_edges
 
 
 @dataclass(frozen=True)
@@ -141,6 +183,33 @@ def pack_chunks(
         edge_src_slot=edge_src_slot,
         edge_valid=edge_valid,
         n=n,
+    )
+
+
+def pad_pack(pack: ChunkPack, C: int, N: int, E: int) -> ChunkPack:
+    """Pad a :class:`ChunkPack` to bucket shape ``(C, N, E)`` (no-op if equal).
+
+    Padding is semantically inert (see module docstring): extra chunks are
+    fully invalid, extra node slots carry the sentinel ``n``, extra arcs are
+    invalid with weight 0 and slot 0.  Used by the LP engine to map every
+    level of a hierarchy onto a small set of compiled sweep shapes.
+    """
+    c0, n0 = pack.nodes.shape
+    e0 = pack.edge_dst.shape[1]
+    if (c0, n0, e0) == (C, N, E):
+        return pack
+    assert C >= c0 and N >= n0 and E >= e0, (
+        f"bucket {(C, N, E)} smaller than pack {(c0, n0, e0)}"
+    )
+    pc, pn, pe = C - c0, N - n0, E - e0
+    return ChunkPack(
+        nodes=np.pad(pack.nodes, ((0, pc), (0, pn)), constant_values=pack.n),
+        node_valid=np.pad(pack.node_valid, ((0, pc), (0, pn))),
+        edge_dst=np.pad(pack.edge_dst, ((0, pc), (0, pe)), constant_values=pack.n),
+        edge_w=np.pad(pack.edge_w, ((0, pc), (0, pe))),
+        edge_src_slot=np.pad(pack.edge_src_slot, ((0, pc), (0, pe))),
+        edge_valid=np.pad(pack.edge_valid, ((0, pc), (0, pe))),
+        n=pack.n,
     )
 
 

@@ -1,5 +1,11 @@
 from .lp_score import lp_score_rows
-from .ops import lp_refine_dense_round, node_scores, pad_k
+from .ops import (
+    dense_eligibility,
+    dense_round_device,
+    lp_refine_dense_round,
+    node_scores,
+    pad_k,
+)
 from .ref import lp_score_rows_ref, node_scores_ref
 
 __all__ = [
@@ -8,5 +14,7 @@ __all__ = [
     "node_scores",
     "node_scores_ref",
     "lp_refine_dense_round",
+    "dense_round_device",
+    "dense_eligibility",
     "pad_k",
 ]

@@ -1,5 +1,12 @@
 """Jitted wrapper: node-level block scores + a synchronous dense refinement
 round built on the Pallas kernel (the beyond-paper "SpMM refinement" path).
+
+As of PR 1 this path is wired into the multilevel pipeline: with
+``PartitionerConfig(refine_engine="dense")`` the LP engine
+(``repro.core.engine``) calls :func:`dense_round_device` once per refinement
+iteration at fine levels, reusing a per-level cached ELL pack and keeping
+labels device-resident between rounds.  The chunked-sequential sweep remains
+the fallback below the size threshold.
 """
 
 from __future__ import annotations
@@ -16,21 +23,22 @@ from ...graph.packing import EllPack, ell_pack
 from .lp_score import LANE, TILE_R, lp_score_rows
 from .ref import lp_score_rows_ref
 
-__all__ = ["node_scores", "lp_refine_dense_round", "pad_k"]
+__all__ = [
+    "node_scores",
+    "lp_refine_dense_round",
+    "dense_round_device",
+    "dense_eligibility",
+    "pad_k",
+]
 
 
 def pad_k(k: int) -> int:
     return max(LANE, ((k + LANE - 1) // LANE) * LANE)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "n", "use_pallas", "interpret"))
-def _node_scores_impl(
-    ell_dst, ell_w, row_node, labels_ext, *, k: int, n: int, use_pallas: bool,
-    interpret: bool,
-):
+def _row_scores(ell_dst, ell_w, row_node, labels_ext, *, k, n, use_pallas, interpret):
+    """Shared body: ELL row scores segment-summed into (n, k) node scores."""
     k_p = pad_k(k)
-    from .lp_score import TILE_R
-
     R = ell_dst.shape[0]
     if R % TILE_R:
         pad = TILE_R - R % TILE_R
@@ -46,6 +54,17 @@ def _node_scores_impl(
     seg = jnp.minimum(row_node, n)  # padded rows -> dummy slot n
     out = jnp.zeros((n + 1, k_p), jnp.float32).at[seg].add(row_scores)
     return out[:n, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n", "use_pallas", "interpret"))
+def _node_scores_impl(
+    ell_dst, ell_w, row_node, labels_ext, *, k: int, n: int, use_pallas: bool,
+    interpret: bool,
+):
+    return _row_scores(
+        ell_dst, ell_w, row_node, labels_ext,
+        k=k, n=n, use_pallas=use_pallas, interpret=interpret,
+    )
 
 
 def node_scores(
@@ -74,6 +93,82 @@ def node_scores(
     )
 
 
+def dense_eligibility(S, lab, bw, nw, U, k: int):
+    """Vectorized SCLaP refine-mode eligibility — exact mirror of the
+    sequential oracle (``sclap_numpy``):
+
+      * node in an overloaded block: may move to any *connected* block that
+        fits, own block excluded ("must leave");
+      * otherwise: any connected block that fits, or its own block.
+
+    Connectivity (``S > 0``) applies in both branches because the oracle only
+    ever considers neighbouring blocks as candidates.  Note the explicit
+    parenthesisation: ``&`` binds tighter than ``|``, which previously turned
+    this rule into ``fits | (own & ~overloaded)`` — letting overloaded nodes
+    "stay put" and non-fitting moves through (regression-tested in
+    tests/test_kernels.py::test_dense_eligibility_matches_sclap_numpy).
+    """
+    own = jnp.arange(k, dtype=lab.dtype)[None, :] == lab[:, None]
+    fits = bw[None, :] + nw[:, None] <= U
+    overloaded = (bw[lab] > U)[:, None]
+    return (S > 0) & jnp.where(overloaded, fits & ~own, fits | own)
+
+
+def _dense_round_body(
+    ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction,
+    *, k, n, use_pallas, interpret,
+):
+    labels_ext = jnp.concatenate([lab, jnp.array([k], jnp.int32)])
+    S = _row_scores(
+        ell_dst, ell_w, row_node, labels_ext,
+        k=k, n=n, use_pallas=use_pallas, interpret=interpret,
+    )
+    bw = jnp.zeros((k,), jnp.float32).at[lab].add(nw)
+    key = jax.random.PRNGKey(seed)
+    own_score = jnp.take_along_axis(S, lab[:, None], axis=1)[:, 0]
+    overloaded = bw[lab] > U
+    eligible = dense_eligibility(S, lab, bw, nw, U, k)
+    masked = jnp.where(eligible, S + jax.random.uniform(key, S.shape) * 0.49, -jnp.inf)
+    best = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    has = jnp.isfinite(jnp.max(masked, axis=1))
+    gate = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) < move_fraction
+    # strict improvement only: cut-neutral moves oscillate under synchronous
+    # updates (stale block weights), so they are rejected
+    improve = jnp.take_along_axis(S, best[:, None], axis=1)[:, 0] > own_score
+    # overloaded blocks shed only their EXCESS in expectation — a synchronous
+    # "everyone leaves" stampede would just overload the destination
+    excess = jnp.clip((bw[lab] - U) / jnp.maximum(bw[lab], 1.0), 0.0, 1.0)
+    ov_gate = jax.random.uniform(jax.random.fold_in(key, 2), (n,)) < 1.5 * excess
+    return jnp.where(has & ((gate & improve) | (overloaded & ov_gate)), best, lab)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n", "use_pallas", "interpret"))
+def dense_round_device(
+    ell_dst,            # (R, W) int32 — cached device ELL pack
+    ell_w,              # (R, W) f32
+    row_node,           # (R,)  int32
+    lab,                # (n,)  int32 — device-resident labels
+    nw,                 # (n,)  f32
+    U,                  # scalar f32
+    seed,               # scalar int32
+    move_fraction,      # scalar f32
+    *,
+    k: int,
+    n: int,
+    use_pallas: bool,
+    interpret: bool,
+):
+    """One fully synchronous dense LP round, device arrays in and out.
+
+    The LP engine iterates this with a per-level cached ELL pack, so a
+    refinement pass is ``iters`` kernel launches with zero host round-trips.
+    """
+    return _dense_round_body(
+        ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction,
+        k=k, n=n, use_pallas=use_pallas, interpret=interpret,
+    )
+
+
 def lp_refine_dense_round(
     g: GraphNP,
     labels: np.ndarray,
@@ -89,29 +184,23 @@ def lp_refine_dense_round(
 
     All nodes see consistent block weights; a random ``move_fraction`` of
     the proposed moves is applied per round (the standard damping that makes
-    synchronous LP converge).  This is the maximally-parallel TPU path —
-    one kernel launch + argmax instead of a sequential sweep.
+    synchronous LP converge).  Host convenience wrapper around
+    :func:`dense_round_device`.
     """
-    S = node_scores(g, labels, k, ell=ell, use_pallas=use_pallas, interpret=interpret)
-    lab = jnp.asarray(labels, jnp.int32)
-    bw = jnp.zeros((k,), jnp.float32).at[lab].add(jnp.asarray(g.nw))
-    nw = jnp.asarray(g.nw)
-    key = jax.random.PRNGKey(seed)
-    fits = bw[None, :] + nw[:, None] <= U
-    own_score = jnp.take_along_axis(S, lab[:, None], axis=1)[:, 0]
-    overloaded = bw[lab] > U
-    eligible = fits | (jnp.arange(k)[None, :] == lab[:, None]) & ~overloaded[:, None]
-    eligible &= S > 0
-    masked = jnp.where(eligible, S + jax.random.uniform(key, S.shape) * 0.49, -jnp.inf)
-    best = jnp.argmax(masked, axis=1).astype(jnp.int32)
-    has = jnp.isfinite(jnp.max(masked, axis=1))
-    gate = jax.random.uniform(jax.random.fold_in(key, 1), (g.n,)) < move_fraction
-    # strict improvement only: cut-neutral moves oscillate under synchronous
-    # updates (stale block weights), so they are rejected
-    improve = jnp.take_along_axis(S, best[:, None], axis=1)[:, 0] > own_score
-    # overloaded blocks shed only their EXCESS in expectation — a synchronous
-    # "everyone leaves" stampede would just overload the destination
-    excess = jnp.clip((bw[lab] - U) / jnp.maximum(bw[lab], 1.0), 0.0, 1.0)
-    ov_gate = jax.random.uniform(jax.random.fold_in(key, 2), (g.n,)) < 1.5 * excess
-    new = jnp.where(has & ((gate & improve) | (overloaded & ov_gate)), best, lab)
+    if ell is None:
+        ell = ell_pack(g, width=128, tile_rows=TILE_R)
+    new = dense_round_device(
+        jnp.asarray(ell.dst),
+        jnp.asarray(ell.w),
+        jnp.asarray(ell.row_node),
+        jnp.asarray(labels, jnp.int32),
+        jnp.asarray(g.nw, jnp.float32),
+        jnp.float32(U),
+        jnp.int32(seed & 0x7FFFFFFF),
+        jnp.float32(move_fraction),
+        k=k,
+        n=g.n,
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
     return np.asarray(new)

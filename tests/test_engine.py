@@ -1,0 +1,114 @@
+"""LP engine: shape-bucketed jit caching, pack reuse, padding parity,
+device-resident refinement, and the dense (Pallas) refinement wiring."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import LPEngine, PartitionerConfig, partition
+from repro.core.label_propagation import lp_cluster, make_order
+from repro.core.metrics import cut_np, lmax
+from repro.graph import barabasi_albert, mesh2d, pack_chunks, planted_partition
+
+
+def test_compile_count_bounded_across_vcycles():
+    """The headline cache property: a 2-V-cycle, multi-level partition() run
+    dispatches many sweeps but compiles _lp_sweep at most once per
+    (bucket, statics) combination — <= 4 total, instead of one compile per
+    level x cycle as the pre-engine driver did."""
+    g = barabasi_albert(4096, 5, seed=1)
+    cfg = PartitionerConfig(
+        k=2, preset="fast", coarsest_factor=20, seed=0, engine="jnp"
+    )
+    rep = partition(g, cfg)
+    st = rep.engine_stats
+    assert st is not None
+    # at least 3 levels per cycle, 2 cycles, cluster+refine at every level
+    assert st["sweep_calls"] >= 8
+    assert st["sweep_compiles"] <= 4
+    assert st["sweep_compiles"] <= st["bucket_count"] * 3  # statics combos
+    # V-cycle 2 must reuse V-cycle 1's packs for the shared (finest) graph
+    assert st["pack_hits"] >= 1
+    assert rep.feasible
+
+
+def test_bucketed_pack_parity_with_exact_shapes():
+    """Padding packs/arenas to power-of-two buckets must not change a single
+    move decision: the tie-break jitter is a stateless hash of integer
+    coordinates, never a function of array shapes."""
+    g = planted_partition(2048, 8, p_in=0.04, p_out=0.001, seed=0)
+    U, iters, seed = 60.0, 3, 7
+    eng = LPEngine(g, seed=0)
+    n_cap, e_cap, blk = eng.N, eng._e_request, eng.pack_block  # pre-raise floors
+    lab_bucketed = eng.cluster(g, U=U, iters=iters, seed=seed)
+    # exact-shape path: same traversal order, same sweep seed, no padding
+    pack = pack_chunks(
+        g, make_order(g, "degree", 0), max_nodes=n_cap, max_edges=e_cap, block=blk
+    )
+    # the engine genuinely padded something relative to the exact path
+    assert eng.A > g.n + 1 or eng.C_bucket > pack.nodes.shape[0]
+    lab_exact = lp_cluster(g, U=U, iters=iters, seed=seed, pack=pack).labels
+    np.testing.assert_array_equal(lab_bucketed, lab_exact)
+
+
+def test_pack_cache_reuse_is_by_identity():
+    """Same graph object -> cache hit; a different graph object (even of the
+    same shape) -> rebuild.  Guards against stale packs after contraction."""
+    g1 = mesh2d(32)
+    g2 = mesh2d(32)
+    eng = LPEngine(g1, seed=0)
+    eng.cluster(g1, U=50.0, iters=1, seed=0)
+    builds = eng.stats.pack_builds
+    eng.cluster(g1, U=50.0, iters=1, seed=1)
+    assert eng.stats.pack_builds == builds  # hit
+    assert eng.stats.pack_hits >= 1
+    eng.cluster(g2, U=50.0, iters=1, seed=0)
+    assert eng.stats.pack_builds == builds + 1  # distinct object -> rebuild
+
+
+def test_engine_refine_device_resident_recovers_split():
+    """engine.refine takes/returns device arena labels and matches the
+    quality of the host-wrapper path on the noisy-bisection task."""
+    side = 48
+    g = mesh2d(side)
+    truth = (np.arange(g.n) // side >= side // 2).astype(np.int32)
+    rng = np.random.default_rng(1)
+    noisy = truth.copy()
+    noisy[rng.random(g.n) < 0.15] ^= 1
+    L = lmax(g.n, 2, 0.03)
+    eng = LPEngine(g, seed=0)
+    lab_dev = eng.refine(g, noisy, k=2, U=L, iters=6, seed=3)
+    assert isinstance(lab_dev, jnp.ndarray) and lab_dev.shape[0] == eng.A
+    # chain a second device-resident pass without any host round-trip
+    lab_dev = eng.refine(g, lab_dev, k=2, U=L, iters=2, seed=4)
+    lab = eng.to_host(lab_dev, g.n)
+    assert cut_np(g, lab) < cut_np(g, noisy) / 5
+    bw = np.bincount(lab, weights=g.nw, minlength=2)
+    assert bw.max() <= L * 1.05
+
+
+def test_dense_refine_engine_end_to_end():
+    """partition(refine_engine='dense') — the Pallas dense path wired into
+    the pipeline — stays feasible and within 10% of the chunked engine."""
+    g = planted_partition(4096, 8, p_in=0.02, p_out=0.0005, seed=2)
+    base = PartitionerConfig(k=2, preset="fast", coarsest_factor=100, seed=0)
+    dense = PartitionerConfig(
+        k=2, preset="fast", coarsest_factor=100, seed=0,
+        refine_engine="dense", dense_min_n=2048,
+    )
+    rc = partition(g, base)
+    rd = partition(g, dense)
+    assert rd.feasible
+    assert rd.engine_stats["dense_rounds"] > 0
+    assert rd.cut <= rc.cut * 1.10
+
+
+def test_engine_project_matches_host_projection():
+    g = mesh2d(16)
+    eng = LPEngine(g, seed=0)
+    C = np.random.default_rng(0).integers(0, 7, g.n).astype(np.int32)
+    coarse = np.array([0, 1, 0, 1, 1, 0, 1], dtype=np.int32)
+    dev = eng.project(coarse, C, fill=2)
+    assert dev.shape[0] == eng.A
+    np.testing.assert_array_equal(np.asarray(dev[: g.n]), coarse[C])

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 from repro.core.metrics import lmax, cut_np
 from repro.graph import ell_pack, mesh2d, rmat, star
 from repro.kernels.lp_score import (
-    lp_refine_dense_round, node_scores, node_scores_ref, pad_k,
+    dense_eligibility, lp_refine_dense_round, node_scores, node_scores_ref,
+    pad_k,
 )
 
 
@@ -77,3 +78,42 @@ def test_dense_refine_round_converges():
 
 def test_pad_k():
     assert pad_k(2) == 128 and pad_k(128) == 128 and pad_k(129) == 256
+
+
+def test_dense_eligibility_matches_sclap_numpy():
+    """Regression for the operator-precedence hazard in the dense round's
+    eligibility (`fits | own & ~overloaded` parsed as
+    `fits | (own & ~overloaded)`): pin the vectorized rule to the sequential
+    oracle's (sclap_numpy) branch structure, node by node, block by block."""
+    g = rmat(9, 8, seed=5)
+    k = 4
+    rng = np.random.default_rng(3)
+    # skewed labels so that at least one block is overloaded under U
+    lab = np.where(rng.random(g.n) < 0.55, 0, rng.integers(0, k, g.n))
+    lab = lab.astype(np.int32)
+    bw = np.bincount(lab, weights=g.nw, minlength=k)[:k]
+    U = float(np.sort(bw)[-2] + 1.0)  # biggest block overloaded, rest fit-ish
+    assert (bw > U).any() and (bw <= U).any()
+
+    S = np.asarray(node_scores(g, lab, k, use_pallas=False))
+    got = np.asarray(
+        dense_eligibility(
+            jnp.asarray(S), jnp.asarray(lab),
+            jnp.asarray(bw, jnp.float32), jnp.asarray(g.nw), jnp.float32(U), k,
+        )
+    )
+
+    # oracle: exactly sclap_numpy's refine-mode candidate rule
+    want = np.zeros((g.n, k), dtype=bool)
+    for v in range(g.n):
+        nbr = g.indices[g.indptr[v]: g.indptr[v + 1]]
+        cand = np.unique(lab[nbr])  # only connected blocks are candidates
+        conn = S[v, cand]
+        fits = bw[cand] + g.nw[v] <= U
+        own = lab[v]
+        if bw[own] > U:
+            elig = fits & (cand != own)
+        else:
+            elig = (conn > 0) & (fits | (cand == own))
+        want[v, cand[elig]] = True
+    np.testing.assert_array_equal(got, want)

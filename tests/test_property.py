@@ -1,6 +1,10 @@
 """Hypothesis property tests for the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import contract, project_labels, repair_balance

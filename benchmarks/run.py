@@ -20,6 +20,10 @@ at laptop scale, preserving the paper's *relative* claims:
                          engine) + steady-state sweep us/iter
   dense_refine        -> PR 1: chunked vs Pallas-dense refinement engine on
                          the rmat-web graph (cut parity + time)
+  coarsen_hot         -> PR 2: device-resident contraction (cluster ->
+                         contract -> pack chained on device) vs the host
+                         contract() round-trip — steady-state per-level
+                         time, compile counts, host<->device transfer bytes
 
 Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
 With ``--json PATH``, tables additionally emit machine-readable rows
@@ -386,6 +390,168 @@ def dense_refine():
     ]
 
 
+def coarsen_hot():
+    """PR 2: device-resident coarsening vs the host contract() round-trip.
+
+    Steady state (warm jit caches, packs built) on the ba-16384 graph's
+    finest level:
+
+      * device row — ``LPEngine.contract``: relabel + quotient dedup + CSR
+        rebuild as one compiled executable; only (n_c, m_c, nwmax) sync.
+      * host row — the seed-style flow: download the cluster labels, numpy
+        ``contract()``, then re-upload the coarse CSR (indices/ew/nw +
+        arc sources) as the next level's device arrays would require.
+
+    Also reports whole-partition engine counters: contraction compile count
+    vs bucket count and total host<->device traffic for the device vs host
+    coarsening pipelines.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import LPEngine, PartitionerConfig, partition
+    from repro.core.contraction import contract
+    from repro.core.metrics import lmax
+    from repro.graph import barabasi_albert
+
+    rows = []
+    g = barabasi_albert(16384, 6, seed=3)
+
+    # ---- steady-state per-level coarsening: device vs host round-trip.
+    # One LEVEL of the seed-style flow is: download the cluster labels,
+    # build the quotient graph on host (numpy contract), re-upload the
+    # coarse CSR + arc sources (the engine arena), and REPACK the coarse
+    # graph twice — degree order for its clustering sweep and random order
+    # for its refinement sweep — uploading both padded packs.  The device
+    # path replaces all of it with eng.contract (scalars-only sync) plus
+    # two device pack gathers.  Each path runs in its own loop (as in the
+    # real pipeline — interleaving cross-pollutes the CPU caches),
+    # alternating in rounds so machine drift cancels; contract-only times
+    # are recorded alongside the full-level times.
+    from repro.graph.packing import pack_chunks, pad_pack
+    from repro.core.label_propagation import make_order
+
+    eng = LPEngine(g, seed=0)
+    L = lmax(g.n, 2, 0.03)
+    U = max(1.0, L / 14)
+    lab_dev = eng.cluster(g, U=U, iters=3, seed=1)
+    lab_dev.block_until_ready()
+    # warmup both paths (compile / numpy caches)
+    cdev, _ = eng.contract(g, lab_dev)
+    for mode in ("degree", "random"):
+        eng._pack_dev(cdev, mode).edge_w.block_until_ready()
+    contract(g, np.asarray(lab_dev))
+    reps, rounds = 7, 3
+    t_d, t_h, t_dc, t_hc = [], [], [], []
+    for rnd in range(rounds):
+        for r in range(reps):
+            t0 = time.time()
+            cdev, _ = eng.contract(g, lab_dev)   # syncs the level scalars
+            cdev.ew.block_until_ready()
+            t_dc.append(time.time() - t0)
+            for mode in ("degree", "random"):
+                eng._pack_dev(cdev, mode).edge_w.block_until_ready()
+            t_d.append(time.time() - t0)
+            for mode in ("degree", "random"):   # each rep's cdev is a fresh
+                eng._drop_single_use(cdev, mode)  # object: don't grow _packs
+        for r in range(reps):
+            t0 = time.time()
+            lab_host = np.asarray(lab_dev)                    # device -> host
+            ch, _ = contract(g, lab_host)                     # numpy quotient
+            up = [jnp.asarray(ch.indices), jnp.asarray(ch.ew),
+                  jnp.asarray(ch.nw), jnp.asarray(ch.arc_sources())]
+            for a in up:                                      # host -> device
+                a.block_until_ready()
+            t_hc.append(time.time() - t0)
+            for mode in ("degree", "random"):                 # seed-style repack
+                o = make_order(ch, mode, 0)
+                pk = pack_chunks(ch, o, max_nodes=eng.N,
+                                 max_edges=max(eng._e_request, eng.E_floor),
+                                 block=eng.pack_block)
+                # same live-chunk pow2 bucket the device pack gather uses
+                Cg = 1 << max(0, pk.num_chunks - 1).bit_length()
+                pp = pad_pack(pk, Cg, eng.N, eng.E_floor)
+                for x in (pp.nodes, pp.node_valid, pp.edge_dst, pp.edge_w,
+                          pp.edge_src_slot, pp.edge_valid):
+                    jnp.asarray(x).block_until_ready()
+            t_h.append(time.time() - t0)
+    us_d = min(t_d) * 1e6
+    us_h = min(t_h) * 1e6
+    med_d = sorted(t_d)[len(t_d) // 2] * 1e6
+    med_h = sorted(t_h)[len(t_h) // 2] * 1e6
+    print(f"steady_state_level_us_device,{us_d:.0f}")
+    print(f"steady_state_level_us_host_roundtrip,{us_h:.0f}")
+    print(f"steady_state_level_us_device_median,{med_d:.0f}")
+    print(f"steady_state_level_us_host_roundtrip_median,{med_h:.0f}")
+    print(f"contract_only_us_device,{min(t_dc) * 1e6:.0f}")
+    print(f"contract_only_us_host_roundtrip,{min(t_hc) * 1e6:.0f}")
+    dev_bytes = 16 + (cdev.n + 1) * 8   # scalars + the pack plan's indptr
+    print(f"# speedup x{us_h / max(us_d, 1):.2f} min / "
+          f"x{med_h / max(med_d, 1):.2f} median (coarse level: n_c={cdev.n}, "
+          f"m_c={cdev.m}); device path downloads {dev_bytes} bytes/level "
+          f"(scalars + O(n_c) chunk-plan degrees) vs "
+          f"~{g.n * 4 + cdev.m * 12 + cdev.n * 4} bytes round-tripped")
+    rows.append(dict(
+        name="coarsen_hot_steady",
+        us_per_call=us_d,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, n_c=cdev.n, m_c=cdev.m,
+            repeats=reps * rounds,
+            us_device=us_d, us_host_roundtrip=us_h,
+            us_device_median=med_d, us_host_roundtrip_median=med_h,
+            speedup=us_h / max(us_d, 1),
+            speedup_median=med_h / max(med_d, 1),
+            contract_only_us_device=min(t_dc) * 1e6,
+            contract_only_us_host_roundtrip=min(t_hc) * 1e6,
+            d2h_bytes_per_level_device=dev_bytes,
+            roundtrip_bytes_host=g.n * 4 + cdev.m * 12 + cdev.n * 4,
+            contract_compiles=eng.stats.contract_compiles,
+            contract_buckets=eng.stats.contract_bucket_count,
+        ),
+    ))
+    del eng
+
+    # ---- whole-pipeline comparison (fused device path vs host fallback),
+    # production config (engine="auto"): engine levels device-coarsen,
+    # sub-threshold levels hand off to the numpy engine via lazy to_host
+    base = dict(k=2, preset="fast", coarsest_factor=20, seed=0)
+    t0 = time.time()
+    rep_d = partition(g, PartitionerConfig(**base))
+    t_dev = time.time() - t0
+    st_d = rep_d.engine_stats
+    t0 = time.time()
+    rep_h = partition(g, PartitionerConfig(**base, coarsen_engine="host"))
+    t_host = time.time() - t0
+    st_h = rep_h.engine_stats
+    print("metric,device,host")
+    print(f"partition_s,{t_dev:.1f},{t_host:.1f}")
+    print(f"cut,{rep_d.cut:.0f},{rep_h.cut:.0f}")
+    print(f"contract_calls,{st_d['contract_calls']},{st_h['contract_calls']}")
+    print(f"contract_compiles,{st_d['contract_compiles']},-")
+    print(f"contract_buckets,{st_d['contract_bucket_count']},-")
+    print(f"gather_builds,{st_d['gather_builds']},{st_h['gather_builds']}")
+    print(f"h2d_bytes,{st_d['h2d_bytes']},{st_h['h2d_bytes']}")
+    print(f"d2h_bytes,{st_d['d2h_bytes']},{st_h['d2h_bytes']}")
+    rows.append(dict(
+        name="coarsen_hot_partition",
+        us_per_call=t_dev * 1e6,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m,
+            cut_device=rep_d.cut, cut_host=rep_h.cut,
+            labels_identical=bool(np.array_equal(rep_d.labels, rep_h.labels)),
+            partition_s_device=t_dev, partition_s_host=t_host,
+            levels=len(rep_d.level_sizes),
+            contract_calls=st_d["contract_calls"],
+            contract_compiles=st_d["contract_compiles"],
+            contract_buckets=st_d["contract_bucket_count"],
+            gather_builds=st_d["gather_builds"],
+            gather_compiles=st_d["gather_compiles"],
+            h2d_bytes_device=st_d["h2d_bytes"], h2d_bytes_host=st_h["h2d_bytes"],
+            d2h_bytes_device=st_d["d2h_bytes"], d2h_bytes_host=st_h["d2h_bytes"],
+        ),
+    ))
+    return rows
+
+
 TABLES = {
     "table2_quality": table2_quality,
     "table3_k32": table3_k32,
@@ -398,6 +564,7 @@ TABLES = {
     "kernel_bench": kernel_bench,
     "lp_sweep_hot": lp_sweep_hot,
     "dense_refine": dense_refine,
+    "coarsen_hot": coarsen_hot,
 }
 
 

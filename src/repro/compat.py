@@ -1,0 +1,33 @@
+"""Version-compat shims for jax API drift.
+
+The codebase targets current jax (``jax.shard_map``, ``check_vma``); the
+container pins 0.4.x where shard_map still lives in ``jax.experimental``
+with the replication check named ``check_rep``.  Route every shard_map
+construction through :func:`shard_map` so both spellings work.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication/VMA checks off, on any jax."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False,
+            )
+        except TypeError:  # top-level shard_map that predates check_vma
+            return jax.shard_map(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=False,
+            )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

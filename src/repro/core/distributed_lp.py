@@ -29,6 +29,7 @@ the host, mirroring the paper's level-synchronous structure.
 from __future__ import annotations
 
 import functools
+import weakref
 from dataclasses import dataclass
 from typing import Optional
 
@@ -38,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map as shard_map_compat
 from ..graph.csr import GraphNP
 from ..graph.packing import ShardedGraph, pack_chunks, shard_graph
 
@@ -66,6 +68,17 @@ class DistLPPlan:
     ch_node_valid: np.ndarray  # (P, C, Nc) bool
 
 
+# Plan cache: sharding + per-shard packing is a pure function of
+# (graph, shard geometry, order mode, seed-epoch), and the multilevel dist
+# engine used to recompute it on EVERY lp_cluster_distributed /
+# lp_refine_distributed call.  Keyed by graph identity with a WEAK graph
+# reference (the cache must not pin multi-GB graphs alive) and a small FIFO
+# bound: coarse graphs are rebuilt per V-cycle, so only the finest graph's
+# plans re-hit, and entries die with their graph.
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_CAP = 8
+
+
 def build_plan(
     g: GraphNP,
     P_shards: int,
@@ -73,7 +86,33 @@ def build_plan(
     order: str = "degree",
     seed: int = 0,
 ) -> DistLPPlan:
-    """Shard the graph and pack each shard's local sweep into chunks."""
+    """Shard the graph and pack each shard's local sweep into chunks.
+
+    Cached per ``(graph, P, chunks_per_shard, order, seed)`` — pass the
+    run's seed-epoch (not a per-sweep seed) as ``seed`` to reuse plans
+    across calls; traversal re-randomization belongs to the sweep seed.
+    """
+    key = (id(g), P_shards, chunks_per_shard, order, seed)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0]() is g:
+        _PLAN_CACHE[key] = _PLAN_CACHE.pop(key)   # LRU refresh: the finest
+        return hit[1]                             # graph's plans re-hit most
+    plan = _build_plan_impl(g, P_shards, chunks_per_shard, order, seed)
+    for k in [k for k, v in _PLAN_CACHE.items() if v[0]() is None]:
+        del _PLAN_CACHE[k]          # entries whose graph was collected
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_CAP:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    _PLAN_CACHE[key] = (weakref.ref(g), plan)
+    return plan
+
+
+def _build_plan_impl(
+    g: GraphNP,
+    P_shards: int,
+    chunks_per_shard: int,
+    order: str,
+    seed: int,
+) -> DistLPPlan:
     sg = shard_graph(g, P_shards)
     rng = np.random.default_rng(seed)
     packs = []
@@ -341,12 +380,11 @@ def _run_distributed(
         )
         return out[0][None], out[1][None], out[2]
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(spec,) * 15 + (P(),),
         out_specs=(spec, spec, P()),
-        check_vma=False,
     )
     key = jax.random.PRNGKey(seed)
     out_ll, out_lg, moves = jax.jit(shmapped)(
@@ -426,11 +464,10 @@ def contract_distributed(plan: DistLPPlan, labels_global: np.ndarray):
         )
         return cu2[None], cv2[None], w2[None], v2[None]
 
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(shard_map_compat(
         body, mesh=mesh,
         in_specs=(spec,) * 6,
         out_specs=(spec,) * 4,
-        check_vma=False,
     ))(
         jnp.asarray(sg.indptr), jnp.asarray(sg.indices), jnp.asarray(sg.ew),
         jnp.asarray(sg.m_local), jnp.asarray(cl), jnp.asarray(cg),

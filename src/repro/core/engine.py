@@ -28,7 +28,17 @@ for one ``partition()`` run instead:
 * **Dense fast path** — ``refine_dense`` iterates the Pallas-backed
   synchronous round (``repro.kernels.lp_score.dense_round_device``) on a
   cached ELL pack: one kernel launch per iteration instead of a sequential
-  chunk walk.
+  chunk walk.  ELL packs are padded to power-of-two row/node buckets so the
+  dense round also compiles once per bucket, not once per level.
+* **Device-resident coarsening** — ``contract`` runs the whole §IV-C
+  quotient-graph construction on device (``contract_device``): relabel,
+  node-weight segment-sum, arc dedup, and CSR rebuild in one bucketed
+  executable.  The coarse graph stays on device as a
+  :class:`~repro.graph.csr.GraphDev` handle whose adjacency feeds the next
+  level's pack *gather* (``gather_pack_device``) directly — only the O(n)
+  chunk plan is computed on host, so ``cluster -> contract -> next-level
+  pack`` chains device-to-device and only the ``(n_c, m_c, max nw)``
+  scalars cross per level.
 
 Engine state is per-``partition()``-run; it is not thread-safe and holds
 strong references to every level's graph until released.
@@ -44,22 +54,45 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..graph.csr import GraphNP
-from ..graph.packing import chunk_geometry, ell_pack, pack_chunks, pad_pack
+from ..graph.csr import GraphDev, GraphNP
+from ..graph.packing import (
+    chunk_geometry,
+    ell_pack,
+    gather_pack_device,
+    layout_nodes,
+    pack_chunks,
+    pad_pack,
+    plan_chunks,
+)
+from .contraction import CoarseMap, contract_device
 from .label_propagation import _lp_sweep, make_order
 
 __all__ = ["LPEngine", "EngineStats"]
+
+AnyGraph = Union[GraphNP, GraphDev]
 
 
 def _pow2(x: int) -> int:
     return 1 << max(0, int(x) - 1).bit_length()
 
 
+def _mbucket(m: int) -> int:
+    """Arc-axis bucket: pow2 below 16384, then 16384-arc rungs.
+
+    The contraction's value-only key sort is the per-level critical path and
+    scales with the PADDED arc count, so the hot (finest) level gets a tight
+    bucket (<= 8% padding) instead of the up-to-2x tax of pure pow2; small
+    coarse levels keep pow2 rungs so the bucket count stays O(log m)."""
+    if m <= 16384:
+        return _pow2(max(m, 8))
+    return -(-m // 16384) * 16384
+
+
 @dataclass
 class _DevicePack:
-    """A chunk pack padded to bucket shape, uploaded once."""
+    """A chunk pack padded to bucket shape, uploaded (or gathered) once."""
 
-    graph: GraphNP          # strong ref: pins id(graph) for cache identity
+    graph: AnyGraph         # strong ref: pins id(graph) for cache identity
     nodes: jax.Array
     node_valid: jax.Array
     edge_dst: jax.Array
@@ -74,21 +107,21 @@ class _DevicePack:
 class _Arena:
     """Per-graph device arrays shared by every sweep over that graph."""
 
-    graph: GraphNP
+    graph: AnyGraph
     nw_arena: jax.Array     # (A,) f32 — node weights, 0 beyond n
     cluster_w: jax.Array    # (A,) f32 — per-node weights, +inf beyond n
-    src: jax.Array          # (m,) int32 — arc sources (for cut/guard)
-    dst: jax.Array          # (m,) int32
-    ew: jax.Array           # (m,) f32
+    src: jax.Array          # (>= m,) int32 — arc sources (padding carries w 0)
+    dst: jax.Array          # (>= m,) int32
+    ew: jax.Array           # (>= m,) f32
 
 
 @dataclass
 class _DeviceEll:
-    graph: GraphNP
-    dst: jax.Array
-    w: jax.Array
-    row_node: jax.Array
-    nw: jax.Array           # (n,) f32
+    graph: AnyGraph
+    dst: jax.Array          # (Rb, W) int32 — rows padded to a pow2 bucket
+    w: jax.Array            # (Rb, W) f32
+    row_node: jax.Array     # (Rb,) int32, sentinel n
+    nb: int                 # node bucket: pow2(n + 1) <= arena size
 
 
 @dataclass
@@ -100,11 +133,24 @@ class EngineStats:
     pack_builds: int = 0
     pack_hits: int = 0
     dense_rounds: int = 0
+    dense_compiles: int = 0         # distinct dense-round bucket shapes
+    contract_calls: int = 0
+    contract_compiles: int = 0      # distinct (Nb, Mb) contraction buckets
+    gather_builds: int = 0          # device pack gathers (GraphDev levels)
+    gather_compiles: int = 0        # distinct gather shape combinations
+    h2d_bytes: int = 0              # host->device uploads the engine issued
+    d2h_bytes: int = 0              # device->host downloads (scalars + lazy
+                                    # materializations of GraphDev/CoarseMap)
     buckets: set = field(default_factory=set)   # distinct (C, N, E, A, W)
+    contract_buckets: set = field(default_factory=set)  # distinct (Nb, Mb)
 
     @property
     def bucket_count(self) -> int:
         return len(self.buckets)
+
+    @property
+    def contract_bucket_count(self) -> int:
+        return len(self.contract_buckets)
 
 
 class LPEngine:
@@ -147,8 +193,11 @@ class LPEngine:
         self._packs: Dict[Tuple[int, str], _DevicePack] = {}
         self._arenas: Dict[int, _Arena] = {}
         self._ells: Dict[int, _DeviceEll] = {}
+        self._cin: Dict[int, tuple] = {}    # padded contraction inputs (GraphNP)
         self._iota_cache: Optional[jax.Array] = None  # lazy: dist path may never sweep
         self._compile_keys = set()
+        self._gather_keys = set()
+        self._dense_keys = set()
 
     @property
     def _iota(self) -> jax.Array:
@@ -158,27 +207,44 @@ class LPEngine:
 
     # ------------------------------------------------------------------ caches
 
-    def _arena(self, g: GraphNP) -> _Arena:
+    def _arena(self, g: AnyGraph) -> _Arena:
         hit = self._arenas.get(id(g))
         if hit is not None and hit.graph is g:
             return hit
         n = g.n
-        nw = np.zeros(self.A, np.float32)
-        nw[:n] = g.nw
-        cw = np.full(self.A, np.inf, np.float32)
-        cw[:n] = g.nw
-        ar = _Arena(
-            graph=g,
-            nw_arena=jnp.asarray(nw),
-            cluster_w=jnp.asarray(cw),
-            src=jnp.asarray(g.arc_sources(), dtype=jnp.int32),
-            dst=jnp.asarray(g.indices, dtype=jnp.int32),
-            ew=jnp.asarray(g.ew, dtype=jnp.float32),
-        )
+        if isinstance(g, GraphDev):
+            # arrays are already device-resident and inert beyond (n, m):
+            # nw is 0 past n, arc padding carries weight 0 — extend to the
+            # arena entirely on device, no host round-trip.
+            Nb = g.nw.shape[0]
+            nw_arena = jnp.concatenate(
+                [g.nw, jnp.zeros((self.A - Nb,), jnp.float32)]
+            )
+            cw = jnp.where(self._iota < n, nw_arena, jnp.inf)
+            ar = _Arena(
+                graph=g, nw_arena=nw_arena, cluster_w=cw,
+                src=g.src, dst=g.indices, ew=g.ew,
+            )
+        else:
+            nw = np.zeros(self.A, np.float32)
+            nw[:n] = g.nw
+            cw = np.full(self.A, np.inf, np.float32)
+            cw[:n] = g.nw
+            ar = _Arena(
+                graph=g,
+                nw_arena=jnp.asarray(nw),
+                cluster_w=jnp.asarray(cw),
+                src=jnp.asarray(g.arc_sources(), dtype=jnp.int32),
+                dst=jnp.asarray(g.indices, dtype=jnp.int32),
+                ew=jnp.asarray(g.ew, dtype=jnp.float32),
+            )
+            self.stats.h2d_bytes += self.A * 8 + g.m * 12
         self._arenas[id(g)] = ar
         return ar
 
-    def _pack(self, g: GraphNP, mode: str) -> _DevicePack:
+    def _pack(self, g: AnyGraph, mode: str) -> _DevicePack:
+        if isinstance(g, GraphDev):
+            return self._pack_dev(g, mode)
         key = (id(g), mode)
         hit = self._packs.get(key)
         if hit is not None and hit.graph is g:
@@ -216,23 +282,108 @@ class LPEngine:
             num_chunks=pack.num_chunks,
             shape=(self.C_bucket, self.N, Eb),
         )
+        self.stats.h2d_bytes += sum(
+            int(np.asarray(a).nbytes) for a in
+            (padded.nodes, padded.node_valid, padded.edge_dst, padded.edge_w,
+             padded.edge_src_slot, padded.edge_valid)
+        )
         self._packs[key] = dp
         return dp
 
-    def _ell(self, g: GraphNP) -> _DeviceEll:
+    def _pack_dev(self, g: GraphDev, mode: str) -> _DevicePack:
+        """Pack a device-resident coarse graph without materializing it.
+
+        Host work is O(n): the degree sequence (cached on the handle), the
+        traversal order, and the greedy chunk plan.  The O(m) edge arrays are
+        gathered on device from the still-resident CSR
+        (:func:`~repro.graph.packing.gather_pack_device`) — the coarse
+        adjacency never crosses to host.  Emits arrays bit-identical to the
+        host ``_pack`` on the materialized graph (same plan, same order).
+        """
+        key = (id(g), mode)
+        hit = self._packs.get(key)
+        if hit is not None and hit.graph is g:
+            self.stats.pack_hits += 1
+            return hit
+        self.stats.pack_builds += 1
+        self.stats.gather_builds += 1
+        order = make_order(g, mode, self.seed)
+        deg = g.degrees().astype(np.int64)[order]
+        node_chunk, C, N, E = plan_chunks(
+            deg, g.n, max_nodes=self.N,
+            max_edges=max(self._e_request, self.E_floor),
+            block=self.pack_block,
+        )
+        # same sticky bucket raising as the host path
+        self.C_bucket = max(self.C_bucket, _pow2(C))
+        Eb = max(self.E_floor, -(-E // 512) * 512)
+        self.E_floor = Eb
+        nodes, node_valid = layout_nodes(order, node_chunk, C, N, g.n)
+        # Tight pow2 LIVE-chunk prefix: the sweep's fori_loop only ever
+        # visits ``num_chunks`` live chunks, so dead chunks of the finest
+        # level's shared bucket are pure shape padding — emitting them would
+        # multiply the gather (and every sweep dispatch) by the dead/live
+        # ratio.  Coarse GraphDev levels therefore get their own pow2 chunk
+        # bucket; the few extra sweep shapes are reused across levels and
+        # V-cycles like every other bucket.
+        Cg = _pow2(C)
+        nodes = np.pad(
+            nodes, ((0, Cg - C), (0, self.N - N)), constant_values=g.n
+        )
+        node_valid = np.pad(node_valid, ((0, Cg - C), (0, self.N - N)))
+        nodes_d = jnp.asarray(nodes)
+        nv_d = jnp.asarray(node_valid)
+        self.stats.h2d_bytes += nodes.nbytes + node_valid.nbytes
+        gkey = (nodes.shape, g.indptr.shape[0], g.indices.shape[0], Eb)
+        if gkey not in self._gather_keys:
+            self._gather_keys.add(gkey)
+            self.stats.gather_compiles += 1
+        edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
+            nodes_d, nv_d, g.indptr, g.indices, g.ew, jnp.int32(g.n), E=Eb
+        )
+        dp = _DevicePack(
+            graph=g,
+            nodes=nodes_d,
+            node_valid=nv_d,
+            edge_dst=edge_dst,
+            edge_w=edge_w,
+            edge_src_slot=edge_slot,
+            edge_valid=edge_valid,
+            num_chunks=C,
+            shape=(Cg, self.N, Eb),
+        )
+        self._packs[key] = dp
+        return dp
+
+    def _ell(self, g: AnyGraph) -> _DeviceEll:
         hit = self._ells.get(id(g))
         if hit is not None and hit.graph is g:
             self.stats.pack_hits += 1
             return hit
         self.stats.pack_builds += 1
-        ell = ell_pack(g)
+        # KNOWN LIMITATION: a GraphDev level materializes to host here (one
+        # O(n + m) round-trip per level per cycle) — the dense path has no
+        # device ELL gather yet (ROADMAP open item); the chunked refine path
+        # stays fully device-resident.
+        gh = g.to_host() if isinstance(g, GraphDev) else g
+        ell = ell_pack(gh)
+        # Pow2 row bucket + pow2(n + 1) node bucket: with dense_round_device's
+        # traced n, one compiled round serves every level in the bucket
+        # instead of compiling per level (padded rows are sentinel-owned and
+        # weight-0, so they contribute nothing).
+        R = ell.rows
+        Rb = _pow2(R)
+        dst = np.pad(ell.dst, ((0, Rb - R), (0, 0)), constant_values=g.n)
+        w = np.pad(ell.w, ((0, Rb - R), (0, 0)))
+        row_node = np.pad(ell.row_node, (0, Rb - R), constant_values=g.n)
         de = _DeviceEll(
             graph=g,
-            dst=jnp.asarray(ell.dst),
-            w=jnp.asarray(ell.w),
-            row_node=jnp.asarray(ell.row_node),
-            nw=jnp.asarray(g.nw, dtype=jnp.float32),
+            dst=jnp.asarray(dst),
+            w=jnp.asarray(w),
+            row_node=jnp.asarray(row_node),
+            nb=_pow2(g.n + 1),
         )
+        self.stats.h2d_bytes += dst.nbytes + w.nbytes + row_node.nbytes
         self._ells[id(g)] = de
         return de
 
@@ -262,6 +413,7 @@ class LPEngine:
         self._packs = {k: v for k, v in self._packs.items() if k[0] in keep_ids}
         self._arenas = {k: v for k, v in self._arenas.items() if k in keep_ids}
         self._ells = {k: v for k, v in self._ells.items() if k in keep_ids}
+        self._cin = {k: v for k, v in self._cin.items() if k in keep_ids}
 
     # ------------------------------------------------------------------ sweeps
 
@@ -291,33 +443,38 @@ class LPEngine:
 
     def cluster(
         self,
-        g: GraphNP,
+        g: AnyGraph,
         U: float,
         iters: int,
         seed: int,
-        restrict: Optional[np.ndarray] = None,
-    ) -> np.ndarray:
-        """SCLaP clustering for coarsening; returns host labels (contraction
-        is a host step).  Degree traversal order, packs cached per graph."""
+        restrict: Optional[Union[np.ndarray, jax.Array]] = None,
+    ) -> jax.Array:
+        """SCLaP clustering for coarsening; returns DEVICE labels (length n)
+        so the device contraction can consume them without a round-trip.
+        Degree traversal order, packs cached per graph; a device ``restrict``
+        must already be arena-sized (``project_restrict`` output)."""
         dp = self._pack(g, "degree")
         ar = self._arena(g)
-        if restrict is not None:
+        if restrict is None:
+            r_dev = jnp.zeros(1, jnp.int32)
+        elif isinstance(restrict, jax.Array):
+            r_dev = restrict
+        else:
             r = np.full(self.A, -1, np.int32)
             r[: g.n] = restrict
             r_dev = jnp.asarray(r)
-        else:
-            r_dev = jnp.zeros(1, jnp.int32)
+            self.stats.h2d_bytes += r.nbytes
         labels, _, _ = self._sweep(
             dp, self._iota, ar.cluster_w, ar.nw_arena, r_dev, U, seed, g.n,
             iters=iters, refine_mode=False,
             use_restrict=restrict is not None, permute_chunks=False,
         )
         self._drop_single_use(g, "degree")
-        return np.asarray(labels[: g.n])
+        return labels[: g.n]
 
     def refine(
         self,
-        g: GraphNP,
+        g: AnyGraph,
         labels: Union[np.ndarray, jax.Array],
         k: int,
         U: float,
@@ -346,7 +503,7 @@ class LPEngine:
 
     def refine_dense(
         self,
-        g: GraphNP,
+        g: AnyGraph,
         labels: Union[np.ndarray, jax.Array],
         k: int,
         U: float,
@@ -355,24 +512,135 @@ class LPEngine:
         move_fraction: float = 0.5,
     ) -> jax.Array:
         """Synchronous dense refinement: ``iters`` Pallas-scored rounds on a
-        cached ELL pack, labels device-resident throughout."""
+        cached (bucket-padded) ELL pack, labels device-resident throughout."""
         from ..kernels.lp_score.ops import dense_round_device
 
         de = self._ell(g)
-        lab = self.to_arena(labels, g.n, fill=k)[: g.n]
+        ar = self._arena(g)
+        # bucketed node axis: arena labels/weights sliced to the pow2 node
+        # bucket (slots >= n carry label k / weight 0 — inert)
+        lab = self.to_arena(labels, g.n, fill=k)[: de.nb]
+        nw_nb = ar.nw_arena[: de.nb]
+        dkey = (de.dst.shape, de.nb, k, self.use_pallas, self.interpret)
+        if dkey not in self._dense_keys:
+            self._dense_keys.add(dkey)
+            self.stats.dense_compiles += 1
         for r in range(iters):
             lab = dense_round_device(
-                de.dst, de.w, de.row_node, lab, de.nw,
+                de.dst, de.w, de.row_node, lab, nw_nb,
                 jnp.float32(U),
                 jnp.int32((seed + 0x9E37 * r) & 0x7FFFFFFF),
                 jnp.float32(move_fraction),
-                k=k, n=g.n,
+                jnp.int32(g.n),
+                k=k,
                 use_pallas=self.use_pallas, interpret=self.interpret,
             )
             self.stats.dense_rounds += 1
         if id(g) != self._g0_id:
             self._ells.pop(id(g), None)
         return self.to_arena(lab, g.n, fill=k)
+
+    # ------------------------------------------------------------ contraction
+
+    def _contract_inputs(self, g: AnyGraph, Nb: int, Mb: int):
+        """(src, dst, ew, nw, ew_integral, ew_max) for the (Nb, Mb) bucket.
+
+        GraphDev handles are born exactly in their bucket (contract slices
+        its outputs down), so they pass through untouched and carry their
+        weight metadata; GraphNP inputs (the finest level) pad from the
+        cached arena arrays on device, once per graph.  The weight scan for
+        the packed-key fast path runs once here: an O(m) host scan per
+        *call* would trash the CPU cache the contraction executable is
+        about to use."""
+        if isinstance(g, GraphDev):
+            return g.src, g.indices, g.ew, g.nw, g.ew_integral, g.ew_max
+        hit = self._cin.get(id(g))
+        if hit is not None and hit[0] is g:
+            return hit[1:]
+        ar = self._arena(g)
+        pm = Mb - g.m
+        src = jnp.concatenate([ar.src, jnp.zeros((pm,), jnp.int32)])
+        dst = jnp.concatenate([ar.dst, jnp.zeros((pm,), jnp.int32)])
+        ew = jnp.concatenate([ar.ew, jnp.zeros((pm,), jnp.float32)])
+        nw = ar.nw_arena[:Nb]
+        integral = bool(np.all(g.ew == np.round(g.ew))) if g.m else True
+        ew_max = float(g.ew.max()) if g.m else 0.0
+        self._cin[id(g)] = (g, src, dst, ew, nw, integral, ew_max)
+        return src, dst, ew, nw, integral, ew_max
+
+    def contract(
+        self, g: AnyGraph, labels: Union[np.ndarray, jax.Array]
+    ) -> Tuple[GraphDev, CoarseMap]:
+        """Device-resident contraction: the §IV-C quotient build as one
+        bucketed executable (``contract_device``).
+
+        ``labels`` are cluster ids in ``[0, n)`` (a ``cluster`` result —
+        device or host).  Returns a :class:`GraphDev` whose arrays live in
+        the coarse level's own buckets plus the fine->coarse
+        :class:`CoarseMap`; only the ``(n_c, m_c, max nw_c)`` scalars are
+        synced to host."""
+        n, m = g.n, g.m
+        Nb = _pow2(max(n, 8))
+        Mb = _mbucket(m)
+        src, dst, ew, nw, integral, ew_max = self._contract_inputs(g, Nb, Mb)
+        # packed-key fast path: integral weights small enough to ride in the
+        # low bits of the uint32 sort key (see contract_device)
+        wbits = 0
+        if integral and ew_max >= 1.0:
+            b = int(ew_max).bit_length()
+            if Nb * Nb * (1 << b) <= 2**32 and Mb * ((1 << b) - 1) < 2**31:
+                wbits = b
+        if isinstance(labels, jax.Array):
+            lab = labels.astype(jnp.int32)
+        else:
+            lab = jnp.asarray(np.asarray(labels[:n], dtype=np.int32))
+            self.stats.h2d_bytes += n * 4
+        if lab.shape[0] != Nb:
+            lab = jnp.concatenate(
+                [lab[:n], jnp.zeros((Nb - n,), jnp.int32)]
+            )
+        self.stats.contract_calls += 1
+        ckey = (Nb, Mb, wbits)
+        if ckey not in self.stats.contract_buckets:
+            self.stats.contract_buckets.add(ckey)
+            self.stats.contract_compiles += 1
+        (C, n_c, nw_c, indptr_c, src_c, dst_c, ew_c, m_c, nwmax,
+         ewmax) = contract_device(
+            src, dst, ew, nw, lab, jnp.int32(n), jnp.int32(m), wbits=wbits
+        )
+        # the only host sync of the level: all four scalars in one transfer
+        n_c, m_c, nwmax, ewmax = jax.device_get((n_c, m_c, nwmax, ewmax))
+        n_c, m_c, nwmax, ewmax = int(n_c), int(m_c), float(nwmax), float(ewmax)
+        self.stats.d2h_bytes += 16
+        Ncb = _pow2(max(n_c, 8))
+        Mcb = _mbucket(m_c)
+        coarse = GraphDev(
+            indptr=indptr_c[: Ncb + 1],
+            indices=dst_c[:Mcb],
+            ew=ew_c[:Mcb],
+            nw=nw_c[:Ncb],
+            src=src_c[:Mcb],
+            n=n_c, m=m_c, nw_max=nwmax,
+            ew_max=ewmax, ew_integral=integral,
+            on_materialize=self._note_d2h,
+        )
+        cmap = CoarseMap(
+            dev=C, n_fine=n, n_coarse=n_c, on_materialize=self._note_d2h
+        )
+        return coarse, cmap
+
+    def project_restrict(self, C: CoarseMap, restrict: jax.Array) -> jax.Array:
+        """Push a V-cycle restriction one level down on device:
+        ``r_c[C[v]] = r[v]`` (consistent — clusters never straddle cells).
+        Returns an arena-sized int32 array, -1 beyond the coarse n."""
+        Nb = C.dev.shape[0]
+        idx = jnp.where(self._iota[:Nb] < C.n_fine, C.dev, self.A)
+        return jnp.full((self.A,), -1, jnp.int32).at[idx].set(
+            restrict[:Nb].astype(jnp.int32), mode="drop"
+        )
+
+    def _note_d2h(self, nbytes: int) -> None:
+        self.stats.d2h_bytes += int(nbytes)
 
     # --------------------------------------------------------- device helpers
 
@@ -395,29 +663,41 @@ class LPEngine:
     def project(
         self,
         coarse_labels: Union[np.ndarray, jax.Array],
-        C: np.ndarray,
+        C: Union[np.ndarray, CoarseMap],
         fill: int,
     ) -> jax.Array:
         """Project coarse labels through a contraction map C (fine -> coarse)
-        entirely on device; returns arena-sized fine labels."""
-        n_f = C.shape[0]
-        C_dev = jnp.asarray(np.asarray(C, dtype=np.int32))
+        entirely on device; returns arena-sized fine labels.  ``C`` may be a
+        host numpy map or a device :class:`CoarseMap` (no upload needed)."""
         if isinstance(coarse_labels, jax.Array):
             base = coarse_labels.astype(jnp.int32)
         else:
             base = jnp.asarray(np.asarray(coarse_labels, dtype=np.int32))
+            self.stats.h2d_bytes += coarse_labels.shape[0] * 4
+        if isinstance(C, CoarseMap):
+            n_f = C.n_fine
+            Nb = C.dev.shape[0]
+            fine = jnp.where(
+                self._iota[:Nb] < n_f, base[C.dev], jnp.int32(fill)
+            )
+            return jnp.concatenate(
+                [fine, jnp.full((self.A - Nb,), fill, jnp.int32)]
+            )
+        n_f = C.shape[0]
+        C_dev = jnp.asarray(np.asarray(C, dtype=np.int32))
+        self.stats.h2d_bytes += n_f * 4
         fine = base[C_dev]
         return jnp.concatenate(
             [fine, jnp.full((self.A - n_f,), fill, jnp.int32)]
         )
 
-    def cut(self, g: GraphNP, labels: jax.Array) -> float:
+    def cut(self, g: AnyGraph, labels: jax.Array) -> float:
         """Edge cut of arena labels, evaluated on device (one scalar sync)."""
         ar = self._arena(g)
         diff = labels[ar.src] != labels[ar.dst]
         return float(jnp.sum(jnp.where(diff, ar.ew, 0.0)) / 2.0)
 
-    def block_weights(self, g: GraphNP, labels: jax.Array, k: int) -> np.ndarray:
+    def block_weights(self, g: AnyGraph, labels: jax.Array, k: int) -> np.ndarray:
         ar = self._arena(g)
         bw = jnp.zeros((k + 1,), jnp.float32).at[jnp.minimum(labels, k)].add(
             ar.nw_arena
@@ -451,6 +731,14 @@ class LPEngine:
             pack_builds=self.stats.pack_builds,
             pack_hits=self.stats.pack_hits,
             dense_rounds=self.stats.dense_rounds,
+            dense_compiles=self.stats.dense_compiles,
+            contract_calls=self.stats.contract_calls,
+            contract_compiles=self.stats.contract_compiles,
+            contract_bucket_count=self.stats.contract_bucket_count,
+            gather_builds=self.stats.gather_builds,
+            gather_compiles=self.stats.gather_compiles,
+            h2d_bytes=self.stats.h2d_bytes,
+            d2h_bytes=self.stats.d2h_bytes,
             arena=self.A,
             chunk_bucket=(self.C_bucket, self.N, self.E_floor),
         )

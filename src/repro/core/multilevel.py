@@ -4,7 +4,11 @@ Pipeline per V-cycle:
 
   coarsen:   l iterations of parallel SCLaP (U = max(max_v c(v), L_max/f),
              degree order) -> cluster contraction, repeated until the graph
-             has <= coarsest_factor * k nodes or contraction stalls;
+             has <= coarsest_factor * k nodes or contraction stalls.  On the
+             jnp engine the whole chain is device-resident: clustering,
+             contraction (``LPEngine.contract``), and the next level's pack
+             gather all run on device over a GraphDev hierarchy; only the
+             (n_c, m_c, max nw) scalars cross to host per level;
   initial:   the island evolutionary algorithm (KaFFPaE) on the replicated
              coarsest graph — seeded with the projected current solution
              from the 2nd V-cycle on, so quality never regresses;
@@ -27,9 +31,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..graph.csr import GraphNP
+from ..graph.csr import GraphDev, GraphNP
 from ..graph.packing import chunk_geometry
-from .contraction import contract, project_labels
+from .contraction import CoarseMap, contract, project_labels
 from .engine import LPEngine
 from .evolutionary import EvoConfig, evolve
 from .initial_partition import repair_balance
@@ -57,6 +61,11 @@ class PartitionerConfig:
     engine: str = "auto"            # jnp | numpy | dist | auto
     numpy_below: int = 4096         # use the sequential engine below this n
     target_chunks: int = 64
+    # coarsening path for the jnp engine: "device" keeps cluster -> contract
+    # -> next-level pack chained on device (GraphDev hierarchy, only scalars
+    # cross to host per level); "host" is the legacy numpy contract()
+    # round-trip (also the benchmark baseline).
+    coarsen_engine: str = "device"  # device | host
     dist_shards: int = 0            # engine="dist": number of mesh PEs
     dist_chunks_per_shard: int = 4
     # refinement engine for the jnp path: "chunked" = chunked-sequential LP
@@ -134,16 +143,20 @@ def _cluster(g, U, iters, seed, restrict, cfg, eng=None) -> np.ndarray:
         ).labels
     if cfg.engine == "dist" and restrict is None:
         # V-cycle-restricted clustering keeps the single-mesh path; the
-        # unrestricted (hot) first cycle runs on the device mesh
+        # unrestricted (hot) first cycle runs on the device mesh.  The plan
+        # is keyed on cfg.seed (the run's seed-epoch), not the per-call
+        # sweep seed, so repeated calls on one graph hit the plan cache.
         from .distributed_lp import build_plan, lp_cluster_distributed
 
         plan = build_plan(
             g, cfg.dist_shards, chunks_per_shard=cfg.dist_chunks_per_shard,
-            order="degree", seed=seed,
+            order="degree", seed=cfg.seed,
         )
         return lp_cluster_distributed(plan, U=U, iters=iters, seed=seed)
     if eng is not None:
-        return eng.cluster(g, U=U, iters=iters, seed=seed, restrict=restrict)
+        return np.asarray(
+            eng.cluster(g, U=U, iters=iters, seed=seed, restrict=restrict)
+        )
     max_nodes, max_edges = chunk_geometry(g.n, g.m, cfg.target_chunks)
     return lp_cluster(
         g, U=U, iters=iters, seed=seed, restrict=restrict,
@@ -161,7 +174,7 @@ def _refine(g, labels, k, Lmax, iters, seed, cfg) -> np.ndarray:
 
         plan = build_plan(
             g, cfg.dist_shards, chunks_per_shard=cfg.dist_chunks_per_shard,
-            order="random", seed=seed,
+            order="random", seed=cfg.seed,
         )
         return lp_refine_distributed(plan, labels, k=k, U=Lmax, iters=iters, seed=seed)
     if use_numpy:
@@ -214,15 +227,17 @@ def _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng):
             if eng.cut(gg_f, ref) <= before or bw_old > L >= bw_ref:
                 lab_dev = ref
         else:
+            gg_h = gg_f.to_host() if isinstance(gg_f, GraphDev) else gg_f
+            C_np = C.host() if isinstance(C, CoarseMap) else C
             if lab is None:  # leaving the device path (defensive; host levels
                 lab = np.asarray(lab_dev)  # precede device levels in practice)
                 lab_dev = None
-            lab = project_labels(lab, C)
-            before = cut_np(gg_f, lab)
-            ref = _refine(gg_f, lab, k, L, cfg.lp_iters_refine, seed_r, cfg)
-            bw_ref = np.bincount(ref, weights=gg_f.nw, minlength=k).max()
-            bw_old = np.bincount(lab, weights=gg_f.nw, minlength=k).max()
-            if cut_np(gg_f, ref) <= before or bw_old > L >= bw_ref:
+            lab = project_labels(lab, C_np)
+            before = cut_np(gg_h, lab)
+            ref = _refine(gg_h, lab, k, L, cfg.lp_iters_refine, seed_r, cfg)
+            bw_ref = np.bincount(ref, weights=gg_h.nw, minlength=k).max()
+            bw_old = np.bincount(lab, weights=gg_h.nw, minlength=k).max()
+            if cut_np(gg_h, ref) <= before or bw_old > L >= bw_ref:
                 lab = ref
     if lab is None:
         lab = eng.to_host(lab_dev, g.n)
@@ -250,36 +265,75 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
     level_sizes: List[tuple] = []
     shrink_first = 1.0
 
+    # device coarsening: cluster -> contract -> next-level pack chains
+    # device-to-device (GraphDev hierarchy); the host contract() round-trip
+    # remains for the numpy/dist engines and as an explicit fallback
+    dev_coarsen = (
+        eng is not None
+        and cfg.coarsen_engine == "device"
+        and cfg.engine in ("auto", "jnp")
+    )
+
     cur_labels: Optional[np.ndarray] = None
     for cycle in range(cfg.vcycles):
         # ---------------- coarsening ----------------
         f = _f_value(cfg, gtype, cycle, rng)
-        hierarchy = []  # [(graph, C)]
+        hierarchy = []  # [(graph, C)] — C is np or CoarseMap, graph NP or Dev
         gg = g
         restrict = cur_labels  # protect cut edges from the 2nd cycle on
+        # ``restrict`` mirrors the level type: numpy on host levels, an
+        # arena-sized device array on device levels
         for lev in range(cfg.max_levels):
             if gg.n <= coarsest_target:
                 break
-            U = max(float(gg.nw.max()), L / f)
             seed = int(rng.integers(1 << 30))
-            clus = _cluster(gg, U, cfg.lp_iters_coarsen, seed, restrict, cfg, eng)
-            coarse, C = contract(gg, clus)
-            if coarse.n >= cfg.shrink_stall * gg.n:
-                break
-            hierarchy.append((gg, C))
+            if isinstance(gg, GraphDev) and _use_numpy(gg, cfg):
+                # below the engine threshold: hand the level chain back to
+                # the host engines (lazy materialization, one download)
+                gg = gg.to_host()
+                if restrict is not None and not isinstance(restrict, np.ndarray):
+                    restrict = np.asarray(restrict[: gg.n]).astype(np.int64)
+            dev_level = dev_coarsen and not _use_numpy(gg, cfg)
+            if dev_level:
+                nw_max = gg.nw_max if isinstance(gg, GraphDev) else float(gg.nw.max())
+                U = max(nw_max, L / f)
+                if restrict is not None and isinstance(restrict, np.ndarray):
+                    restrict = eng.to_arena(restrict, gg.n, fill=-1)
+                clus = eng.cluster(
+                    gg, U=U, iters=cfg.lp_iters_coarsen, seed=seed,
+                    restrict=restrict,
+                )
+                coarse, C = eng.contract(gg, clus)
+                # stall, or overshoot below k (the initial partitioner needs
+                # at least k coarse nodes to seed blocks from)
+                if coarse.n >= cfg.shrink_stall * gg.n or coarse.n < k:
+                    break
+                hierarchy.append((gg, C))
+                if restrict is not None:
+                    restrict = eng.project_restrict(C, restrict)
+            else:
+                U = max(float(gg.nw.max()), L / f)
+                clus = _cluster(gg, U, cfg.lp_iters_coarsen, seed, restrict, cfg, eng)
+                coarse, C = contract(gg, clus)
+                if coarse.n >= cfg.shrink_stall * gg.n or coarse.n < k:
+                    break
+                hierarchy.append((gg, C))
+                if restrict is not None:
+                    rc = np.zeros(coarse.n, dtype=np.int64)
+                    rc[C] = restrict  # consistent: clusters never straddle blocks
+                    restrict = rc
             if cycle == 0 and lev == 0:
                 shrink_first = coarse.n / max(gg.n, 1)
-            if restrict is not None:
-                rc = np.zeros(coarse.n, dtype=np.int64)
-                rc[C] = restrict  # consistent: clusters never straddle blocks
-                restrict = rc
             gg = coarse
         if cycle == 0:
             level_sizes = [(h[0].n, h[0].m) for h in hierarchy] + [(gg.n, gg.m)]
 
         # ---------------- initial partitioning ----------------
+        gg_host = gg.to_host() if isinstance(gg, GraphDev) else gg
         seeds = []
         if cur_labels is not None:
+            if not isinstance(restrict, np.ndarray):
+                restrict = np.asarray(restrict[: gg.n]).astype(np.int64)
             seeds.append(restrict.astype(np.int32))  # projected current solution
         evo = EvoConfig(
             k=k,
@@ -291,7 +345,7 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
             seed=int(rng.integers(1 << 30)),
             seed_individuals=seeds,
         )
-        lab = evolve(gg, evo)
+        lab = evolve(gg_host, evo)
 
         # ---------------- uncoarsening + local search ----------------
         lab = _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng)

@@ -1,6 +1,6 @@
 """Graph substrate: CSR containers, generators, static-shape packing."""
 
-from .csr import Graph, GraphNP, from_edges, to_device, to_host, validate
+from .csr import Graph, GraphDev, GraphNP, from_edges, to_device, to_host, validate
 from .generators import (
     barabasi_albert,
     mesh2d,
@@ -16,13 +16,17 @@ from .packing import (
     ShardedGraph,
     chunk_geometry,
     ell_pack,
+    gather_pack_device,
+    layout_nodes,
     pack_chunks,
     pad_pack,
+    plan_chunks,
     shard_graph,
 )
 
 __all__ = [
     "Graph",
+    "GraphDev",
     "GraphNP",
     "from_edges",
     "to_device",
@@ -39,7 +43,10 @@ __all__ = [
     "EllPack",
     "ShardedGraph",
     "chunk_geometry",
+    "plan_chunks",
+    "layout_nodes",
     "pack_chunks",
+    "gather_pack_device",
     "pad_pack",
     "ell_pack",
     "shard_graph",

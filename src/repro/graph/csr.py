@@ -7,14 +7,19 @@ carry the same weight); node weights ``nw`` are per-node.  This mirrors the
 adjacency-array representation of the paper (Section IV-A) and is the native
 layout for the sort/segment primitives the TPU adaptation is built on.
 
-Two twin types exist:
+Three twin types exist:
 
-* :class:`GraphNP` — host-side numpy arrays.  All *construction* (generators,
-  chunk packing, shard splitting, contraction between levels) happens here,
-  because level shapes change dynamically and the multilevel driver is a host
-  loop.
+* :class:`GraphNP` — host-side numpy arrays.  Generators, shard splitting,
+  and the host fallback contraction live here.
 * :class:`Graph` — a registered JAX pytree with the same fields, used inside
   jitted/shard_mapped computations whose shapes are static per level.
+* :class:`GraphDev` — a *device-resident* bucket-padded CSR handle: the
+  output of the LP engine's device contraction
+  (``repro.core.contraction.contract_device``).  Arrays are padded to
+  power-of-two buckets (so one compiled contraction/pack executable serves
+  many levels); only the ``(n, m)`` scalars live on host.  ``to_host()``
+  materializes a :class:`GraphNP` lazily — the escape hatch for the host
+  engines (numpy SCLaP, FM) and the evolutionary coarsest stage.
 """
 
 from __future__ import annotations
@@ -30,6 +35,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "Graph",
+    "GraphDev",
     "GraphNP",
     "from_edges",
     "to_device",
@@ -114,6 +120,74 @@ class GraphNP:
 
     def arc_sources(self) -> np.ndarray:
         return np.repeat(np.arange(self.n, dtype=np.int32), self.degrees())
+
+
+class GraphDev:
+    """Device-resident bucket-padded CSR graph (coarse levels of the V-cycle).
+
+    Invariants (as emitted by ``contract_device`` and relied on by the LP
+    engine's device pack builder and arena):
+
+    * ``indptr`` has ``Nb + 1`` entries with ``Nb = 2^ceil(log2 n)``; rows
+      ``>= n`` all hold ``m`` (so sentinel-node gathers read degree 0).
+    * ``indices`` / ``ew`` / ``src`` have ``Mb = 2^ceil(log2 m)`` entries;
+      arcs ``>= m`` hold index 0 / weight 0 (inert under any masked use).
+    * ``nw`` has ``Nb`` entries, 0 beyond ``n``.
+
+    Only ``n``, ``m``, and ``nw_max`` are host scalars.  ``degrees()`` and
+    ``to_host()`` materialize lazily and cache; ``on_materialize(nbytes)``
+    (when set) lets the owning engine account the device->host traffic.
+    """
+
+    def __init__(self, indptr, indices, ew, nw, src, n: int, m: int,
+                 nw_max: float = 0.0, ew_max: float = 0.0,
+                 ew_integral: bool = False, on_materialize=None):
+        self.indptr = indptr
+        self.indices = indices
+        self.ew = ew
+        self.nw = nw
+        self.src = src
+        self._n = int(n)
+        self._m = int(m)
+        self.nw_max = float(nw_max)
+        # weight metadata for the next contraction's packed-key decision:
+        # integral weights stay integral under contraction (sums)
+        self.ew_max = float(ew_max)
+        self.ew_integral = bool(ew_integral)
+        self.on_materialize = on_materialize
+        self._indptr_host: np.ndarray | None = None
+        self._host: GraphNP | None = None
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def m(self) -> int:
+        return self._m
+
+    def _indptr_np(self) -> np.ndarray:
+        if self._indptr_host is None:
+            self._indptr_host = np.asarray(self.indptr[: self._n + 1], dtype=np.int64)
+            if self.on_materialize is not None:
+                self.on_materialize(self._indptr_host.nbytes)
+        return self._indptr_host
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self._indptr_np())
+
+    def to_host(self) -> GraphNP:
+        """Materialize a :class:`GraphNP` (cached) — one O(n + m) download."""
+        if self._host is None:
+            self._host = GraphNP(
+                indptr=self._indptr_np(),
+                indices=np.asarray(self.indices[: self._m], dtype=np.int32),
+                ew=np.asarray(self.ew[: self._m], dtype=np.float32),
+                nw=np.asarray(self.nw[: self._n], dtype=np.float32),
+            )
+            if self.on_materialize is not None:
+                self.on_materialize(self._m * 8 + self._n * 4)
+        return self._host
 
 
 def from_edges(

@@ -8,6 +8,13 @@ happens here (numpy, once per multilevel level):
   propagation sweep is a ``lax.fori_loop`` over chunks: synchronous within a
   chunk, sequential across chunks.  chunk=1 node reproduces the paper's
   sequential sweep; one big chunk is fully synchronous LP.
+* :func:`plan_chunks` / :func:`gather_pack_device` — the split form of the
+  same layout used for *device-resident* coarse graphs: the greedy chunk
+  assignment (which needs only the O(n) degree sequence) stays on host,
+  while the O(m) edge arrays are gathered **on device** from a
+  still-resident CSR (``repro.graph.csr.GraphDev``) — the coarse graph's
+  adjacency never round-trips through numpy between levels.  The emitted
+  arrays are bit-identical to :func:`pack_chunks` on the materialized graph.
 * :func:`ell_pack` — ELL layout with *row splitting* (a node of degree d
   occupies ``ceil(d / width)`` rows) for the Pallas ``lp_score`` kernel.
   Row splitting bounds the padding blow-up on power-law graphs.
@@ -39,9 +46,13 @@ Pack invariants (relied upon by the jitted LP sweep and the LP engine):
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
+
+import jax
+import jax.numpy as jnp
 
 from .csr import GraphNP
 
@@ -50,7 +61,10 @@ __all__ = [
     "EllPack",
     "ShardedGraph",
     "chunk_geometry",
+    "plan_chunks",
+    "layout_nodes",
     "pack_chunks",
+    "gather_pack_device",
     "pad_pack",
     "ell_pack",
     "shard_graph",
@@ -95,23 +109,27 @@ class ChunkPack:
         return self.nodes.shape[0]
 
 
-def pack_chunks(
-    g: GraphNP,
-    order: np.ndarray,
+def plan_chunks(
+    deg_ordered: np.ndarray,
+    n: int,
     max_nodes: int = 4096,
     max_edges: int = 32768,
     block: int = 32,
-) -> ChunkPack:
-    """Greedy-pack nodes (taken in ``order``) into chunks.
+):
+    """Greedy chunk assignment from the O(n) degree sequence alone.
 
-    Greedy runs over mini-blocks of ``block`` consecutive nodes so the host
-    loop is O(n / block).  ``max_edges`` is automatically raised to the
-    maximum block degree sum so no node's adjacency is ever split across
-    chunks (a split would corrupt the move decision).
+    ``deg_ordered`` is the degree of each node *in traversal order*.  Greedy
+    runs over mini-blocks of ``block`` consecutive nodes so the host loop is
+    O(n / block).  ``max_edges`` is automatically raised to the maximum block
+    degree sum so no node's adjacency is ever split across chunks (a split
+    would corrupt the move decision).
+
+    Returns ``(node_chunk, C, N, E)``: the chunk of each ordered node, the
+    chunk count, and the rounded per-chunk node/edge capacities.  This is the
+    host half of packing; the O(m) edge fill is either :func:`pack_chunks`
+    (numpy) or :func:`gather_pack_device` (device gather).
     """
-    n = g.n
-    order = np.asarray(order, dtype=np.int64)
-    deg = g.degrees().astype(np.int64)[order]
+    deg = np.asarray(deg_ordered, dtype=np.int64)
     nb = _round_up(n, block) // block
     pad_n = nb * block - n
     deg_b = np.concatenate([deg, np.zeros(pad_n, np.int64)]).reshape(nb, block)
@@ -134,10 +152,47 @@ def pack_chunks(
     node_chunk = np.repeat(chunk_of_block, block)[:n]  # per ordered node
     N = int(np.bincount(node_chunk, minlength=C).max())
     N = _round_up(N, 8)
-    # edge counts per chunk
-    edeg = g.degrees().astype(np.int64)[order]
-    E = int(np.bincount(node_chunk, weights=edeg, minlength=C).max())
+    E = int(np.bincount(node_chunk, weights=deg, minlength=C).max())
     E = max(8, _round_up(E, 8))
+    return node_chunk, C, N, E
+
+
+def layout_nodes(order: np.ndarray, node_chunk: np.ndarray, C: int, N: int, n: int):
+    """(C, N) node-id layout + validity mask for a chunk plan (host, O(n)).
+
+    ``node_chunk`` is non-decreasing over the ordered nodes (the greedy
+    assigns blocks in traversal order), so slots follow from one cumulative
+    count — fully vectorized, no per-chunk loop."""
+    nodes = np.full((C * N,), n, dtype=np.int32)
+    node_valid = np.zeros((C * N,), dtype=bool)
+    if node_chunk.size:
+        counts = np.bincount(node_chunk, minlength=C)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        slot = np.arange(node_chunk.size, dtype=np.int64) - starts[node_chunk]
+        pos = node_chunk * np.int64(N) + slot
+        nodes[pos] = order
+        node_valid[pos] = True
+    return nodes.reshape(C, N), node_valid.reshape(C, N)
+
+
+def pack_chunks(
+    g: GraphNP,
+    order: np.ndarray,
+    max_nodes: int = 4096,
+    max_edges: int = 32768,
+    block: int = 32,
+) -> ChunkPack:
+    """Greedy-pack nodes (taken in ``order``) into chunks (host/numpy fill).
+
+    The chunk assignment is :func:`plan_chunks`; this fills the edge arrays
+    with numpy CSR slices.
+    """
+    n = g.n
+    order = np.asarray(order, dtype=np.int64)
+    deg = g.degrees().astype(np.int64)[order]
+    node_chunk, C, N, E = plan_chunks(
+        deg, n, max_nodes=max_nodes, max_edges=max_edges, block=block
+    )
 
     nodes = np.full((C, N), n, dtype=np.int32)
     node_valid = np.zeros((C, N), dtype=bool)
@@ -211,6 +266,57 @@ def pad_pack(pack: ChunkPack, C: int, N: int, E: int) -> ChunkPack:
         edge_valid=np.pad(pack.edge_valid, ((0, pc), (0, pe))),
         n=pack.n,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("E",))
+def gather_pack_device(
+    nodes,       # (C, N) int32 — host-planned layout, sentinel n
+    node_valid,  # (C, N) bool
+    indptr,      # (Nb + 1,) int32 — device CSR, rows >= n hold m
+    indices,     # (Mb,) int32
+    ew,          # (Mb,) f32
+    n,           # traced scalar int32
+    *,
+    E: int,
+):
+    """Device-side edge fill for a chunk plan: the O(m) half of packing.
+
+    Consumes a still-device-resident CSR (bucket-padded, as emitted by
+    ``repro.core.contraction.contract_device``) and emits the same
+    ``(edge_dst, edge_w, edge_src_slot, edge_valid)`` arrays that
+    :func:`pack_chunks` would produce on the materialized graph — arcs
+    grouped by source slot in CSR order, padding trailing with sentinel
+    ``n`` / weight 0 / slot 0.  One compiled executable per
+    ``(layout shape, CSR bucket, E)`` combination.
+    """
+    C, N = nodes.shape
+    last = indptr.shape[0] - 1
+    starts = indptr[nodes]                                    # (C, N)
+    ends = indptr[jnp.minimum(nodes + 1, last)]
+    deg = jnp.where(node_valid, ends - starts, 0).astype(jnp.int32)
+    cum = jnp.cumsum(deg, axis=1)                             # (C, N)
+    tot = cum[:, -1]                                          # (C,)
+    e_iota = jnp.arange(E, dtype=jnp.int32)
+    # slot owning arc e == (#slot starts <= e) - 1: one mark per slot at its
+    # first-arc offset, then a running count along the arc axis — far
+    # cheaper than a per-arc binary search (empty slots mark the same
+    # offset as their successor, which keeps the count correct)
+    start_off = cum - deg                                     # (C, N)
+    flat = (jnp.arange(C, dtype=jnp.int32)[:, None] * E + start_off).reshape(-1)
+    flat = jnp.where(
+        (node_valid & (start_off < E)).reshape(-1), flat, C * E
+    )
+    marks = jnp.zeros((C * E,), jnp.int32).at[flat].add(1, mode="drop")
+    slot = jnp.cumsum(marks.reshape(C, E), axis=1) - 1        # (C, E)
+    valid_e = e_iota[None, :] < tot[:, None]
+    slot_c = jnp.clip(slot, 0, N - 1)
+    before = jnp.take_along_axis(start_off, slot_c, axis=1)   # arcs in earlier slots
+    pos = jnp.take_along_axis(starts, slot_c, axis=1) + (e_iota[None, :] - before)
+    pos = jnp.where(valid_e, pos, 0)
+    edge_dst = jnp.where(valid_e, indices[pos], n).astype(jnp.int32)
+    edge_w = jnp.where(valid_e, ew[pos], 0.0)
+    edge_src_slot = jnp.where(valid_e, slot_c, 0).astype(jnp.int32)
+    return edge_dst, edge_w, edge_src_slot, valid_e
 
 
 @dataclass(frozen=True)

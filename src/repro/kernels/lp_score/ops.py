@@ -36,34 +36,42 @@ def pad_k(k: int) -> int:
     return max(LANE, ((k + LANE - 1) // LANE) * LANE)
 
 
-def _row_scores(ell_dst, ell_w, row_node, labels_ext, *, k, n, use_pallas, interpret):
-    """Shared body: ELL row scores segment-summed into (n, k) node scores."""
+def _row_scores(ell_dst, ell_w, row_node, lab_pad, n, *, k, use_pallas, interpret):
+    """Shared body: ELL row scores segment-summed into (nb, k) node scores.
+
+    Shapes are *bucket* shapes: ``lab_pad`` has ``nb >= n + 1`` entries with
+    label ``k`` beyond ``n`` (so sentinel destinations contribute nothing),
+    and ``n`` is a TRACED scalar — one compiled executable per
+    ``(row bucket, node bucket, k)`` combination serves every level that
+    lands in the bucket, instead of re-compiling per level."""
     k_p = pad_k(k)
     R = ell_dst.shape[0]
+    nb = lab_pad.shape[0]
     if R % TILE_R:
         pad = TILE_R - R % TILE_R
-        ell_dst = jnp.pad(ell_dst, ((0, pad), (0, 0)), constant_values=n)
+        # padded rows carry weight 0 and scatter to the dummy slot: inert
+        ell_dst = jnp.pad(ell_dst, ((0, pad), (0, 0)))
         ell_w = jnp.pad(ell_w, ((0, pad), (0, 0)))
-        row_node = jnp.pad(row_node, (0, pad), constant_values=n)
-    lbl = labels_ext[ell_dst]  # XLA gather; sentinel dst -> label k (no contribution)
+        row_node = jnp.pad(row_node, (0, pad), constant_values=nb)
+    lbl = lab_pad[ell_dst]  # XLA gather; sentinel dst (== n) -> label k
     if use_pallas:
         row_scores = lp_score_rows(lbl, ell_w, k_pad=k_p, interpret=interpret)
     else:
         row_scores = lp_score_rows_ref(lbl, ell_w, k_pad=k_p)
-    # row-split ELL: segment-sum rows into nodes
-    seg = jnp.minimum(row_node, n)  # padded rows -> dummy slot n
-    out = jnp.zeros((n + 1, k_p), jnp.float32).at[seg].add(row_scores)
-    return out[:n, :k]
+    # row-split ELL: segment-sum rows into nodes; sentinel rows -> dummy nb
+    seg = jnp.where(row_node >= n, jnp.int32(nb), row_node)
+    out = jnp.zeros((nb + 1, k_p), jnp.float32).at[seg].add(row_scores)
+    return out[:nb, :k]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "n", "use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
 def _node_scores_impl(
-    ell_dst, ell_w, row_node, labels_ext, *, k: int, n: int, use_pallas: bool,
+    ell_dst, ell_w, row_node, lab_pad, n, *, k: int, use_pallas: bool,
     interpret: bool,
 ):
     return _row_scores(
-        ell_dst, ell_w, row_node, labels_ext,
-        k=k, n=n, use_pallas=use_pallas, interpret=interpret,
+        ell_dst, ell_w, row_node, lab_pad, n,
+        k=k, use_pallas=use_pallas, interpret=interpret,
     )
 
 
@@ -86,11 +94,11 @@ def node_scores(
         jnp.asarray(ell.w),
         jnp.asarray(ell.row_node),
         labels_ext,
+        jnp.int32(g.n),
         k=k,
-        n=g.n,
         use_pallas=use_pallas,
         interpret=interpret,
-    )
+    )[: g.n]
 
 
 def dense_eligibility(S, lab, bw, nw, U, k: int):
@@ -115,57 +123,68 @@ def dense_eligibility(S, lab, bw, nw, U, k: int):
 
 
 def _dense_round_body(
-    ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction,
-    *, k, n, use_pallas, interpret,
+    ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction, n,
+    *, k, use_pallas, interpret,
 ):
-    labels_ext = jnp.concatenate([lab, jnp.array([k], jnp.int32)])
+    nb = lab.shape[0]
+    valid = jnp.arange(nb, dtype=jnp.int32) < n
+    # padded slots must keep label k: that is the sentinel-destination label
+    # the ELL gather relies on, and it keeps them out of every block weight
+    lab = jnp.where(valid, lab, jnp.int32(k))
+    nw = jnp.where(valid, nw, 0.0)
     S = _row_scores(
-        ell_dst, ell_w, row_node, labels_ext,
-        k=k, n=n, use_pallas=use_pallas, interpret=interpret,
+        ell_dst, ell_w, row_node, lab, n,
+        k=k, use_pallas=use_pallas, interpret=interpret,
     )
-    bw = jnp.zeros((k,), jnp.float32).at[lab].add(nw)
+    lab_c = jnp.minimum(lab, k - 1)         # clamp for (k,)-table lookups
+    bw = jnp.zeros((k,), jnp.float32).at[jnp.minimum(lab, k)].add(
+        nw, mode="drop"
+    )
     key = jax.random.PRNGKey(seed)
-    own_score = jnp.take_along_axis(S, lab[:, None], axis=1)[:, 0]
-    overloaded = bw[lab] > U
-    eligible = dense_eligibility(S, lab, bw, nw, U, k)
+    own_score = jnp.take_along_axis(S, lab_c[:, None], axis=1)[:, 0]
+    overloaded = bw[lab_c] > U
+    eligible = dense_eligibility(S, lab_c, bw, nw, U, k)
     masked = jnp.where(eligible, S + jax.random.uniform(key, S.shape) * 0.49, -jnp.inf)
     best = jnp.argmax(masked, axis=1).astype(jnp.int32)
     has = jnp.isfinite(jnp.max(masked, axis=1))
-    gate = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) < move_fraction
+    gate = jax.random.uniform(jax.random.fold_in(key, 1), (nb,)) < move_fraction
     # strict improvement only: cut-neutral moves oscillate under synchronous
     # updates (stale block weights), so they are rejected
     improve = jnp.take_along_axis(S, best[:, None], axis=1)[:, 0] > own_score
     # overloaded blocks shed only their EXCESS in expectation — a synchronous
     # "everyone leaves" stampede would just overload the destination
-    excess = jnp.clip((bw[lab] - U) / jnp.maximum(bw[lab], 1.0), 0.0, 1.0)
-    ov_gate = jax.random.uniform(jax.random.fold_in(key, 2), (n,)) < 1.5 * excess
-    return jnp.where(has & ((gate & improve) | (overloaded & ov_gate)), best, lab)
+    excess = jnp.clip((bw[lab_c] - U) / jnp.maximum(bw[lab_c], 1.0), 0.0, 1.0)
+    ov_gate = jax.random.uniform(jax.random.fold_in(key, 2), (nb,)) < 1.5 * excess
+    move = valid & has & ((gate & improve) | (overloaded & ov_gate))
+    return jnp.where(move, best, lab)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "n", "use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
 def dense_round_device(
-    ell_dst,            # (R, W) int32 — cached device ELL pack
-    ell_w,              # (R, W) f32
-    row_node,           # (R,)  int32
-    lab,                # (n,)  int32 — device-resident labels
-    nw,                 # (n,)  f32
+    ell_dst,            # (Rb, W) int32 — cached device ELL pack (row bucket)
+    ell_w,              # (Rb, W) f32
+    row_node,           # (Rb,)  int32, sentinel n
+    lab,                # (nb,)  int32 — device labels, k beyond n
+    nw,                 # (nb,)  f32 — node weights, 0 beyond n
     U,                  # scalar f32
     seed,               # scalar int32
     move_fraction,      # scalar f32
+    n,                  # TRACED scalar int32 — live node count
     *,
     k: int,
-    n: int,
     use_pallas: bool,
     interpret: bool,
 ):
     """One fully synchronous dense LP round, device arrays in and out.
 
-    The LP engine iterates this with a per-level cached ELL pack, so a
-    refinement pass is ``iters`` kernel launches with zero host round-trips.
+    All array arguments are *bucket*-shaped (pow2 rows / pow2 node count)
+    with the live node count traced, so the LP engine compiles this once per
+    bucket rather than once per level; iterating it is ``iters`` kernel
+    launches with zero host round-trips.
     """
     return _dense_round_body(
-        ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction,
-        k=k, n=n, use_pallas=use_pallas, interpret=interpret,
+        ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction, n,
+        k=k, use_pallas=use_pallas, interpret=interpret,
     )
 
 
@@ -189,18 +208,22 @@ def lp_refine_dense_round(
     """
     if ell is None:
         ell = ell_pack(g, width=128, tile_rows=TILE_R)
+    lab_pad = np.concatenate(
+        [np.asarray(labels, np.int32), np.array([k], np.int32)]
+    )
+    nw_pad = np.concatenate([g.nw.astype(np.float32), np.zeros(1, np.float32)])
     new = dense_round_device(
         jnp.asarray(ell.dst),
         jnp.asarray(ell.w),
         jnp.asarray(ell.row_node),
-        jnp.asarray(labels, jnp.int32),
-        jnp.asarray(g.nw, jnp.float32),
+        jnp.asarray(lab_pad),
+        jnp.asarray(nw_pad),
         jnp.float32(U),
         jnp.int32(seed & 0x7FFFFFFF),
         jnp.float32(move_fraction),
+        jnp.int32(g.n),
         k=k,
-        n=g.n,
         use_pallas=use_pallas,
         interpret=interpret,
     )
-    return np.asarray(new)
+    return np.asarray(new[: g.n])

@@ -86,11 +86,12 @@ def main():
             )
             return out[0][None], out[1][None], out[2]
 
-        shmapped = jax.shard_map(
+        from repro.compat import shard_map as shard_map_compat
+
+        shmapped = shard_map_compat(
             body, mesh=mesh,
             in_specs=(spec,) * 15 + (P(),),
             out_specs=(spec, spec, P()),
-            check_vma=False,
         )
         jitted = jax.jit(
             shmapped,

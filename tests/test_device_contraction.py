@@ -1,0 +1,138 @@
+"""Device-resident coarsening: LPEngine.contract must be structure-identical
+to the host contract() oracle, keep the cut/balance-preservation property
+under projection, chain level-to-level without host round-trips, and compile
+at most once per shape bucket."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LPEngine, PartitionerConfig, contract, partition
+from repro.core.contraction import CoarseMap
+from repro.core.metrics import cut_np, lmax
+from repro.graph import GraphDev, barabasi_albert, mesh2d, planted_partition, rmat
+
+
+def _graphs():
+    return [
+        rmat(10, 8, seed=5),              # power-law web stand-in
+        mesh2d(20),                       # mesh type
+        planted_partition(1500, 8, p_in=0.03, p_out=0.002, seed=1),
+        barabasi_albert(257, 3, seed=2),  # just past a pow2 bucket boundary
+        barabasi_albert(256, 3, seed=2),  # exactly on a pow2 bucket boundary
+    ]
+
+
+@pytest.mark.parametrize("case", range(5))
+def test_contract_matches_host_oracle(case):
+    """Identical node weights, identical arc multiset (in fact identical CSR:
+    both paths emit arcs in (cu, cv) order with np.unique relabel semantics),
+    across random clusterings and bucket-boundary sizes."""
+    g = _graphs()[case]
+    rng = np.random.default_rng(case)
+    for trial in range(3):
+        labels = rng.integers(0, max(g.n // (2 + trial), 2), g.n).astype(np.int32)
+        eng = LPEngine(g, seed=0)
+        cdev, cmap = eng.contract(g, labels)
+        chost, C_host = contract(g, labels)
+        assert isinstance(cdev, GraphDev)
+        assert isinstance(cmap, CoarseMap)
+        assert (cdev.n, cdev.m) == (chost.n, chost.m)
+        np.testing.assert_array_equal(cmap.host(), C_host)
+        gh = cdev.to_host()
+        np.testing.assert_array_equal(gh.indptr, chost.indptr)
+        np.testing.assert_array_equal(gh.indices, chost.indices)
+        np.testing.assert_allclose(gh.ew, chost.ew, rtol=1e-6)
+        np.testing.assert_allclose(gh.nw, chost.nw, rtol=1e-6)
+
+
+def test_contract_preserves_cut_and_balance_under_projection():
+    """The multilevel invariant, property-style on the device path: any
+    partition of the coarse graph projects to the fine graph with identical
+    cut and block weights."""
+    g = rmat(11, 8, seed=5)
+    rng = np.random.default_rng(0)
+    clusters = rng.integers(0, 200, g.n)
+    eng = LPEngine(g, seed=0)
+    cdev, cmap = eng.contract(g, clusters)
+    gh = cdev.to_host()
+    assert np.isclose(gh.nw.sum(), g.nw.sum())
+    for k in (2, 5):
+        lab_c = rng.integers(0, k, cdev.n).astype(np.int32)
+        lab_f_dev = eng.project(jnp.asarray(lab_c), cmap, fill=k)
+        lab_f = np.asarray(lab_f_dev[: g.n])
+        np.testing.assert_array_equal(lab_f, lab_c[cmap.host()])
+        assert abs(cut_np(gh, lab_c) - cut_np(g, lab_f)) < 1e-3
+        bw_c = np.bincount(lab_c, weights=gh.nw, minlength=k)
+        bw_f = np.bincount(lab_f, weights=g.nw, minlength=k)
+        np.testing.assert_allclose(bw_c, bw_f, rtol=1e-6)
+
+
+def test_chained_device_levels_match_host_chain():
+    """cluster -> contract -> cluster -> contract stays on device (GraphDev
+    in, GraphDev out) and reproduces the host chain bit-for-bit."""
+    g = barabasi_albert(4096, 5, seed=1)
+    L = lmax(g.n, 2, 0.03)
+    U = max(1.0, L / 14)
+    eng = LPEngine(g, seed=0)
+    lab1 = eng.cluster(g, U=U, iters=3, seed=7)
+    cdev, _ = eng.contract(g, lab1)
+    lab2 = eng.cluster(cdev, U=U, iters=3, seed=8)
+    assert isinstance(lab2, jax.Array)
+    cdev2, _ = eng.contract(cdev, lab2)
+    # host oracle chain from the materialized level-1 graph
+    chost2, _ = contract(cdev.to_host(), np.asarray(lab2))
+    gh2 = cdev2.to_host()
+    np.testing.assert_array_equal(gh2.indptr, chost2.indptr)
+    np.testing.assert_array_equal(gh2.indices, chost2.indices)
+    np.testing.assert_allclose(gh2.ew, chost2.ew, rtol=1e-6)
+    np.testing.assert_allclose(gh2.nw, chost2.nw, rtol=1e-6)
+    # the second-level pack was gathered on device, not repacked on host
+    assert eng.stats.gather_builds >= 1
+
+
+def test_contract_single_cluster_and_empty_quotient():
+    g = rmat(9, 8, seed=6)
+    eng = LPEngine(g, seed=0)
+    cdev, cmap = eng.contract(g, np.zeros(g.n, dtype=np.int32))
+    assert cdev.n == 1 and cdev.m == 0
+    assert cmap.n_coarse == 1
+    gh = cdev.to_host()
+    assert gh.m == 0 and np.isclose(gh.nw.sum(), g.nw.sum())
+
+
+def test_partition_device_coarsening_matches_host_coarsening():
+    """The fused pipeline: engine-path partition() with device contraction
+    produces the same labels as the host-contract fallback (the relabel
+    order, arc order, and f32 integer-weight sums are all exact)."""
+    g = barabasi_albert(8192, 6, seed=3)
+    base = dict(k=2, preset="fast", coarsest_factor=100, seed=0)
+    rep_dev = partition(g, PartitionerConfig(**base))
+    rep_host = partition(g, PartitionerConfig(**base, coarsen_engine="host"))
+    assert rep_dev.feasible
+    np.testing.assert_array_equal(rep_dev.labels, rep_host.labels)
+    assert rep_dev.cut == rep_host.cut
+    st = rep_dev.engine_stats
+    assert st["contract_calls"] >= 2          # >= 1 device level per cycle
+    assert rep_host.engine_stats["contract_calls"] == 0
+
+
+def test_contract_compile_count_bounded_by_buckets():
+    """Compile-count regression: a multi-level, multi-cycle run dispatches
+    one contraction compile per (Nb, Mb) bucket — never per level x cycle."""
+    g = barabasi_albert(8192, 6, seed=3)
+    cfg = PartitionerConfig(k=2, preset="fast", coarsest_factor=20, seed=0,
+                            engine="jnp", numpy_below=64)
+    rep = partition(g, cfg)
+    st = rep.engine_stats
+    assert rep.feasible
+    assert st["contract_calls"] >= 4          # multiple levels x 2 cycles
+    assert st["contract_compiles"] == st["contract_bucket_count"]
+    assert st["contract_compiles"] <= st["contract_calls"]
+    # pack gathers for device levels also compile at most once per shape
+    assert st["gather_compiles"] <= max(st["gather_builds"], 1)
+    # the whole-run host traffic is scalars + the coarsest/evo materializations,
+    # not per-level O(m) round-trips: far below one download of the fine graph
+    assert st["d2h_bytes"] < g.m * 4

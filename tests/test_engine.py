@@ -15,8 +15,12 @@ from repro.graph import barabasi_albert, mesh2d, pack_chunks, planted_partition
 def test_compile_count_bounded_across_vcycles():
     """The headline cache property: a 2-V-cycle, multi-level partition() run
     dispatches many sweeps but compiles _lp_sweep at most once per
-    (bucket, statics) combination — <= 4 total, instead of one compile per
-    level x cycle as the pre-engine driver did."""
+    (bucket, statics) combination, instead of one compile per level x cycle
+    as the pre-engine driver did.  Since the device-coarsening PR, coarse
+    GraphDev levels carry their own pow2 live-chunk bucket (dead chunks of
+    the finest bucket would multiply the pack gather), so the bound is a
+    couple of chunk-shape buckets x statics — still independent of the
+    V-cycle count."""
     g = barabasi_albert(4096, 5, seed=1)
     cfg = PartitionerConfig(
         k=2, preset="fast", coarsest_factor=20, seed=0, engine="jnp"
@@ -26,8 +30,9 @@ def test_compile_count_bounded_across_vcycles():
     assert st is not None
     # at least 3 levels per cycle, 2 cycles, cluster+refine at every level
     assert st["sweep_calls"] >= 8
-    assert st["sweep_compiles"] <= 4
+    assert st["sweep_compiles"] <= 8
     assert st["sweep_compiles"] <= st["bucket_count"] * 3  # statics combos
+    assert st["sweep_compiles"] < st["sweep_calls"]
     # V-cycle 2 must reuse V-cycle 1's packs for the shared (finest) graph
     assert st["pack_hits"] >= 1
     assert rep.feasible

@@ -52,7 +52,8 @@ def test_collectives_counted():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.launch.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("x",))
 sh = NamedSharding(mesh, P("x", None))
 f = jax.jit(lambda a: (a @ a.T).sum(), in_shardings=sh)
 txt = f.lower(jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile().as_text()

@@ -23,10 +23,10 @@ def test_ep_matches_dense_oracle():
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
+from repro.launch.mesh import make_mesh
 from repro.models.moe import init_moe_params, moe_dense, moe_ep
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 E, D, F, topk = 8, 32, 64, 2
 p = init_moe_params(key, D, F, E, True, jnp.float32)

@@ -6,8 +6,8 @@ from .autoshard import expert_placement, pipeline_stages
 from .baselines import hash_partition, matching_multilevel, random_balanced
 from .contraction import contract, project_labels, relabel
 from .engine import EngineStats, LPEngine
-from .evolutionary import EvoConfig, evolve
-from .fm import fm_refine
+from .evolutionary import EvoConfig, EvoInputs, evolve, evolve_batched_numpy
+from .fm import fm_refine, gain_round_np
 from .initial_partition import greedy_growing, initial_partition, repair_balance
 from .label_propagation import LPResult, lp_cluster, lp_refine, sclap_numpy
 from .metrics import (
@@ -36,8 +36,11 @@ __all__ = [
     "project_labels",
     "relabel",
     "EvoConfig",
+    "EvoInputs",
     "evolve",
+    "evolve_batched_numpy",
     "fm_refine",
+    "gain_round_np",
     "greedy_growing",
     "initial_partition",
     "repair_balance",

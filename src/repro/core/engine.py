@@ -58,11 +58,13 @@ from ..graph.csr import GraphDev, GraphNP
 from ..graph.packing import (
     chunk_geometry,
     ell_pack,
+    gather_ell_device,
     gather_pack_device,
     layout_nodes,
     pack_chunks,
     pad_pack,
     plan_chunks,
+    plan_ell_rows,
 )
 from .contraction import CoarseMap, contract_device
 from .label_propagation import _lp_sweep, make_order
@@ -134,6 +136,8 @@ class EngineStats:
     pack_hits: int = 0
     dense_rounds: int = 0
     dense_compiles: int = 0         # distinct dense-round bucket shapes
+    evo_calls: int = 0              # batched-evolution executable dispatches
+    evo_compiles: int = 0           # distinct evo (phase, bucket) shapes
     contract_calls: int = 0
     contract_compiles: int = 0      # distinct (Nb, Mb) contraction buckets
     gather_builds: int = 0          # device pack gathers (GraphDev levels)
@@ -143,6 +147,7 @@ class EngineStats:
                                     # materializations of GraphDev/CoarseMap)
     buckets: set = field(default_factory=set)   # distinct (C, N, E, A, W)
     contract_buckets: set = field(default_factory=set)  # distinct (Nb, Mb)
+    evo_buckets: set = field(default_factory=set)  # distinct evo shape keys
 
     @property
     def bucket_count(self) -> int:
@@ -151,6 +156,10 @@ class EngineStats:
     @property
     def contract_bucket_count(self) -> int:
         return len(self.contract_buckets)
+
+    @property
+    def evo_bucket_count(self) -> int:
+        return len(self.evo_buckets)
 
 
 class LPEngine:
@@ -194,10 +203,14 @@ class LPEngine:
         self._arenas: Dict[int, _Arena] = {}
         self._ells: Dict[int, _DeviceEll] = {}
         self._cin: Dict[int, tuple] = {}    # padded contraction inputs (GraphNP)
+        self._degs: Dict[int, jax.Array] = {}  # (Ab,) f32 degree arrays (evo)
         self._iota_cache: Optional[jax.Array] = None  # lazy: dist path may never sweep
         self._compile_keys = set()
         self._gather_keys = set()
         self._dense_keys = set()
+        self._exact_weights: Optional[bool] = None  # lazily scanned from g0
+        self._g0 = g0
+        self._shard_steps: Dict[tuple, object] = {}
 
     @property
     def _iota(self) -> jax.Array:
@@ -361,16 +374,42 @@ class LPEngine:
             self.stats.pack_hits += 1
             return hit
         self.stats.pack_builds += 1
-        # KNOWN LIMITATION: a GraphDev level materializes to host here (one
-        # O(n + m) round-trip per level per cycle) — the dense path has no
-        # device ELL gather yet (ROADMAP open item); the chunked refine path
-        # stays fully device-resident.
-        gh = g.to_host() if isinstance(g, GraphDev) else g
-        ell = ell_pack(gh)
         # Pow2 row bucket + pow2(n + 1) node bucket: with dense_round_device's
         # traced n, one compiled round serves every level in the bucket
         # instead of compiling per level (padded rows are sentinel-owned and
         # weight-0, so they contribute nothing).
+        if isinstance(g, GraphDev) and g.m > 0:
+            # Device ELL gather: the O(n) row plan comes from the (cached)
+            # host indptr, the O(m) dst/w fill gathers from the still-
+            # resident CSR — bit-identical to ``ell_pack`` on the
+            # materialized graph, without the O(m) download it used to take.
+            row_node, row_first, row_end = plan_ell_rows(
+                g._indptr_np(), g.n
+            )
+            R = row_node.shape[0]
+            Rb = _pow2(R)
+            row_node = np.pad(row_node, (0, Rb - R), constant_values=g.n)
+            row_first = np.pad(row_first, (0, Rb - R))
+            row_end = np.pad(row_end, (0, Rb - R))
+            rn_d = jnp.asarray(row_node)
+            rf_d = jnp.asarray(row_first)
+            re_d = jnp.asarray(row_end)
+            self.stats.h2d_bytes += row_node.nbytes + row_first.nbytes + row_end.nbytes
+            self.stats.gather_builds += 1
+            gkey = ("ell", Rb, g.indices.shape[0])
+            if gkey not in self._gather_keys:
+                self._gather_keys.add(gkey)
+                self.stats.gather_compiles += 1
+            dst_d, w_d = gather_ell_device(
+                rf_d, re_d, g.indices, g.ew, jnp.int32(g.n)
+            )
+            de = _DeviceEll(
+                graph=g, dst=dst_d, w=w_d, row_node=rn_d, nb=_pow2(g.n + 1)
+            )
+            self._ells[id(g)] = de
+            return de
+        gh = g.to_host() if isinstance(g, GraphDev) else g
+        ell = ell_pack(gh)
         R = ell.rows
         Rb = _pow2(R)
         dst = np.pad(ell.dst, ((0, Rb - R), (0, 0)), constant_values=g.n)
@@ -414,6 +453,7 @@ class LPEngine:
         self._arenas = {k: v for k, v in self._arenas.items() if k in keep_ids}
         self._ells = {k: v for k, v in self._ells.items() if k in keep_ids}
         self._cin = {k: v for k, v in self._cin.items() if k in keep_ids}
+        self._degs = {k: v for k, v in self._degs.items() if k in keep_ids}
 
     # ------------------------------------------------------------------ sweeps
 
@@ -539,6 +579,231 @@ class LPEngine:
         if id(g) != self._g0_id:
             self._ells.pop(id(g), None)
         return self.to_arena(lab, g.n, fill=k)
+
+    # ---------------------------------------------------------- evolutionary
+
+    def _deg_f(self, g: AnyGraph, Ab: int) -> jax.Array:
+        """(Ab,) float32 degrees (0 beyond n), uploaded once per graph."""
+        hit = self._degs.get(id(g))
+        if hit is not None and hit.shape[0] == Ab:
+            return hit
+        deg = np.zeros(Ab, np.float32)
+        deg[: g.n] = g.degrees()
+        arr = jnp.asarray(deg)
+        self.stats.h2d_bytes += deg.nbytes
+        self._degs[id(g)] = arr
+        return arr
+
+    def _weights_exact(self) -> bool:
+        """Integral node/edge weights with f32-exact sums (scanned once from
+        the finest graph; contraction only sums, so every coarse level
+        inherits the property) — the precondition for bit-exact int32
+        fitness keys and order-independent f32 scatter sums."""
+        if self._exact_weights is None:
+            g = self._g0
+            self._exact_weights = bool(
+                (g.m == 0 or np.all(g.ew == np.round(g.ew)))
+                and np.all(g.nw == np.round(g.nw))
+                and float(g.ew.sum()) < 2**24
+                and float(g.nw.sum()) < 2**24
+            )
+        return self._exact_weights
+
+    def can_evolve_device(self, g: AnyGraph, k: int, islands: int,
+                          pop: int) -> bool:
+        """Eligibility gate for the batched device evolution: exact-weight
+        precondition plus shape guards (overlay keys fit int32, dense
+        (pop, Ab, Kb) score tensors fit a sane memory budget)."""
+        n = g.n
+        if n < 1 or k < 1 or k * (k + 1) >= 2**31:
+            return False
+        Ab = _pow2(n + 1)
+        Kb = _pow2(k + 1)
+        Sb = _pow2(max(islands * pop, 1))
+        if Sb * Ab * Kb * 4 > 2**28:
+            return False
+        return self._weights_exact()
+
+    def _evo_arrays(self, g: AnyGraph):
+        """(pack, arc arrays, nw, deg, Ab) for one evolution run; the pack is
+        the cached "random" pack (shared with refine sweeps), so the graph
+        uploads once per run, not once per individual."""
+        dp = self._pack(g, "random")
+        ar = self._arena(g)
+        Ab = _pow2(g.n + 1)
+        return dp, ar, Ab
+
+    def evolve_device(self, g: AnyGraph, cfg, shard: bool = False) -> jax.Array:
+        """Batched island GA on device; returns the best coarsest-graph
+        partition as a DEVICE (n,) int32 label array (bit-identical to
+        :meth:`evolve_oracle` under the same config — tested).
+
+        ``shard=True`` maps islands onto the available devices via
+        ``shard_map`` (requires ``islands %% device_count == 0``); gossip
+        becomes an all_gather collective and results stay bit-identical.
+        """
+        from .evo_device import (
+            evo_generation_step,
+            evo_seed_step,
+            make_generation_sharded,
+        )
+
+        n, k = g.n, cfg.k
+        I, P, G = cfg.islands, cfg.pop_per_island, cfg.generations
+        Ab, Kb = _pow2(n + 1), _pow2(k + 1)
+        Sb, Ib = _pow2(I * P), _pow2(I)
+        dp, ar, _ = self._evo_arrays(g)
+        nw_ab = ar.nw_arena[:Ab]
+        deg = self._deg_f(g, Ab)
+        seed_eff = int(cfg.seed) & 0x7FFFFFFF
+        seed_lab = np.full((Sb, Ab), k, np.int32)
+        seed_mask = np.zeros(Sb, bool)
+        if cfg.seed_individuals:
+            for isl in range(I):
+                row = isl * P
+                seed_lab[row, :n] = np.asarray(
+                    cfg.seed_individuals[isl % len(cfg.seed_individuals)][:n],
+                    dtype=np.int32,
+                )
+                seed_mask[row] = True
+        self.stats.h2d_bytes += seed_lab.nbytes + seed_mask.nbytes
+        skey = ("evo_seed", dp.shape, Sb, Ab, Kb, cfg.refine_iters)
+        self.stats.evo_calls += 1
+        if skey not in self.stats.evo_buckets:
+            self.stats.evo_buckets.add(skey)
+            self.stats.evo_compiles += 1
+        labs, keys = evo_seed_step(
+            dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w,
+            dp.edge_src_slot, dp.edge_valid,
+            jnp.asarray(seed_lab), jnp.asarray(seed_mask),
+            ar.src, ar.dst, ar.ew, nw_ab, deg,
+            jnp.float32(cfg.Lmax), jnp.int32(seed_eff),
+            jnp.int32(I), jnp.int32(P), jnp.int32(n), jnp.int32(k),
+            jnp.int32(dp.num_chunks),
+            refine_iters=cfg.refine_iters, Kb=Kb,
+        )
+        D = jax.device_count()
+        if shard and G > 0 and D > 1 and I % D == 0:
+            labs, keys = self._evolve_sharded(
+                g, cfg, dp, ar, labs, keys, nw_ab, seed_eff, D,
+                make_generation_sharded,
+            )
+        else:
+            gkey = ("evo_gen", dp.shape, Sb, Ab, Ib, Kb, cfg.refine_iters)
+            for gen in range(G):
+                self.stats.evo_calls += 1
+                if gkey not in self.stats.evo_buckets:
+                    self.stats.evo_buckets.add(gkey)
+                    self.stats.evo_compiles += 1
+                labs, keys = evo_generation_step(
+                    dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w,
+                    dp.edge_src_slot, dp.edge_valid,
+                    labs, keys, ar.src, ar.dst, ar.ew, nw_ab,
+                    jnp.float32(cfg.Lmax), jnp.int32(seed_eff),
+                    jnp.int32(gen), jnp.int32(0),
+                    jnp.int32(I), jnp.int32(P), jnp.int32(n), jnp.int32(k),
+                    jnp.int32(dp.num_chunks),
+                    refine_iters=cfg.refine_iters, Kb=Kb, Ib=Ib,
+                )
+        Sb_cur = labs.shape[0]
+        valid = jnp.arange(Sb_cur) < I * P
+        bkey = jnp.min(jnp.where(valid, keys, 2**31 - 1))
+        bidx = jnp.min(
+            jnp.where(valid & (keys == bkey), jnp.arange(Sb_cur), Sb_cur)
+        )
+        return labs[jnp.minimum(bidx, Sb_cur - 1)][:n]
+
+    def _evolve_sharded(self, g, cfg, dp, ar, labs, keys, nw_ab, seed_eff,
+                        D, make_step):
+        """Generation loop over ``shard_map`` island shards (device evo's
+        distributed mode); state is resharded (D, Sb_loc, Ab) around the
+        single-device seed phase and flattened back for best-selection."""
+        from ..launch.mesh import make_mesh
+
+        n, k = g.n, cfg.k
+        I, P, G = cfg.islands, cfg.pop_per_island, cfg.generations
+        Ab = labs.shape[1]
+        I_loc = I // D
+        S_loc = I_loc * P
+        Sb_loc = _pow2(S_loc)
+        Kb = _pow2(k + 1)
+        Ib_loc = _pow2(I_loc)
+        lab_h = np.asarray(labs)
+        key_h = np.asarray(keys)
+        self.stats.d2h_bytes += lab_h.nbytes + key_h.nbytes
+        lab_sh = np.full((D, Sb_loc, Ab), k, np.int32)
+        key_sh = np.full((D, Sb_loc), 2**31 - 1, np.int32)
+        for d in range(D):
+            lab_sh[d, :S_loc] = lab_h[d * S_loc:(d + 1) * S_loc]
+            key_sh[d, :S_loc] = key_h[d * S_loc:(d + 1) * S_loc]
+        offs = (np.arange(D, dtype=np.int32) * I_loc)[:, None]
+        stat_key = ("evo_gen_sharded", dp.shape, D, Sb_loc, Ab, Ib_loc, Kb,
+                    cfg.refine_iters)
+        # keyed on the step's actual statics (a mesh identity would miss on
+        # every call — make_mesh returns a fresh object — and re-jit the
+        # shard_map executable once per V-cycle)
+        step_key = (D, cfg.refine_iters, Kb, Ib_loc)
+        step = self._shard_steps.get(step_key)
+        if step is None:
+            step = make_step(
+                make_mesh((D,), ("island",)), cfg.refine_iters, Kb, Ib_loc
+            )
+            self._shard_steps[step_key] = step
+        labs_d = jnp.asarray(lab_sh)
+        keys_d = jnp.asarray(key_sh)
+        self.stats.h2d_bytes += lab_sh.nbytes + key_sh.nbytes
+        offs_d = jnp.asarray(offs)
+        for gen in range(G):
+            self.stats.evo_calls += 1
+            if stat_key not in self.stats.evo_buckets:
+                self.stats.evo_buckets.add(stat_key)
+                self.stats.evo_compiles += 1
+            labs_d, keys_d = step(
+                dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w,
+                dp.edge_src_slot, dp.edge_valid,
+                labs_d, keys_d, ar.src, ar.dst, ar.ew, nw_ab,
+                jnp.float32(cfg.Lmax), jnp.int32(seed_eff), jnp.int32(gen),
+                offs_d,
+                jnp.int32(I_loc), jnp.int32(P), jnp.int32(n), jnp.int32(k),
+                jnp.int32(dp.num_chunks),
+            )
+        # flatten back to island-major flat order (gossip already global)
+        lab_fh = np.asarray(labs_d)
+        key_fh = np.asarray(keys_d)
+        self.stats.d2h_bytes += lab_fh.nbytes + key_fh.nbytes
+        Sb = _pow2(I * P)
+        lab_out = np.full((Sb, Ab), k, np.int32)
+        key_out = np.full(Sb, 2**31 - 1, np.int32)
+        for d in range(D):
+            lab_out[d * S_loc:(d + 1) * S_loc] = lab_fh[d, :S_loc]
+            key_out[d * S_loc:(d + 1) * S_loc] = key_fh[d, :S_loc]
+        return jnp.asarray(lab_out), jnp.asarray(key_out)
+
+    def evolve_oracle(self, g: AnyGraph, cfg, trace=None) -> np.ndarray:
+        """Sequential host-numpy oracle on the SAME pack/arc arrays the
+        device path dispatches — the parity reference and the
+        host-sequential baseline of the ``evo_hot`` benchmark."""
+        from .evolutionary import EvoInputs, evolve_batched_numpy
+
+        dp, ar, Ab = self._evo_arrays(g)
+        deg = np.zeros(Ab, np.int32)
+        deg[: g.n] = g.degrees()
+        inp = EvoInputs(
+            nodes=np.asarray(dp.nodes),
+            node_valid=np.asarray(dp.node_valid),
+            edge_dst=np.asarray(dp.edge_dst),
+            edge_w=np.asarray(dp.edge_w),
+            edge_src_slot=np.asarray(dp.edge_src_slot),
+            edge_valid=np.asarray(dp.edge_valid),
+            num_chunks=dp.num_chunks,
+            src=np.asarray(ar.src),
+            dst=np.asarray(ar.dst),
+            ew=np.asarray(ar.ew),
+            nw=np.asarray(ar.nw_arena[:Ab]),
+            deg=deg,
+            n=g.n,
+        )
+        return evolve_batched_numpy(inp, cfg, trace=trace)
 
     # ------------------------------------------------------------ contraction
 
@@ -732,6 +997,9 @@ class LPEngine:
             pack_hits=self.stats.pack_hits,
             dense_rounds=self.stats.dense_rounds,
             dense_compiles=self.stats.dense_compiles,
+            evo_calls=self.stats.evo_calls,
+            evo_compiles=self.stats.evo_compiles,
+            evo_bucket_count=self.stats.evo_bucket_count,
             contract_calls=self.stats.contract_calls,
             contract_compiles=self.stats.contract_compiles,
             contract_bucket_count=self.stats.contract_bucket_count,

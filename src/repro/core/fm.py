@@ -19,7 +19,56 @@ import numpy as np
 from ..graph.csr import GraphNP
 from .metrics import block_weights_np
 
-__all__ = ["fm_refine"]
+__all__ = ["fm_refine", "gain_round_np"]
+
+
+def gain_round_np(
+    src: np.ndarray,
+    dst: np.ndarray,
+    ew: np.ndarray,
+    nw: np.ndarray,
+    labels: np.ndarray,
+    n: int,
+    k: int,
+    Kb: int,
+    Lmax,
+    base_score: int,
+    base_gate: int,
+) -> np.ndarray:
+    """One synchronous best-gain move round — the FM-lite step of the
+    batched evolutionary refinement (numpy spec twin of ``_gain_round`` in
+    repro.core.evo_device; the device version is vmapped over the
+    population and must stay op-for-op identical).
+
+    Unlike :func:`fm_refine`'s sequential heap walk, all nodes see the same
+    stale state and move together: eligibility is a *strict* connection gain
+    (``conn[v, b] > conn[v, own]``) under the balance bound, tie-broken by
+    stateless hash jitter, and damped by a 0.5 move gate.  Synchronous moves
+    can transiently worsen the cut; the caller's elitism step absorbs that.
+
+    ``labels`` is an arena-sized (``Ab >= n + 1``) int32 array with label
+    ``k`` beyond ``n``; arc arrays may carry trailing zero-weight padding.
+    """
+    Ab = labels.shape[0]
+    iota = np.arange(Ab, dtype=np.int32)
+    kio = np.arange(Kb, dtype=np.int32)
+    conn = np.zeros((Ab, Kb), np.float32)
+    np.add.at(conn, (src, labels[dst]), ew)
+    own = conn[iota, np.minimum(labels, Kb - 1)]
+    bw = np.zeros(Kb, np.float32)
+    np.add.at(bw, labels, nw)
+    bwx = np.where(kio < k, bw, np.float32(np.inf)).astype(np.float32)
+    from .label_propagation import hash_jitter_np, hash_unit_np
+
+    jit = hash_jitter_np(base_score, iota[:, None], kio[None, :])
+    fits = bwx[None, :] + nw[:, None] <= np.float32(Lmax)
+    elig = fits & (kio[None, :] != labels[:, None]) & (conn > own[:, None])
+    score = np.where(elig, conn + jit, np.float32(-1e30)).astype(np.float32)
+    b = np.argmax(score, axis=1).astype(np.int32)
+    has = score[iota, b] > np.float32(-5e29)
+    u = hash_unit_np(base_gate, iota, np.int32(0))
+    move = has & (u < np.float32(0.5)) & (iota < n)
+    return np.where(move, b, labels).astype(np.int32)
 
 
 def fm_refine(

@@ -24,6 +24,12 @@ def greedy_growing(g: GraphNP, k: int, Lmax: float, seed: int = 0) -> np.ndarray
     """Grow k blocks from random seeds under the balance bound L_max."""
     rng = np.random.default_rng(seed)
     n = g.n
+    if k >= n:
+        # degenerate coarsest graph: the degree-biased seed draw cannot pick
+        # k distinct nodes (rng.choice(n, size=k, replace=False) raises), so
+        # every node founds its own block round-robin — trivially balanced,
+        # and blocks >= n simply stay empty.
+        return (np.arange(n) % max(k, 1)).astype(np.int32)
     labels = np.full(n, -1, dtype=np.int64)
     deg = g.degrees().astype(np.float64)
     # degree-biased seeds: grow from inside components, not from isolated nodes

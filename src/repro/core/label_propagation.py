@@ -63,7 +63,19 @@ import jax.numpy as jnp
 from ..graph.csr import GraphNP
 from ..graph.packing import ChunkPack, pack_chunks
 
-__all__ = ["LPResult", "lp_cluster", "lp_refine", "make_order", "sclap_numpy"]
+__all__ = [
+    "LPResult",
+    "lp_cluster",
+    "lp_refine",
+    "make_order",
+    "sclap_numpy",
+    "hash_mix_np",
+    "hash_base_u32",
+    "hash_jitter_np",
+    "hash_unit_np",
+    "hash_u32_np",
+    "sweep_refine_numpy",
+]
 
 _NEG = -1e30
 
@@ -392,6 +404,188 @@ def lp_refine(
         permute_chunks=False,
     )
     return LPResult(labels=np.asarray(labels[:n]), moves=int(moves), iters=iters)
+
+
+# --------------------------------------------------------------------------
+# numpy mirrors of the device hash family (bit-exact)
+#
+# The batched evolutionary engine's parity oracle (repro.core.evolutionary)
+# re-derives every tie-break and gate on host, so the uint32 mixer above
+# needs exact numpy twins.  Scalar mixing runs in python ints masked to 32
+# bits (numpy SCALAR uint32 overflow warns; python ints don't); array mixing
+# runs on uint32 ndarrays, whose overflow wraps silently.  All float steps
+# are forced to float32 so IEEE results match XLA bit-for-bit.
+# --------------------------------------------------------------------------
+
+_M32 = 0xFFFFFFFF
+
+
+def hash_u32_scalar(h: int, x: int) -> int:
+    """Scalar twin of ``_hash_mix`` (python ints, wrap-around 32-bit)."""
+    h = ((h ^ (x & _M32)) * 0xC2B2AE35) & _M32
+    return h ^ (h >> 15)
+
+
+def hash_base_u32(seed: int, it: int, extra: int) -> int:
+    """Scalar twin of ``_hash_base``; returns a python int in [0, 2^32)."""
+    s = (
+        (seed & _M32) * 0x9E3779B1
+        + (it & _M32) * 0x85EBCA77
+        + (extra & _M32) * 0x27D4EB2F
+    ) & _M32
+    return hash_u32_scalar(0x165667B1, s)
+
+
+def hash_mix_np(h, x):
+    """Array twin of ``_hash_mix``: h is a python int or uint32 array."""
+    xa = np.asarray(x)
+    if isinstance(h, (int, np.integer)) and xa.ndim == 0:
+        return np.uint32(hash_u32_scalar(int(h) & _M32, int(xa)))
+    if isinstance(h, (int, np.integer)):
+        h = np.uint32(h & _M32)
+    h = (h ^ xa.astype(np.uint32)) * np.uint32(0xC2B2AE35)
+    return h ^ (h >> np.uint32(15))
+
+
+def hash_jitter_np(base, a, b) -> np.ndarray:
+    """Array twin of ``_hash_jitter``: float32 jitter in [0, 0.49)."""
+    h = hash_mix_np(hash_mix_np(base, a), b)
+    return (
+        (h & np.uint32(0xFFFFFF)).astype(np.float32)
+        / np.float32(1 << 24)
+        * np.float32(0.49)
+    )
+
+
+def hash_unit_np(base, a, b) -> np.ndarray:
+    """Uniform-ish float32 in [0, 1) from integer coordinates (array twin of
+    the device ``_hash_unit`` in repro.core.evo_device)."""
+    h = hash_mix_np(hash_mix_np(base, a), b)
+    return (h & np.uint32(0xFFFFFF)).astype(np.float32) / np.float32(1 << 24)
+
+
+def hash_u32_np(base, a, b) -> np.ndarray:
+    """Raw uint32 stream from integer coordinates (array twin of
+    ``_hash_u32``)."""
+    return hash_mix_np(hash_mix_np(base, a), b)
+
+
+def sweep_refine_numpy(
+    nodes: np.ndarray,          # (C, N) int32 pack layout (padded, sentinel n)
+    node_valid: np.ndarray,     # (C, N) bool
+    edge_dst: np.ndarray,       # (C, E) int32
+    edge_w: np.ndarray,         # (C, E) float32
+    edge_src_slot: np.ndarray,  # (C, E) int32
+    edge_valid: np.ndarray,     # (C, E) bool
+    labels: np.ndarray,         # (A,) int32, A >= n + 1; k beyond n
+    weights: np.ndarray,        # (W,) float32 block weights; +inf at slots >= k
+    nw_ext: np.ndarray,         # (A,) float32 node weights, 0 beyond n
+    U: float,
+    seed: int,
+    num_labels: int,            # k
+    num_chunks: int,
+    iters: int,
+) -> tuple:
+    """Bit-exact numpy mirror of ``_lp_sweep(refine_mode=True,
+    use_restrict=False, permute_chunks=True)``.
+
+    This is the parity oracle the batched evolutionary engine refines
+    against: same chunk visit permutation, same (slot, label) run sums, same
+    stateless tie-break jitter, same influx gating, same weight updates.
+    Bit-identity holds for integral node/edge weights (float32 sums are then
+    exact in any order — the same precondition the device path is gated on);
+    see tests/test_evo_device.py.  Returns ``(labels, weights)`` copies.
+    """
+    C, N = nodes.shape
+    labels = labels.astype(np.int32).copy()
+    weights = weights.astype(np.float32).copy()
+    U = np.float32(U)
+    k = int(num_labels)
+    NEG = np.float32(_NEG)
+    # device-side chunk visit permutation (uint32 hash -> f32, stable sort)
+    hc = hash_mix_np(
+        hash_base_u32(seed, 0, 0x7F4A7C15), np.arange(C, dtype=np.int32)
+    ).astype(np.float32)
+    hc = hc + np.where(
+        np.arange(C) >= num_chunks, np.float32(1e10), np.float32(0.0)
+    )
+    perm = np.argsort(hc, kind="stable")
+    for it in range(iters):
+        base1 = hash_base_u32(seed, it, 0x51ED2701)
+        base2 = hash_base_u32(seed, it, 0x2545F491)
+        for ci in range(num_chunks):
+            cc = int(perm[ci])
+            nd = nodes[cc]
+            ndv = node_valid[cc]
+            ev = edge_valid[cc]
+            dst = edge_dst[cc][ev]
+            w0 = edge_w[cc][ev].astype(np.float32)
+            slot = edge_src_slot[cc][ev]
+            cand = labels[dst].astype(np.int64)
+            # ---- (slot, label) run reduction (order-independent: integral
+            # weights make the float32 segment sums exact) ----
+            key = slot.astype(np.int64) * np.int64(k + 1) + cand
+            uniq, inv = np.unique(key, return_inverse=True)
+            run_w = np.zeros(uniq.shape[0], np.float32)
+            np.add.at(run_w, inv, w0)
+            run_slot = (uniq // (k + 1)).astype(np.int32)
+            run_lbl = (uniq % (k + 1)).astype(np.int32)
+            # ---- eligibility + scoring (mirror of the device rules) ----
+            own = labels[nd]                       # (N,) label k at sentinels
+            own_r = own[run_slot]
+            node_w_r = nw_ext[nd[run_slot]]
+            cand_w = weights[np.minimum(run_lbl, k)]
+            fits = cand_w + node_w_r <= U
+            overloaded = weights[np.minimum(own_r, k)] > U
+            eligible = np.where(
+                overloaded,
+                fits & (run_lbl != own_r),
+                (run_w > 0) & (fits | (run_lbl == own_r)),
+            )
+            base_c = (base1 + cc) & _M32
+            jitter = hash_jitter_np(base_c, run_slot, run_lbl)
+            score = np.where(eligible, run_w + jitter, NEG)
+            # ---- per-node argmax with min-label tie-break ----
+            best = np.full(N + 1, NEG, np.float32)
+            np.maximum.at(best, run_slot, score)
+            is_best = (score >= best[run_slot]) & (score > NEG / 2)
+            win = np.full(N + 1, k, np.int32)
+            np.minimum.at(
+                win, run_slot, np.where(is_best, run_lbl, np.int32(k))
+            )
+            win = win[:N]
+            new_lbl = np.where(ndv & (win < k), win, own).astype(np.int32)
+            moved = ndv & (new_lbl != own)
+            nwv = nw_ext[nd]
+            # ---- influx gating (same expectation cap as the device) ----
+            mv_w = np.where(moved, nwv, np.float32(0.0)).astype(np.float32)
+            inflow = np.zeros(weights.shape[0], np.float32)
+            outflow = np.zeros(weights.shape[0], np.float32)
+            np.add.at(inflow, np.where(moved, new_lbl, k), mv_w)
+            np.add.at(outflow, np.where(moved, own, k), mv_w)
+            head = (U - weights + outflow).astype(np.float32)
+            with np.errstate(invalid="ignore", over="ignore"):
+                p_in = np.clip(
+                    head / np.maximum(inflow, np.float32(1e-9)),
+                    np.float32(0.0),
+                    np.float32(1.0),
+                )
+            gate_u = hash_jitter_np(
+                (base2 + cc) & _M32, nd, new_lbl
+            ) / np.float32(0.49)
+            moved &= gate_u < p_in[np.minimum(new_lbl, k)]
+            new_lbl = np.where(moved, new_lbl, own).astype(np.int32)
+            labels[nd[ndv]] = new_lbl[ndv]
+            np.add.at(
+                weights, np.where(moved, own, k),
+                np.where(moved, -nwv, np.float32(0.0)).astype(np.float32),
+            )
+            np.add.at(
+                weights, np.where(moved, new_lbl, k),
+                np.where(moved, nwv, np.float32(0.0)).astype(np.float32),
+            )
+            weights[k] = np.inf
+    return labels, weights
 
 
 # --------------------------------------------------------------------------

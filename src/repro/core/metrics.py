@@ -11,12 +11,30 @@ from ..graph.csr import Graph, GraphNP
 __all__ = [
     "cut_np",
     "cut_jnp",
+    "cut_from_arcs_jnp",
     "block_weights_np",
+    "block_weights_dense_jnp",
     "imbalance_np",
     "is_feasible",
     "quotient_graph_np",
     "comm_volume_np",
 ]
+
+
+def cut_from_arcs_jnp(labels, src, dst, ew):
+    """Edge cut from flat arc arrays on device (one individual; ``vmap`` the
+    labels axis for a population batch).  Trailing zero-weight arc padding is
+    inert; for integral weights the f32 sum is exact in any order — the
+    batched evolutionary fitness relies on that exactness."""
+    diff = labels[src] != labels[dst]
+    return jnp.sum(jnp.where(diff, ew, 0.0)) / 2.0
+
+
+def block_weights_dense_jnp(labels, nw, k, Kb: int):
+    """(Kb,) block weights of arena labels on device: slots >= ``k`` (traced)
+    collect the arena's sentinel label with weight 0 — inert.  Returns the
+    raw vector; callers mask or +inf-pad the dead slots as needed."""
+    return jnp.zeros((Kb,), jnp.float32).at[labels].add(nw)
 
 
 def cut_np(g: GraphNP, labels: np.ndarray) -> float:

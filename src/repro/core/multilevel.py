@@ -73,6 +73,18 @@ class PartitionerConfig:
     # (>= dense_min_n nodes), falling back to chunked/numpy below.
     refine_engine: str = "chunked"  # chunked | dense
     dense_min_n: int = 4096
+    # coarsest-stage evolutionary engine: "device" runs the batched island
+    # GA on device (population as a (pop, n) batch over the still-resident
+    # coarsest graph — GraphDev levels never materialize to host); "host" is
+    # the legacy sequential KaFFPaE loop; "auto" picks device whenever the
+    # LP engine is active and the exact-weight eligibility gate passes
+    # (LPEngine.can_evolve_device), host otherwise.
+    evo_engine: str = "auto"        # auto | device | host
+    # map islands onto shard_map shards (one mesh axis over the local
+    # devices; per-epoch gossip becomes an all_gather collective).  Requires
+    # islands % device_count == 0; results stay bit-identical to the
+    # single-device path, so this is purely a throughput knob.
+    evo_shard_islands: bool = False
     # BEYOND-PAPER: gain-based FM pass on the finest level (the paper's fine
     # refinement is LP-only; see EXPERIMENTS.md §Paper-validation for the
     # separate accounting).  Enabled by the "strong" preset.
@@ -232,6 +244,8 @@ def _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng):
             if lab is None:  # leaving the device path (defensive; host levels
                 lab = np.asarray(lab_dev)  # precede device levels in practice)
                 lab_dev = None
+            elif not isinstance(lab, np.ndarray):
+                lab = np.asarray(lab)  # device-evo labels entering a host level
             lab = project_labels(lab, C_np)
             before = cut_np(gg_h, lab)
             ref = _refine(gg_h, lab, k, L, cfg.lp_iters_refine, seed_r, cfg)
@@ -241,7 +255,7 @@ def _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng):
                 lab = ref
     if lab is None:
         lab = eng.to_host(lab_dev, g.n)
-    return lab
+    return np.asarray(lab)  # device-evo labels may reach here untouched
 
 
 def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
@@ -329,7 +343,6 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
             level_sizes = [(h[0].n, h[0].m) for h in hierarchy] + [(gg.n, gg.m)]
 
         # ---------------- initial partitioning ----------------
-        gg_host = gg.to_host() if isinstance(gg, GraphDev) else gg
         seeds = []
         if cur_labels is not None:
             if not isinstance(restrict, np.ndarray):
@@ -345,7 +358,20 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
             seed=int(rng.integers(1 << 30)),
             seed_individuals=seeds,
         )
-        lab = evolve(gg_host, evo)
+        use_dev_evo = (
+            eng is not None
+            and cfg.engine in ("auto", "jnp")
+            and cfg.evo_engine in ("auto", "device")
+            and eng.can_evolve_device(gg, k, cfg.islands, cfg.pop_per_island)
+        )
+        if use_dev_evo:
+            # the coarsest stage consumes the still-resident GraphDev (or the
+            # finest GraphNP) directly: batched device GA, labels stay on
+            # device into the uncoarsening projection
+            lab = eng.evolve_device(gg, evo, shard=cfg.evo_shard_islands)
+        else:
+            gg_host = gg.to_host() if isinstance(gg, GraphDev) else gg
+            lab = evolve(gg_host, evo)
 
         # ---------------- uncoarsening + local search ----------------
         lab = _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng)

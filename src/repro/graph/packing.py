@@ -65,6 +65,8 @@ __all__ = [
     "layout_nodes",
     "pack_chunks",
     "gather_pack_device",
+    "gather_ell_device",
+    "plan_ell_rows",
     "pad_pack",
     "ell_pack",
     "shard_graph",
@@ -339,6 +341,60 @@ class EllPack:
     @property
     def width(self) -> int:
         return self.dst.shape[1]
+
+
+def plan_ell_rows(
+    indptr: np.ndarray, n: int, width: int = 128, tile_rows: int = 256
+):
+    """Host half of a *device* ELL pack: the O(n + R) row plan.
+
+    Mirrors :func:`ell_pack`'s row-splitting exactly (same widths, same
+    tile-rounding) but emits only the per-row ``(row_node, row_first,
+    row_end)`` adjacency offsets; the O(m) ``dst``/``w`` fill is gathered on
+    device by :func:`gather_ell_device` from a still-resident CSR.  The
+    emitted arrays are bit-identical to the host pack on the materialized
+    graph — the dense-refinement analogue of :func:`plan_chunks` +
+    :func:`gather_pack_device`.
+    """
+    deg = np.diff(np.asarray(indptr[: n + 1], dtype=np.int64))
+    nrows = np.maximum(1, (deg + width - 1) // width)
+    R = int(nrows.sum())
+    Rp = _round_up(max(R, 1), tile_rows)
+    row_node = np.full(Rp, n, dtype=np.int32)
+    row_node[:R] = np.repeat(np.arange(n, dtype=np.int32), nrows)
+    starts = np.cumsum(np.concatenate([[0], nrows]))[:-1]
+    within = np.arange(R, dtype=np.int64) - np.repeat(starts, nrows)
+    row_first = np.zeros(Rp, dtype=np.int32)
+    row_end = np.zeros(Rp, dtype=np.int32)
+    row_first[:R] = (
+        np.repeat(np.asarray(indptr[:-1], dtype=np.int64), nrows)
+        + within * width
+    ).astype(np.int32)
+    row_end[:R] = np.repeat(
+        np.asarray(indptr[1:], dtype=np.int64), nrows
+    ).astype(np.int32)
+    return row_node, row_first, row_end
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def gather_ell_device(
+    row_first,   # (R,) int32 — first adjacency offset of each row
+    row_end,     # (R,) int32 — row's exclusive end offset (== indptr[v + 1])
+    indices,     # (Mb,) int32 — device CSR heads
+    ew,          # (Mb,) f32
+    n,           # traced scalar int32 — sentinel destination for padding
+    *,
+    width: int = 128,
+):
+    """Device edge fill for an ELL row plan: ``dst``/``w`` bit-identical to
+    :func:`ell_pack` on the materialized graph, gathered from the
+    device-resident CSR (one executable per ``(R, Mb)`` shape)."""
+    pos = row_first[:, None] + jnp.arange(width, dtype=jnp.int32)[None, :]
+    valid = pos < row_end[:, None]
+    pos_c = jnp.clip(pos, 0, indices.shape[0] - 1)
+    dst = jnp.where(valid, indices[pos_c], n).astype(jnp.int32)
+    w = jnp.where(valid, ew[pos_c], 0.0)
+    return dst, w
 
 
 def ell_pack(g: GraphNP, width: int = 128, tile_rows: int = 256) -> EllPack:

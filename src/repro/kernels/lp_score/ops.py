@@ -27,6 +27,7 @@ __all__ = [
     "node_scores",
     "lp_refine_dense_round",
     "dense_round_device",
+    "dense_round_device_batched",
     "dense_eligibility",
     "pad_k",
 ]
@@ -186,6 +187,35 @@ def dense_round_device(
         ell_dst, ell_w, row_node, lab, nw, U, seed, move_fraction, n,
         k=k, use_pallas=use_pallas, interpret=interpret,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas", "interpret"))
+def dense_round_device_batched(
+    ell_dst,            # (Rb, W) int32 — shared cached ELL pack
+    ell_w,              # (Rb, W) f32
+    row_node,           # (Rb,)  int32, sentinel n
+    labs,               # (B, nb) int32 — population label batch
+    nw,                 # (nb,)  f32 — shared node weights
+    U,                  # scalar f32
+    seeds,              # (B,) int32 — per-individual round seeds
+    move_fraction,      # scalar f32
+    n,                  # traced scalar int32
+    *,
+    k: int,
+    use_pallas: bool,
+    interpret: bool,
+):
+    """Population-batched synchronous dense round: a ``vmap`` label axis over
+    :func:`dense_round_device`'s body with the ELL pack shared across the
+    batch — one kernel dispatch refines every individual, and each row is
+    bit-identical to a per-individual :func:`dense_round_device` call with
+    the same seed (tested in tests/test_kernels.py)."""
+    return jax.vmap(
+        lambda lab, sd: _dense_round_body(
+            ell_dst, ell_w, row_node, lab, nw, U, sd, move_fraction, n,
+            k=k, use_pallas=use_pallas, interpret=interpret,
+        )
+    )(labs, seeds)
 
 
 def lp_refine_dense_round(

@@ -8,8 +8,8 @@ import jax.numpy as jnp
 from repro.core.metrics import lmax, cut_np
 from repro.graph import ell_pack, mesh2d, rmat, star
 from repro.kernels.lp_score import (
-    dense_eligibility, lp_refine_dense_round, node_scores, node_scores_ref,
-    pad_k,
+    dense_eligibility, dense_round_device, dense_round_device_batched,
+    lp_refine_dense_round, node_scores, node_scores_ref, pad_k,
 )
 
 
@@ -117,3 +117,34 @@ def test_dense_eligibility_matches_sclap_numpy():
             elig = (conn > 0) & (fits | (cand == own))
         want[v, cand[elig]] = True
     np.testing.assert_array_equal(got, want)
+
+
+def test_dense_round_batched_matches_per_individual():
+    """Population-batched dense round: every row of the vmapped batch must be
+    bit-identical to a per-individual dense_round_device call with the same
+    seed (the batched evolutionary engine's dense-refinement building block)."""
+    g = rmat(9, 8, seed=7)
+    k, B = 4, 5
+    ell = ell_pack(g)
+    rng = np.random.default_rng(1)
+    nb = g.n + 1
+    labs = np.full((B, nb), k, np.int32)
+    labs[:, : g.n] = rng.integers(0, k, (B, g.n))
+    nw = np.concatenate([g.nw.astype(np.float32), np.zeros(1, np.float32)])
+    U = np.float32(lmax(g.n, k, 0.05))
+    seeds = np.arange(17, 17 + B, dtype=np.int32)
+    batched = np.asarray(dense_round_device_batched(
+        jnp.asarray(ell.dst), jnp.asarray(ell.w), jnp.asarray(ell.row_node),
+        jnp.asarray(labs), jnp.asarray(nw), jnp.float32(U),
+        jnp.asarray(seeds), jnp.float32(0.5), jnp.int32(g.n),
+        k=k, use_pallas=False, interpret=True,
+    ))
+    for b in range(B):
+        single = np.asarray(dense_round_device(
+            jnp.asarray(ell.dst), jnp.asarray(ell.w),
+            jnp.asarray(ell.row_node),
+            jnp.asarray(labs[b]), jnp.asarray(nw), jnp.float32(U),
+            jnp.int32(int(seeds[b])), jnp.float32(0.5), jnp.int32(g.n),
+            k=k, use_pallas=False, interpret=True,
+        ))
+        np.testing.assert_array_equal(batched[b], single)

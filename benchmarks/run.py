@@ -29,6 +29,11 @@ at laptop scale, preserving the paper's *relative* claims:
                          vs the sequential host loop (the numpy oracle) —
                          steady-state generation time, h2d/d2h deltas,
                          compile count vs bucket count across V-cycles
+  dynamic_hot         -> PR 4: streaming-update serving (PartitionSession:
+                         overlay append + device compaction + h-hop region
+                         repair) vs a full re-partition per batch —
+                         updates/sec, repair-vs-full speedup, cut-ratio
+                         trajectory, repair compile/bucket counts
 
 Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
 With ``--json PATH``, tables additionally emit machine-readable rows
@@ -699,6 +704,127 @@ def evo_hot():
     return rows
 
 
+def dynamic_hot():
+    """PR 4: incremental repair vs full re-partition under streaming updates.
+
+    A PartitionSession holds the ba-16384 graph + a k=4 partition resident
+    on device and absorbs batches of ~1% edge churn (0.5% random adds +
+    0.5% removals of existing edges).  Steady state (warm jit caches,
+    min-of-3):
+
+      * update row — one session.update(): overlay append + bucketed device
+        compaction + h-hop region repair (cached-_lp_sweep region pack,
+        gain/balance rounds) + quality guard.
+      * full row — a fresh multilevel partition() on the same final graph
+        (min-of-3 wall time; best-of-3 cut as the quality reference).
+
+    Acceptance (ISSUE 4): update >= 5x faster than the full re-run, session
+    cut within 5% of the full re-partition's, imbalance <= eps, and
+    repair_compiles == repair_bucket_count across the stream.
+    """
+    from repro.core import PartitionerConfig, partition
+    from repro.dynamic import GraphUpdate, PartitionSession, SessionConfig
+    from repro.graph import barabasi_albert
+
+    rows = []
+    g = barabasi_albert(16384, 6, seed=3)
+    k = 4
+    t0 = time.time()
+    sess = PartitionSession(g, SessionConfig(k=k, seed=0))
+    t_init = time.time() - t0
+    eps = sess.cfg.eps
+    rng = np.random.default_rng(11)
+    nb = max(g.m // 2 // 200, 64)           # ~0.5% of edges added + removed
+    src0 = g.arc_sources()
+    # canonical (src < dst) arcs only: each undirected edge sampled once
+    removed = src0 >= g.indices
+
+    def one_batch():
+        au = rng.integers(0, sess.n, nb)
+        av = (au + 1 + rng.integers(0, sess.n - 1, nb)) % sess.n
+        cand = rng.permutation(np.flatnonzero(~removed))[:nb]
+        removed[cand] = True
+        ru, rv = src0[cand], g.indices[cand]
+        return sess.update(
+            GraphUpdate.add_edges(au, av).merged(GraphUpdate.remove_edges(ru, rv))
+        )
+
+    warm, timed = 2, 3
+    for _ in range(warm):
+        one_batch()
+    t_upd, traj = [], []
+    for _ in range(timed):
+        res = one_batch()
+        t_upd.append(res.seconds)
+        traj.append(dict(step=res.step, cut=res.cut, imbalance=res.imbalance,
+                         region=res.region_size, escalated=res.escalated))
+    st = sess.stats()
+    gh = sess.store.csr_host()
+    t_full, cut_full = [], []
+    for r in range(3):
+        t0 = time.time()
+        rep = partition(gh, PartitionerConfig(k=k, preset="fast", seed=r))
+        t_full.append(time.time() - t0)
+        cut_full.append(rep.cut)
+    us_upd = min(t_upd) * 1e6
+    us_full = min(t_full) * 1e6
+    speedup = us_full / max(us_upd, 1)
+    cut_ratio = sess.cut / max(min(cut_full), 1.0)
+    print("metric,value")
+    print(f"graph,ba-16384 k={k}")
+    print(f"batch_edges_added,{nb}")
+    print(f"batch_edges_removed,{nb}")
+    print(f"session_init_s,{t_init:.1f}")
+    print(f"steady_state_us_per_update,{us_upd:.0f}")
+    print(f"updates_per_s,{1e6 / max(us_upd, 1):.2f}")
+    print(f"full_repartition_us,{us_full:.0f}")
+    print(f"repair_vs_full_speedup,x{speedup:.1f}")
+    print(f"cut_session,{sess.cut:.0f}")
+    print(f"cut_full_best_of_3,{min(cut_full):.0f}")
+    print(f"cut_ratio_vs_full,{cut_ratio:.3f}  # acceptance: <= 1.05")
+    print(f"imbalance,{sess.imbalance:.4f}  # acceptance: <= {eps}")
+    print(f"repair_calls,{st['repair_calls']}")
+    print(f"repair_compiles,{st['repair_compiles']}")
+    print(f"repair_buckets,{st['repair_bucket_count']}")
+    print(f"compact_calls,{st['compact_calls']}")
+    print(f"compact_compiles,{st['compact_compiles']}")
+    print(f"escalations,{st['escalations']}")
+    print("step,cut,imbalance,region,escalated")
+    for t in traj:
+        print(f"{t['step']},{t['cut']:.0f},{t['imbalance']:.4f},"
+              f"{t['region']},{t['escalated']}")
+    rows.append(dict(
+        name="dynamic_hot_steady",
+        us_per_call=us_upd,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, k=k,
+            batch_edges_added=int(nb), batch_edges_removed=int(nb),
+            repeats=timed, warmup_batches=warm,
+            us_per_update=us_upd, updates_per_s=1e6 / max(us_upd, 1),
+            full_repartition_us=us_full,
+            speedup_vs_full=speedup,
+            cut_session=float(sess.cut),
+            cut_full_best_of_3=float(min(cut_full)),
+            cut_ratio_vs_full=float(cut_ratio),
+            imbalance=float(sess.imbalance), eps=eps,
+            feasible=bool(sess.trajectory[-1].feasible),
+            cut_trajectory=traj,
+            repair_calls=st["repair_calls"],
+            repair_compiles=st["repair_compiles"],
+            repair_buckets=st["repair_bucket_count"],
+            compiles_bounded=bool(
+                st["repair_compiles"] == st["repair_bucket_count"]
+            ),
+            compact_calls=st["compact_calls"],
+            compact_compiles=st["compact_compiles"],
+            escalations=st["escalations"],
+            session_init_s=t_init,
+            h2d_bytes=st["h2d_bytes"], d2h_bytes=st["d2h_bytes"],
+        ),
+    ))
+    return rows
+
+
 TABLES = {
     "table2_quality": table2_quality,
     "table3_k32": table3_k32,
@@ -713,6 +839,7 @@ TABLES = {
     "dense_refine": dense_refine,
     "coarsen_hot": coarsen_hot,
     "evo_hot": evo_hot,
+    "dynamic_hot": dynamic_hot,
 }
 
 

@@ -49,10 +49,34 @@ __all__ = [
     "CoarseMap",
     "contract",
     "contract_device",
+    "packed_key_wbits",
     "relabel",
     "contract_arcs_jnp",
     "project_labels",
 ]
+
+# The packed-key fast path rides (cu, cv, weight) in ONE uint32 sort key, so
+# the pair space times the weight space must fit in 2^32 — the fallback
+# threshold a future x64 enablement would want to revisit (64-bit keys lift
+# both bounds).  Pinned by tests/test_device_contraction.py.
+PACKED_KEY_SPACE = 2**32
+
+
+def packed_key_wbits(Nb: int, Mb: int, ew_max: float, ew_integral: bool) -> int:
+    """Weight-bit count for :func:`contract_device`'s packed-key fast path.
+
+    Returns ``b > 0`` when every live arc weight is an integer in
+    ``[1, 2^b - 1]`` AND the fused key ``(cu * Nb + cv) << b | w`` fits a
+    uint32 (``Nb^2 * 2^b <= PACKED_KEY_SPACE``) AND the exact int32 cumsum
+    of per-run weights cannot overflow (``Mb * (2^b - 1) < 2^31``); 0 selects
+    the general scatter-add path.  Callers evaluate this once per graph —
+    it is the single place the fast-path/fallback boundary is decided."""
+    if not ew_integral or ew_max < 1.0:
+        return 0
+    b = int(ew_max).bit_length()
+    if Nb * Nb * (1 << b) <= PACKED_KEY_SPACE and Mb * ((1 << b) - 1) < 2**31:
+        return b
+    return 0
 
 
 def relabel(labels: np.ndarray) -> Tuple[np.ndarray, int]:

@@ -54,7 +54,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..graph.csr import GraphDev, GraphNP
+from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2
 from ..graph.packing import (
     chunk_geometry,
     ell_pack,
@@ -65,8 +65,9 @@ from ..graph.packing import (
     pad_pack,
     plan_chunks,
     plan_ell_rows,
+    plan_region_pack,
 )
-from .contraction import CoarseMap, contract_device
+from .contraction import CoarseMap, contract_device, packed_key_wbits
 from .label_propagation import _lp_sweep, make_order
 
 __all__ = ["LPEngine", "EngineStats"]
@@ -74,20 +75,9 @@ __all__ = ["LPEngine", "EngineStats"]
 AnyGraph = Union[GraphNP, GraphDev]
 
 
-def _pow2(x: int) -> int:
-    return 1 << max(0, int(x) - 1).bit_length()
-
-
-def _mbucket(m: int) -> int:
-    """Arc-axis bucket: pow2 below 16384, then 16384-arc rungs.
-
-    The contraction's value-only key sort is the per-level critical path and
-    scales with the PADDED arc count, so the hot (finest) level gets a tight
-    bucket (<= 8% padding) instead of the up-to-2x tax of pure pow2; small
-    coarse levels keep pow2 rungs so the bucket count stays O(log m)."""
-    if m <= 16384:
-        return _pow2(max(m, 8))
-    return -(-m // 16384) * 16384
+# bucket policies live in graph/csr.py (shared with the dynamic store)
+_pow2 = pow2
+_mbucket = arc_bucket
 
 
 @dataclass
@@ -142,12 +132,15 @@ class EngineStats:
     contract_compiles: int = 0      # distinct (Nb, Mb) contraction buckets
     gather_builds: int = 0          # device pack gathers (GraphDev levels)
     gather_compiles: int = 0        # distinct gather shape combinations
+    repair_calls: int = 0           # incremental-repair dispatches (dynamic)
+    repair_compiles: int = 0        # distinct repair-kernel shape buckets
     h2d_bytes: int = 0              # host->device uploads the engine issued
     d2h_bytes: int = 0              # device->host downloads (scalars + lazy
                                     # materializations of GraphDev/CoarseMap)
     buckets: set = field(default_factory=set)   # distinct (C, N, E, A, W)
     contract_buckets: set = field(default_factory=set)  # distinct (Nb, Mb)
     evo_buckets: set = field(default_factory=set)  # distinct evo shape keys
+    repair_buckets: set = field(default_factory=set)  # distinct repair shapes
 
     @property
     def bucket_count(self) -> int:
@@ -160,6 +153,10 @@ class EngineStats:
     @property
     def evo_bucket_count(self) -> int:
         return len(self.evo_buckets)
+
+    @property
+    def repair_bucket_count(self) -> int:
+        return len(self.repair_buckets)
 
 
 class LPEngine:
@@ -191,7 +188,10 @@ class LPEngine:
         self._e_request = e_req
         self.E_floor = 0
         self._g0_id = id(g0)
-        self.A = _pow2(n0 + 1)              # label/weight arena size
+        # label/weight arena; floored at the GraphDev node bucket's minimum
+        # (to_device_csr/contract emit Nb >= 8) so _arena's device extend
+        # never sees a negative pad on tiny graphs
+        self.A = _pow2(max(n0 + 1, 8))
         self.C_bucket = 8                   # grows to the finest pack's C
         self.seed = int(seed)
         self.use_pallas = bool(use_pallas)
@@ -204,6 +204,8 @@ class LPEngine:
         self._ells: Dict[int, _DeviceEll] = {}
         self._cin: Dict[int, tuple] = {}    # padded contraction inputs (GraphNP)
         self._degs: Dict[int, jax.Array] = {}  # (Ab,) f32 degree arrays (evo)
+        self._indptrs: Dict[int, jax.Array] = {}  # device row ptrs (GraphNP)
+        self._repair_E = 0                  # sticky region-pack edge bucket
         self._iota_cache: Optional[jax.Array] = None  # lazy: dist path may never sweep
         self._compile_keys = set()
         self._gather_keys = set()
@@ -439,6 +441,20 @@ class LPEngine:
         if id(g) != self._g0_id:
             self._packs.pop((id(g), mode), None)
 
+    def carry_from(self, old: "LPEngine") -> None:
+        """Adopt a predecessor engine's cumulative stats and compile-key
+        sets (the dynamic session's node-growth rebuild path).  The jit
+        caches are process-global, so every shape the old engine dispatched
+        is still compiled — sharing the key sets (and the stats object
+        itself, so transfer/counter deltas observed across the swap stay
+        coherent) keeps the compile counters honest: ``compiles ==
+        bucket_count`` holds across rebuilds."""
+        self.stats = old.stats
+        self._compile_keys = old._compile_keys
+        self._gather_keys = old._gather_keys
+        self._dense_keys = old._dense_keys
+        self._repair_E = max(self._repair_E, old._repair_E)
+
     def evict(self, keep: Tuple[GraphNP, ...] = ()) -> None:
         """Drop cached packs/arenas/ELLs for all graphs not in ``keep``.
 
@@ -454,6 +470,7 @@ class LPEngine:
         self._ells = {k: v for k, v in self._ells.items() if k in keep_ids}
         self._cin = {k: v for k, v in self._cin.items() if k in keep_ids}
         self._degs = {k: v for k, v in self._degs.items() if k in keep_ids}
+        self._indptrs = {k: v for k, v in self._indptrs.items() if k in keep_ids}
 
     # ------------------------------------------------------------------ sweeps
 
@@ -580,6 +597,187 @@ class LPEngine:
             self._ells.pop(id(g), None)
         return self.to_arena(lab, g.n, fill=k)
 
+    # --------------------------------------------------------------- repair
+
+    def _indptr_dev(self, g: AnyGraph) -> jax.Array:
+        """Device CSR row pointers for region gathers; GraphDev handles carry
+        their own, a GraphNP uploads its (n + 1) pointer array once."""
+        if isinstance(g, GraphDev):
+            return g.indptr
+        hit = self._indptrs.get(id(g))
+        if hit is not None:
+            return hit
+        ip = np.asarray(g.indptr, dtype=np.int32)
+        arr = jnp.asarray(ip)
+        self.stats.h2d_bytes += ip.nbytes
+        self._indptrs[id(g)] = arr
+        return arr
+
+    def _note_repair_key(self, key) -> None:
+        if key not in self.stats.repair_buckets:
+            self.stats.repair_buckets.add(key)
+            self.stats.repair_compiles += 1
+
+    def repair(
+        self,
+        g: AnyGraph,
+        labels: Union[np.ndarray, jax.Array],
+        touched: np.ndarray,
+        k: int,
+        U: float,
+        *,
+        hops: int = 2,
+        iters: int = 6,
+        gain_rounds: int = 2,
+        balance_rounds: int = 3,
+        seed: int = 0,
+    ) -> Tuple[jax.Array, int, float, np.ndarray]:
+        """Incremental size-constrained repair after a graph mutation.
+
+        The dynamic subsystem's hot path (ISSUE 4): expand the ``hops``-hop
+        affected region around the ``touched`` node ids on device, pack only
+        the region's nodes into sweep chunks (host plans O(region), device
+        gathers O(region edges) from the resident CSR), and run the cached
+        ``_lp_sweep`` in refine mode over that pack — against **exact
+        global block weights** and the true size bound ``U = L_max``, the
+        paper's §III-A refinement invariants (an overloaded block's nodes
+        must leave it; eligibility is measured on real weights, never
+        region-local estimates).  Region-masked gain and balance-repair
+        rounds (``repro.dynamic.repair``, fm.py spec twins) follow, and a
+        cut/feasibility guard — the uncoarsening monotonicity guard's twin
+        — keeps the repaired labels only if the cut did not worsen or
+        feasibility was restored.
+
+        Every kernel is shape-bucketed with traced live counts, so a steady
+        update stream compiles once per bucket (``repair_compiles ==
+        repair_bucket_count``).  Returns ``(arena labels, region size, cut,
+        block weights)`` — the guard already evaluates the returned labels'
+        cut and (k,) block-weight vector, so the serving loop scores an
+        update without re-running the O(m)/O(n) reductions.  Labels outside
+        the region are bit-identical to the input.
+        """
+        from ..dynamic.repair import (
+            TAG_DYN_GAIN,
+            TAG_DYN_GAIN_GATE,
+            balance_rounds_device,
+            expand_region_device,
+            gain_round_device,
+        )
+        from .label_propagation import hash_base_u32
+
+        self.stats.repair_calls += 1
+        n = g.n
+        ar = self._arena(g)
+        lab = self.to_arena(labels, n, fill=k)
+        t_ids = np.unique(np.asarray(touched, dtype=np.int64))
+        t_ids = t_ids[(t_ids >= 0) & (t_ids < n)].astype(np.int32)
+        if t_ids.size == 0:
+            return lab, 0, self.cut(g, lab), self.block_weights(g, lab, k)
+        # ---- h-hop affected region (device frontier expansion) ----
+        Tb = _pow2(max(t_ids.size, 8))
+        tpad = np.full(Tb, n, np.int32)
+        tpad[: t_ids.size] = t_ids
+        self.stats.h2d_bytes += tpad.nbytes
+        self._note_repair_key(("frontier", Tb, ar.src.shape[0], self.A))
+        mask = expand_region_device(
+            jnp.asarray(tpad), ar.src, ar.dst, jnp.int32(n), jnp.int32(hops),
+            A=self.A,
+        )
+        mask_np = np.asarray(mask[:n])
+        self.stats.d2h_bytes += mask_np.nbytes
+        region = np.flatnonzero(mask_np)
+        if region.size == 0:
+            return lab, 0, self.cut(g, lab), self.block_weights(g, lab, k)
+        # ---- region pack: host O(region) plan, device O(region m) gather
+        order = np.random.default_rng(seed).permutation(region).astype(np.int64)
+        ip = self._indptr_dev(g)
+        if isinstance(g, GraphDev):
+            # region degrees gathered ON device: every compaction hands
+            # repair a fresh handle whose O(n) host degree cache is cold,
+            # so g.degrees() here would download the full indptr per update
+            # — O(region) is all the plan needs
+            oi = jnp.asarray(order.astype(np.int32))
+            self.stats.h2d_bytes += order.size * 4
+            deg_r = np.asarray(ip[oi + 1] - ip[oi]).astype(np.int64)
+            self.stats.d2h_bytes += deg_r.nbytes // 2
+        else:
+            deg_r = g.degrees()[order]
+        nodes, node_valid, C, N, E = plan_region_pack(
+            deg_r, order, n, max_nodes=self.N,
+            max_edges=self._e_request, block=self.pack_block,
+        )
+        Cb = _pow2(C)
+        Eb = max(self._repair_E, -(-E // 512) * 512)  # sticky, like E_floor
+        self._repair_E = Eb
+        nodes = np.pad(
+            nodes, ((0, Cb - C), (0, self.N - N)), constant_values=n
+        )
+        node_valid = np.pad(node_valid, ((0, Cb - C), (0, self.N - N)))
+        nodes_d = jnp.asarray(nodes)
+        nv_d = jnp.asarray(node_valid)
+        self.stats.h2d_bytes += nodes.nbytes + node_valid.nbytes
+        self._note_repair_key(
+            ("gather", nodes.shape, ip.shape[0], ar.dst.shape[0], Eb)
+        )
+        edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
+            nodes_d, nv_d, ip, ar.dst, ar.ew, jnp.int32(n), E=Eb
+        )
+        dp = _DevicePack(
+            graph=g, nodes=nodes_d, node_valid=nv_d, edge_dst=edge_dst,
+            edge_w=edge_w, edge_src_slot=edge_slot, edge_valid=edge_valid,
+            num_chunks=C, shape=(Cb, self.N, Eb),
+        )
+        # ---- LP sweeps against exact global block weights ----
+        bw = jnp.zeros((k + 1,), jnp.float32).at[jnp.minimum(lab, k)].add(
+            ar.nw_arena
+        )
+        bw_old_max = float(jnp.max(bw[:k]))
+        before_cut = self.cut(g, lab)
+        w0 = bw.at[k].set(jnp.inf)
+        self._note_repair_key(("sweep", dp.shape, self.A, k + 1, iters))
+        out, _, _ = self._sweep(
+            dp, lab, w0, ar.nw_arena, jnp.zeros(1, jnp.int32), U, seed, k,
+            iters=iters, refine_mode=True, use_restrict=False,
+            permute_chunks=True,
+        )
+        # ---- region-masked gain + balance rounds ----
+        Kb = k + 1
+        for r in range(gain_rounds):
+            base_s = hash_base_u32(seed, r, TAG_DYN_GAIN)
+            base_g = hash_base_u32(seed, r, TAG_DYN_GAIN_GATE)
+            self._note_repair_key(("gain", self.A, ar.src.shape[0], Kb))
+            out = gain_round_device(
+                ar.src, ar.dst, ar.ew, ar.nw_arena, out, mask,
+                jnp.int32(n), jnp.int32(k), jnp.float32(U),
+                jnp.uint32(base_s), jnp.uint32(base_g), Kb=Kb,
+            )
+        if balance_rounds:
+            self._note_repair_key(("balance", self.A, Kb, balance_rounds))
+            out = balance_rounds_device(
+                ar.nw_arena, out, mask, jnp.int32(n), jnp.int32(k),
+                jnp.float32(U), jnp.int32(seed & 0x7FFFFFFF),
+                Kb=Kb, rounds=balance_rounds,
+            )
+        # ---- guard (the uncoarsening monotonicity guard's twin, plus a
+        # feasibility clause): keep the repaired labels only if the cut did
+        # not worsen AND the balance bound did not degrade, or if they
+        # restored a violated bound.  Repair therefore never trades
+        # feasibility for cut — the session-level invariant that edge-only
+        # update streams stay feasible forever.
+        bw_new = jnp.zeros((k + 1,), jnp.float32).at[jnp.minimum(out, k)].add(
+            ar.nw_arena
+        )
+        bw_new_max = float(jnp.max(bw_new[:k]))
+        after_cut = self.cut(g, out)
+        self.stats.d2h_bytes += 16  # the guard's two cut + two bw scalars
+        ok_cut = (
+            after_cut <= before_cut
+            and bw_new_max <= max(bw_old_max, U + 1e-6)
+        )
+        if ok_cut or bw_old_max > U >= bw_new_max:
+            return out, int(region.size), after_cut, np.asarray(bw_new[:k])
+        return lab, int(region.size), before_cut, np.asarray(bw[:k])
+
     # ---------------------------------------------------------- evolutionary
 
     def _deg_f(self, g: AnyGraph, Ab: int) -> jax.Array:
@@ -672,6 +870,8 @@ class LPEngine:
         if skey not in self.stats.evo_buckets:
             self.stats.evo_buckets.add(skey)
             self.stats.evo_compiles += 1
+        from .evolutionary import grow_rounds_bound
+
         labs, keys = evo_seed_step(
             dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w,
             dp.edge_src_slot, dp.edge_valid,
@@ -680,6 +880,7 @@ class LPEngine:
             jnp.float32(cfg.Lmax), jnp.int32(seed_eff),
             jnp.int32(I), jnp.int32(P), jnp.int32(n), jnp.int32(k),
             jnp.int32(dp.num_chunks),
+            jnp.int32(grow_rounds_bound(n, k, g.m)),
             refine_iters=cfg.refine_iters, Kb=Kb,
         )
         D = jax.device_count()
@@ -850,11 +1051,7 @@ class LPEngine:
         src, dst, ew, nw, integral, ew_max = self._contract_inputs(g, Nb, Mb)
         # packed-key fast path: integral weights small enough to ride in the
         # low bits of the uint32 sort key (see contract_device)
-        wbits = 0
-        if integral and ew_max >= 1.0:
-            b = int(ew_max).bit_length()
-            if Nb * Nb * (1 << b) <= 2**32 and Mb * ((1 << b) - 1) < 2**31:
-                wbits = b
+        wbits = packed_key_wbits(Nb, Mb, ew_max, integral)
         if isinstance(labels, jax.Array):
             lab = labels.astype(jnp.int32)
         else:
@@ -1005,6 +1202,9 @@ class LPEngine:
             contract_bucket_count=self.stats.contract_bucket_count,
             gather_builds=self.stats.gather_builds,
             gather_compiles=self.stats.gather_compiles,
+            repair_calls=self.stats.repair_calls,
+            repair_compiles=self.stats.repair_compiles,
+            repair_bucket_count=self.stats.repair_bucket_count,
             h2d_bytes=self.stats.h2d_bytes,
             d2h_bytes=self.stats.d2h_bytes,
             arena=self.A,

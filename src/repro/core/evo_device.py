@@ -5,7 +5,9 @@ whole population is a ``(pop, n)`` label batch on device and one generation
 runs as ONE bucketed jitted executable —
 
 * **batched greedy-growing seeds** — hash-scored degree-biased seed draw,
-  ``GROW_ROUNDS`` synchronous frontier rounds, round-robin leftovers;
+  degree/diameter-proportional synchronous frontier rounds
+  (``evolutionary.grow_rounds_bound``, traced; converged/stalled frontiers
+  exit early), round-robin leftovers;
 * **batched LP refinement** — a ``vmap`` population axis over the engine's
   cached ``_lp_sweep`` chunk pack (the graph uploads once per run, not once
   per individual), followed by synchronous gain (FM-lite) and balance-repair
@@ -42,7 +44,6 @@ from .evolutionary import (
     CELL_ROUNDS,
     COMBINE_PROB,
     GAIN_ROUNDS,
-    GROW_ROUNDS,
     INFEAS_PENALTY,
     MUTATE_FRAC,
     REPAIR_ROUNDS,
@@ -103,8 +104,12 @@ def _evaluate(lab, src, dst, ew, nw, k, Kb, Lmax):
     return cut.astype(jnp.int32) + jnp.where(feas, 0, INFEAS_PENALTY)
 
 
-def _greedy_one(s_idx, src, dst, ew, nw, deg_f, n, k, Kb, Lmax, seed):
-    """Batched greedy growing, one individual (oracle: ``_greedy_grow_np``)."""
+def _greedy_one(s_idx, src, dst, ew, nw, deg_f, n, k, Kb, Lmax, seed, rounds):
+    """Batched greedy growing, one individual (oracle: ``_greedy_grow_np``).
+
+    ``rounds`` is the traced degree/diameter-proportional budget
+    (``evolutionary.grow_rounds_bound``) — one executable still serves
+    every coarsest graph in the bucket."""
     Ab = nw.shape[0]
     iota = jnp.arange(Ab, dtype=jnp.int32)
     kio = jnp.arange(Kb, dtype=jnp.int32)
@@ -135,20 +140,30 @@ def _greedy_one(s_idx, src, dst, ew, nw, deg_f, n, k, Kb, Lmax, seed):
         unas = (lab < 0) & (iota < n)
         return jnp.where(unas & has, b, lab)
 
-    # while_loop instead of a fixed fori: once every node is assigned the
-    # remaining rounds are no-ops by construction (the oracle early-exits on
-    # exactly this condition), so skipping them cannot change a label —
-    # under vmap the loop runs until the slowest individual converges, with
-    # converged rows riding along untouched.
+    # while_loop instead of a fixed fori: once every node is assigned — or a
+    # round assigns nothing (a stalled frontier can never recover, since
+    # assignments are the only state a round reads) — the remaining rounds
+    # are no-ops by construction (the oracle early-exits on exactly these
+    # conditions), so skipping them cannot change a label.  Under vmap the
+    # loop runs until the slowest individual converges, with converged rows
+    # riding along untouched; the stall exit is what keeps the
+    # diameter-proportional budget from costing anything on disconnected
+    # graphs.
+    def _unas_count(lab):
+        return jnp.sum(((lab < 0) & (iota < n)).astype(jnp.int32))
+
     def grow_cond(state):
-        r, lab = state
-        return (r < GROW_ROUNDS) & jnp.any((lab < 0) & (iota < n))
+        r, lab, prev = state
+        cnt = _unas_count(lab)
+        return (r < rounds) & (cnt > 0) & ((r == 0) | (cnt < prev))
 
     def grow_body(state):
-        r, lab = state
-        return r + 1, grow_round(r, lab)
+        r, lab, prev = state
+        return r + 1, grow_round(r, lab), _unas_count(lab)
 
-    _, lab = lax.while_loop(grow_cond, grow_body, (jnp.int32(0), lab0))
+    _, lab, _ = lax.while_loop(
+        grow_cond, grow_body, (jnp.int32(0), lab0, jnp.int32(_IMAX))
+    )
     unas = (lab < 0) & (iota < n)
     pos = jnp.cumsum(unas.astype(jnp.int32)) - 1
     lab = jnp.where(unas, pos % k, lab)
@@ -350,21 +365,24 @@ def evo_seed_step(
     deg_f,              # (Ab,) f32 degrees, 0 beyond n
     Lmax,               # scalar f32
     seed,               # scalar int32
-    I, P, n, k, num_chunks,   # traced scalars
+    I, P, n, k, num_chunks, grow_rounds,   # traced scalars
     *,
     refine_iters: int,
     Kb: int,
 ):
     """Build + evaluate the initial population: batched greedy growing for
-    unseeded rows, verbatim seed rows (the V-cycle's projected solution),
-    batched refine, int32 fitness keys.  ONE executable per
-    ``(pack bucket, Sb, Ab, Kb)`` shape."""
+    unseeded rows (``grow_rounds`` frontier-round budget — traced, computed
+    by ``evolutionary.grow_rounds_bound``), verbatim seed rows (the
+    V-cycle's projected solution), batched refine, int32 fitness keys.  ONE
+    executable per ``(pack bucket, Sb, Ab, Kb)`` shape."""
     Sb, Ab = seed_labels.shape
     iota_s = jnp.arange(Sb, dtype=jnp.int32)
     valid_s = iota_s < I * P
     pack = (nodes, node_valid, edge_dst, edge_w, edge_src_slot, edge_valid)
     grown = jax.vmap(
-        lambda s: _greedy_one(s, src, dst, ew, nw, deg_f, n, k, Kb, Lmax, seed)
+        lambda s: _greedy_one(
+            s, src, dst, ew, nw, deg_f, n, k, Kb, Lmax, seed, grow_rounds
+        )
     )(iota_s)
     refined = _refine_batch(
         pack, grown, iota_s, jnp.int32(0), src, dst, ew, nw, n, k, Kb, Lmax,

@@ -76,7 +76,7 @@ __all__ = [
 # changes BOTH paths; the parity tests keep them honest.
 # --------------------------------------------------------------------------
 
-GROW_ROUNDS = 16        # synchronous greedy-growing frontier rounds
+GROW_ROUNDS = 16        # frontier-round FLOOR (see grow_rounds_bound)
 CELL_ROUNDS = 2         # overlay-cell move rounds inside combine
 GAIN_ROUNDS = 2         # synchronous best-gain (FM-lite) rounds per refine
 REPAIR_ROUNDS = 3       # synchronous balance-repair rounds per refine
@@ -100,6 +100,27 @@ TAG_MUT_FLIP = 0x5EED0A     # mutation boundary flips
 TAG_MUT_LBL = 0x5EED0B      # mutation replacement labels
 TAG_CELL = 0x5EED0C         # cell-move tie-breaks
 TAG_CELL_GATE = 0x5EED0D    # cell-move gate
+
+
+def grow_rounds_bound(n: int, k: int, m: int) -> int:
+    """Frontier-round budget for batched greedy growing (shared by the
+    device path and the numpy oracle — both must use the same bound).
+
+    BFS from k seeds needs ~seed-eccentricity rounds; the legacy fixed
+    ``GROW_ROUNDS = 16`` truncated deep (high-diameter, low-average-degree)
+    coarsest graphs and dumped the unreached tail into round-robin
+    leftovers — terrible cuts on path-like graphs.  The budget now scales
+    with a degree-based diameter proxy (low average degree == deep graph),
+    floored at the legacy constant and capped at ``n``.  The cap is never
+    the binding *cost*: both implementations exit as soon as every node is
+    assigned or a round makes no progress — a stalled frontier can never
+    recover, because assignments are the only state a growth round reads.
+    """
+    if n <= 0:
+        return GROW_ROUNDS
+    avg_deg = m / n
+    proxy = int(np.ceil(4.0 * n / max(k, 1) / max(avg_deg, 1.0)))
+    return int(min(max(GROW_ROUNDS, proxy), n))
 
 
 @dataclass
@@ -302,7 +323,8 @@ def _evaluate_np(inp: EvoInputs, lab, k: int, Kb: int, Lmax) -> tuple:
 
 def _greedy_grow_np(inp: EvoInputs, s: int, seed: int, k: int, Kb: int, Lmax):
     """Batched greedy growing, one individual: hash-scored degree-biased
-    seeds, GROW_ROUNDS synchronous frontier rounds, round-robin leftovers."""
+    seeds, degree/diameter-proportional synchronous frontier rounds
+    (:func:`grow_rounds_bound`), round-robin leftovers."""
     n, Ab = inp.n, inp.Ab
     iota = np.arange(Ab, dtype=np.int32)
     kio = np.arange(Kb, dtype=np.int32)
@@ -316,10 +338,15 @@ def _greedy_grow_np(inp: EvoInputs, s: int, seed: int, k: int, Kb: int, Lmax):
     rank = np.zeros(Ab, np.int32)
     rank[order] = iota
     lab = np.where((rank < k) & (iota < n), rank, np.int32(-1)).astype(np.int32)
-    for r in range(GROW_ROUNDS):
+    rounds = grow_rounds_bound(n, k, int(inp.deg[:n].sum()))
+    prev_cnt = None
+    for r in range(rounds):
         unas = (lab < 0) & (iota < n)
-        if not unas.any():
-            break  # device runs fixed rounds; extra rounds are no-ops
+        cnt = int(unas.sum())
+        if cnt == 0 or cnt == prev_cnt:
+            break  # converged / stalled: further rounds are no-ops (the
+            # device while_loop exits on exactly these conditions)
+        prev_cnt = cnt
         conn = np.zeros((Ab, Kb), np.float32)
         tgt = lab[inp.dst]
         mask = tgt >= 0

@@ -34,11 +34,20 @@ def gain_round_np(
     Lmax,
     base_score: int,
     base_gate: int,
+    region: np.ndarray | None = None,
+    influx_gate: bool = False,
 ) -> np.ndarray:
     """One synchronous best-gain move round — the FM-lite step of the
     batched evolutionary refinement (numpy spec twin of ``_gain_round`` in
     repro.core.evo_device; the device version is vmapped over the
-    population and must stay op-for-op identical).
+    population and must stay op-for-op identical).  With ``region`` set
+    (an arena-sized bool mask) only region nodes may move, and with
+    ``influx_gate=True`` each block's net synchronous inflow is capped at
+    its headroom in expectation (the chunked sweep's refine-mode gate) —
+    together these are the spec of the dynamic repairer's
+    ``repro.dynamic.repair.gain_round_device``, which must stay op-for-op
+    identical to this variant.  The evolution's own round keeps both off:
+    its fitness keys absorb transient infeasibility, a repair step cannot.
 
     Unlike :func:`fm_refine`'s sequential heap walk, all nodes see the same
     stale state and move together: eligibility is a *strict* connection gain
@@ -68,6 +77,22 @@ def gain_round_np(
     has = score[iota, b] > np.float32(-5e29)
     u = hash_unit_np(base_gate, iota, np.int32(0))
     move = has & (u < np.float32(0.5)) & (iota < n)
+    if region is not None:
+        move &= region
+    if influx_gate:
+        mv_w = np.where(move, nw, np.float32(0.0)).astype(np.float32)
+        inflow = np.zeros(Kb, np.float32)
+        outflow = np.zeros(Kb, np.float32)
+        np.add.at(inflow, np.where(move, b, k), mv_w)
+        np.add.at(outflow, np.where(move, np.minimum(labels, Kb - 1), k), mv_w)
+        head = (np.float32(Lmax) - bw + outflow).astype(np.float32)
+        with np.errstate(invalid="ignore", over="ignore"):
+            p_in = np.clip(
+                head / np.maximum(inflow, np.float32(1e-9)),
+                np.float32(0.0), np.float32(1.0),
+            )
+        u2 = hash_unit_np(base_gate, iota, np.int32(1))
+        move &= u2 < p_in[np.minimum(b, k)]
     return np.where(move, b, labels).astype(np.int32)
 
 

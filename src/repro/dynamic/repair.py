@@ -1,0 +1,192 @@
+"""Incremental repair kernels (dynamic subsystem, layer 2).
+
+The paper's size-constrained label propagation is a *local-move* algorithm:
+every decision reads only a node's incident edges, the candidate block
+weights, and the bound ``L_max``.  That locality is what makes it a repair
+kernel — after a batch of edge/node updates, only the h-hop neighbourhood
+of the touched endpoints can profit from moving, so the repairer
+
+1. expands the **affected region** on device (:func:`expand_region_device`:
+   a frontier scatter per hop over the resident arc arrays),
+2. runs the engine's cached ``_lp_sweep`` over a *region pack* — chunks
+   containing only region nodes, dispatched by
+   :meth:`repro.core.engine.LPEngine.repair` — against **exact global block
+   weights** (the §III-A refinement invariant: eligibility is
+   ``c(V_b) + c(v) <= L_max`` on the true block weights, never a
+   region-local estimate, and nodes of an overloaded block must leave it),
+3. finishes with region-masked synchronous **gain** rounds
+   (:func:`gain_round_device`, the device twin of
+   :func:`repro.core.fm.gain_round_np` — op-for-op identical plus the
+   region gate) and **balance-repair** rounds
+   (:func:`balance_rounds_device`, the twin of the batched evolution's
+   repair rounds) so the size constraint is re-established locally after
+   node-weight churn.
+
+Nodes outside the region are read-only context (their labels feed the
+connection sums but never change), so a repaired partition differs from its
+input only inside the region — the property the session's bit-identity
+guarantees build on.  All kernels are shape-bucketed with traced live
+counts: a steady update stream compiles once per bucket
+(``repair_compiles == repair_bucket_count``, regression-tested).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.label_propagation import _hash_base, _hash_jitter, _hash_mix
+
+__all__ = [
+    "expand_region_device",
+    "gain_round_device",
+    "balance_rounds_device",
+    "TAG_DYN_GAIN",
+    "TAG_DYN_GAIN_GATE",
+    "TAG_DYN_BAL",
+]
+
+_NEG = -1e30
+
+# hash-stream tags for the repair rounds — a namespace disjoint from the
+# evolution tags (0x5EED..), so a repair round can never collide with an
+# evolution decision on the same seed
+TAG_DYN_GAIN = 0xD7A401
+TAG_DYN_GAIN_GATE = 0xD7A402
+TAG_DYN_BAL = 0xD7A403
+
+
+def _hash_unit(base, a, b):
+    h = _hash_mix(_hash_mix(base, a), b)
+    return (h & jnp.uint32(0xFFFFFF)).astype(jnp.float32) / float(1 << 24)
+
+
+@functools.partial(jax.jit, static_argnames=("A",))
+def expand_region_device(touched, src, dst, n, hops, *, A: int):
+    """h-hop frontier expansion over the resident arc arrays.
+
+    Args:
+      touched: (Tb,) int32 touched node ids, padded with ``n`` (inert: the
+        sentinel slot is outside the live region slice).
+      src, dst: (>= m,) int32 arc endpoints; trailing padding arcs are
+        (0, 0) and only ever re-mark node 0 from itself — inert.
+      n: traced live node count.
+      hops: traced hop count.
+      A: static mask length (the engine arena size).
+
+    Returns an (A,) bool mask: True for every node within ``hops`` hops of a
+    touched node.  One executable per (Tb, m-bucket, A) shape.
+    """
+    mask = jnp.zeros((A,), jnp.bool_).at[touched].max(touched < n)
+
+    def hop(_, mk):
+        reach = jnp.zeros((A,), jnp.bool_).at[dst].max(mk[src])
+        return mk | reach
+
+    return lax.fori_loop(0, hops, hop, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("Kb",))
+def gain_round_device(
+    src, dst, ew, nw, lab, region, n, k, Lmax, base_score, base_gate, *, Kb: int
+):
+    """One region-masked synchronous best-gain round.
+
+    Device twin of :func:`repro.core.fm.gain_round_np` with
+    ``region=..., influx_gate=True`` (op-for-op identical — parity-tested).
+    Two gates beyond the evolution's FM-lite round: only nodes inside
+    ``region`` may move, and — exactly like the chunked sweep's
+    refine-mode influx gating — each block's *net* synchronous inflow is
+    capped at its headroom in expectation.  Without the cap a synchronous
+    round on a community-less (R-MAT-like) graph piles thousands of
+    individually-fitting movers into one block, blowing the balance bound
+    by orders of magnitude; the evolution tolerates that (its fitness keys
+    penalize infeasibility and elitism rejects), a repair step must not.
+    """
+    Ab = lab.shape[0]
+    iota = jnp.arange(Ab, dtype=jnp.int32)
+    kio = jnp.arange(Kb, dtype=jnp.int32)
+    conn = jnp.zeros((Ab, Kb), jnp.float32).at[src, lab[dst]].add(ew)
+    own = jnp.take_along_axis(conn, jnp.minimum(lab, Kb - 1)[:, None], 1)[:, 0]
+    bw = jnp.zeros((Kb,), jnp.float32).at[jnp.minimum(lab, Kb - 1)].add(nw)
+    bwx = jnp.where(kio < k, bw, jnp.inf)
+    jit = _hash_jitter(base_score, iota[:, None], kio[None, :])
+    fits = bwx[None, :] + nw[:, None] <= Lmax
+    elig = fits & (kio[None, :] != lab[:, None]) & (conn > own[:, None])
+    score = jnp.where(elig, conn + jit, _NEG)
+    b = jnp.argmax(score, axis=1).astype(jnp.int32)
+    has = jnp.take_along_axis(score, b[:, None], 1)[:, 0] > _NEG / 2
+    u = _hash_unit(base_gate, iota, jnp.int32(0))
+    move = has & (u < 0.5) & (iota < n) & region
+    # influx gate (the sweep's refine-mode cap, applied synchronously):
+    # accept a mover into block b with prob clip((Lmax - w_b + outflow_b)
+    # / inflow_b, 0, 1), so each block's net inflow matches its headroom in
+    # expectation.  Swap-heavy rounds (inflow ~ outflow) pass untouched.
+    mv_w = jnp.where(move, nw, 0.0)
+    inflow = jnp.zeros((Kb,), jnp.float32).at[jnp.where(move, b, k)].add(
+        mv_w, mode="drop"
+    )
+    outflow = jnp.zeros((Kb,), jnp.float32).at[
+        jnp.where(move, jnp.minimum(lab, Kb - 1), k)
+    ].add(mv_w, mode="drop")
+    head = Lmax - bw + outflow
+    p_in = jnp.clip(head / jnp.maximum(inflow, 1e-9), 0.0, 1.0)
+    u2 = _hash_unit(base_gate, iota, jnp.int32(1))
+    move &= u2 < p_in[jnp.minimum(b, k)]
+    return jnp.where(move, b, lab)
+
+
+@functools.partial(jax.jit, static_argnames=("Kb", "rounds"))
+def balance_rounds_device(
+    nw, lab, region, n, k, Lmax, seed, *, Kb: int, rounds: int
+):
+    """Region-masked synchronous balance-repair rounds.
+
+    Analog of the batched evolution's repair rounds
+    (``repro.core.evo_device._repair_rounds``) with expectation gates
+    normalized for the serving regime: an overloaded block sheds ~1.5x its
+    *excess weight* (not a fraction of its total — the evolution's
+    fractional gate never fires on the hairline overshoots a repair step
+    sees), carried by region nodes only, into the globally lightest block;
+    a second gate caps the lightest block's synchronous inflow at its own
+    headroom.  Node-weight churn from ``add_nodes`` is local, so local
+    shedding restores ``L_max`` whenever the overload sits inside the
+    region; the caller's guard rejects/escalates when it does not.
+    """
+    Ab = lab.shape[0]
+    iota = jnp.arange(Ab, dtype=jnp.int32)
+    kio = jnp.arange(Kb, dtype=jnp.int32)
+
+    def rep(r, lab):
+        lab_c = jnp.minimum(lab, Kb - 1)
+        bw = jnp.zeros((Kb,), jnp.float32).at[lab_c].add(nw)
+        bwx = jnp.where(kio < k, bw, jnp.inf)
+        tgt = jnp.argmin(bwx).astype(jnp.int32)
+        over = bwx > Lmax
+        movable = (iota < n) & region & over[jnp.minimum(lab, k)] & (lab != tgt)
+        # shed ~1.5x the excess WEIGHT in expectation: p = 1.5 * excess /
+        # (movable weight of the block), exact-scale for hairline overshoots
+        movw = jnp.zeros((Kb,), jnp.float32).at[
+            jnp.where(movable, lab_c, k)
+        ].add(jnp.where(movable, nw, 0.0), mode="drop")
+        excess = jnp.clip(jnp.where(kio < k, bw, 0.0) - Lmax, 0.0, None)
+        p_shed = jnp.clip(1.5 * excess / jnp.maximum(movw, 1e-9), 0.0, 1.0)
+        base_r = _hash_mix(
+            _hash_base(seed, r, TAG_DYN_BAL), jnp.uint32(0x9E3779B1)
+        )
+        u = _hash_unit(base_r, iota, jnp.int32(0))
+        mv = movable & (u < p_shed[jnp.minimum(lab, k)])
+        # cap the lightest block's inflow at its headroom (all movers of a
+        # round target the same block)
+        inflow = jnp.sum(jnp.where(mv, nw, 0.0))
+        p_in = jnp.clip(
+            (Lmax - bw[tgt]) / jnp.maximum(inflow, 1e-9), 0.0, 1.0
+        )
+        u2 = _hash_unit(base_r, iota, jnp.int32(1))
+        mv &= u2 < p_in
+        return jnp.where(mv, tgt, lab)
+
+    return lax.fori_loop(0, rounds, rep, lab)

@@ -1,0 +1,305 @@
+"""Batched update-serving session (dynamic subsystem, layer 3).
+
+:class:`PartitionSession` is the serving loop the ROADMAP's north star asks
+for: a graph and its k-way partition stay resident on device; batched
+update requests (:class:`~repro.dynamic.store.GraphUpdate`) stream in; each
+batch is absorbed by the store, locally repaired by
+:meth:`~repro.core.engine.LPEngine.repair`, and scored — the full
+multilevel ``partition()`` V-cycle runs only at session start and when the
+quality guard trips.
+
+Quality guard (configurable):
+
+* **feasibility** — the paper's hard constraint ``max_b c(V_b) <= L_max``
+  with ``L_max = (1 + eps) * ceil(c(V) / k)`` recomputed from the *current*
+  total node weight every batch (node churn moves the bound);
+* **cut drift** — the running cut is compared against the cut of the last
+  full partition, scaled by total edge-weight growth; exceeding
+  ``escalate_cut_ratio`` times that reference escalates to a fresh V-cycle
+  on the compacted graph (``escalations`` counter).
+
+Bit-reproducibility: a batch whose *net* arc deltas are empty (an empty
+batch, or adds cancelled by removals inside the batch) skips repair
+entirely and leaves the label array bit-identical — no update, no hash
+draw, no sweep.  Every non-trivial path is deterministic in
+``(initial graph, config, update stream)``: repair seeds derive from the
+step counter, all tie-breaks are stateless hashes.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..core.engine import LPEngine
+from ..core.metrics import lmax
+from ..core.multilevel import PartitionerConfig, partition
+from ..graph.csr import GraphNP
+from .store import DynamicGraphStore, GraphUpdate
+
+__all__ = ["PartitionSession", "SessionConfig", "UpdateResult"]
+
+
+@dataclass
+class SessionConfig:
+    k: int = 2
+    eps: float = 0.03
+    # repair shape: h-hop region radius, LP sweep iterations, gain/balance
+    # round counts (fm.py-spec synchronous rounds, region-masked)
+    hops: int = 2
+    repair_iters: int = 6
+    gain_rounds: int = 2
+    balance_rounds: int = 3
+    # escalate to a full V-cycle when the running cut exceeds this ratio of
+    # the (edge-weight-scaled) cut of the last full partition
+    escalate_cut_ratio: float = 1.6
+    overlay_cap: int = 1 << 16
+    target_chunks: int = 64
+    seed: int = 0
+    # full-pipeline config for session start + escalations; defaults to the
+    # paper's fast preset at this (k, eps)
+    partition_cfg: Optional[PartitionerConfig] = None
+
+    def make_partition_cfg(self, seed: int) -> PartitionerConfig:
+        if self.partition_cfg is not None:
+            cfg = self.partition_cfg
+            if cfg.k != self.k:
+                raise ValueError("partition_cfg.k must match SessionConfig.k")
+            cfg.seed = seed
+            return cfg
+        return PartitionerConfig(
+            k=self.k, eps=self.eps, preset="fast", seed=seed,
+            target_chunks=self.target_chunks,
+        )
+
+
+@dataclass
+class UpdateResult:
+    """One trajectory point of the serving loop."""
+
+    step: int
+    n: int
+    m: int                      # arcs (2x undirected edges)
+    cut: float
+    imbalance: float
+    feasible: bool
+    region_size: int = 0
+    escalated: bool = False
+    noop: bool = False
+    seconds: float = 0.0
+    h2d_bytes: int = 0          # engine-accounted transfer deltas of the step
+    d2h_bytes: int = 0
+
+
+class PartitionSession:
+    """Device-resident graph + partition absorbing a stream of updates."""
+
+    def __init__(self, g: GraphNP, cfg: SessionConfig):
+        self.cfg = cfg
+        self.k = cfg.k
+        t0 = time.time()
+        rep = partition(g, cfg.make_partition_cfg(cfg.seed))
+        self.engine = LPEngine(
+            g, target_chunks=cfg.target_chunks, seed=cfg.seed
+        )
+        self.store = DynamicGraphStore(
+            g, overlay_cap=cfg.overlay_cap,
+            on_h2d=self._note_h2d, on_d2h=self._note_d2h,
+        )
+        self._base_id = id(self.store.base)
+        self.labels = self.engine.to_arena(rep.labels, g.n, fill=self.k)
+        self.escalations = 0
+        self.engine_rebuilds = 0
+        self._step = 0
+        self._cut_ref = float(rep.cut)
+        self._ew_ref = max(float(g.ew.sum()) / 2.0, 1e-9)
+        cut, imb, feas = self._score(self.store.base)
+        self.trajectory: List[UpdateResult] = [UpdateResult(
+            step=0, n=g.n, m=g.m, cut=cut, imbalance=imb, feasible=feas,
+            escalated=True, seconds=time.time() - t0,
+        )]
+
+    # --------------------------------------------------------------- internal
+
+    def _note_h2d(self, nbytes: int) -> None:
+        self.engine.stats.h2d_bytes += int(nbytes)
+
+    def _note_d2h(self, nbytes: int) -> None:
+        self.engine.stats.d2h_bytes += int(nbytes)
+
+    def _lmax(self) -> float:
+        return lmax(self.store.total_node_weight, self.k, self.cfg.eps)
+
+    def _score(self, g) -> tuple:
+        """(cut, imbalance, feasible) of the resident labels on device."""
+        cut = self.engine.cut(g, self.labels)
+        bw = self.engine.block_weights(g, self.labels, self.k)
+        self.engine.stats.d2h_bytes += 4 + bw.nbytes
+        W = max(self.store.total_node_weight, 1e-9)
+        imb = float(bw.max() * self.k / W - 1.0)
+        feas = bool(bw.max() <= self._lmax() + 1e-6)
+        return float(cut), imb, feas
+
+    def _assign_new_nodes(self, g, first_new: int) -> None:
+        """Greedy bin-pack freshly added nodes into the lightest blocks
+        before repair (new nodes arrive unlabeled; isolated ones stay where
+        bin packing puts them — zero cut cost by construction)."""
+        ids = np.arange(first_new, self.store.n, dtype=np.int64)
+        if ids.size == 0:
+            return
+        bw = self.engine.block_weights(g, self.labels, self.k).astype(
+            np.float64
+        )
+        nw = self.store.node_weights()
+        asg = np.empty(ids.size, np.int32)
+        for i, v in enumerate(ids):
+            b = int(np.argmin(bw))
+            asg[i] = b
+            bw[b] += nw[v]
+        self.labels = self.labels.at[jnp.asarray(ids)].set(jnp.asarray(asg))
+        self.engine.stats.h2d_bytes += ids.size * 12
+
+    def _maybe_rebuild_engine(self) -> None:
+        """Node growth past the label arena forces a fresh engine (rare:
+        the arena has pow2 headroom above the initial n).  Called after the
+        post-update compaction, so the new arena is sized for the grown
+        graph; labels carry over, fresh slots arrive unassigned (label k)
+        for ``_assign_new_nodes`` to place."""
+        if self.store.n < self.engine.A:
+            return
+        gh = self.store.csr_host()
+        old_engine = self.engine
+        old = np.asarray(self.labels)
+        self.engine = LPEngine(
+            gh, target_chunks=self.cfg.target_chunks, seed=self.cfg.seed
+        )
+        # cumulative counters and compile-key sets survive the swap (the
+        # jit caches are process-global, so nothing actually recompiles)
+        self.engine.carry_from(old_engine)
+        lab = np.full(gh.n, self.k, np.int32)
+        keep = min(old.shape[0], gh.n)
+        lab[:keep] = old[:keep]
+        self.labels = self.engine.to_arena(lab, gh.n, fill=self.k)
+        self.engine_rebuilds += 1
+
+    def _escalate(self, seed: int) -> None:
+        """Full multilevel re-partition of the compacted graph (the quality
+        guard's fallback); resets the cut reference."""
+        gh = self.store.csr_host()
+        rep = partition(gh, self.cfg.make_partition_cfg(seed))
+        self.labels = self.engine.to_arena(rep.labels, gh.n, fill=self.k)
+        self._cut_ref = float(rep.cut)
+        self._ew_ref = max(float(gh.ew.sum()) / 2.0, 1e-9)
+        self.escalations += 1
+
+    # ----------------------------------------------------------------- public
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    @property
+    def cut(self) -> float:
+        return self.trajectory[-1].cut
+
+    @property
+    def imbalance(self) -> float:
+        return self.trajectory[-1].imbalance
+
+    def labels_np(self) -> np.ndarray:
+        return self.engine.to_host(self.labels, self.store.n)
+
+    def update(self, upd: GraphUpdate) -> UpdateResult:
+        """Absorb one batched update: store -> compact -> region repair ->
+        quality guard.  Returns (and appends) the new trajectory point."""
+        t0 = time.time()
+        self._step += 1
+        step = self._step
+        st = self.engine.stats
+        h2d0, d2h0 = st.h2d_bytes, st.d2h_bytes
+        prospective_n = self.store.n + upd.num_new_nodes
+        net_u, net_v, net_w = upd.net_arcs(max(prospective_n, 1))
+        if net_u.size == 0 and upd.num_new_nodes == 0:
+            # net no-op: nothing to store, nothing to repair — the resident
+            # label array is left untouched (bit-identity guarantee)
+            last = self.trajectory[-1]
+            res = UpdateResult(
+                step=step, n=self.store.n, m=self.store.m, cut=last.cut,
+                imbalance=last.imbalance, feasible=last.feasible, noop=True,
+                seconds=time.time() - t0,
+            )
+            self.trajectory.append(res)
+            return res
+        first_new = self.store.n
+        self.store.apply(upd)
+        g = self.store.graph()          # compacts the overlay
+        self._maybe_rebuild_engine()
+        if id(g) != self._base_id:
+            # fresh base handle: drop device caches keyed on the old one
+            self.engine.evict(keep=(g,))
+            self._base_id = id(g)
+        self._assign_new_nodes(g, first_new)
+        touched = np.concatenate([
+            net_u, net_v,
+            np.arange(first_new, self.store.n, dtype=np.int64),
+        ])
+        seed = (self.cfg.seed * 0x9E3779B1 + step) & 0x7FFFFFFF
+        self.labels, rsize, cut, bw = self.engine.repair(
+            g, self.labels, touched, self.k, self._lmax(),
+            hops=self.cfg.hops, iters=self.cfg.repair_iters,
+            gain_rounds=self.cfg.gain_rounds,
+            balance_rounds=self.cfg.balance_rounds, seed=seed,
+        )
+        # the repair guard already evaluated the returned labels — score
+        # the step from its cut/block-weight results, no re-reduction
+        W = max(self.store.total_node_weight, 1e-9)
+        imb = float(bw.max() * self.k / W - 1.0)
+        feas = bool(bw.max() <= self._lmax() + 1e-6)
+        ew_now = max(float(jnp.sum(g.ew)) / 2.0, 1e-9)
+        st.d2h_bytes += 4
+        scaled_ref = self._cut_ref * (ew_now / self._ew_ref)
+        escalated = (not feas) or (
+            cut > self.cfg.escalate_cut_ratio * max(scaled_ref, 1.0)
+        )
+        if escalated:
+            self._escalate(seed)
+            cut, imb, feas = self._score(g)
+        res = UpdateResult(
+            step=step, n=self.store.n, m=self.store.m, cut=cut,
+            imbalance=imb, feasible=feas, region_size=int(rsize),
+            escalated=escalated, seconds=time.time() - t0,
+            h2d_bytes=st.h2d_bytes - h2d0, d2h_bytes=st.d2h_bytes - d2h0,
+        )
+        self.trajectory.append(res)
+        return res
+
+    def add_edges(self, u, v, w=None) -> UpdateResult:
+        return self.update(GraphUpdate.add_edges(u, v, w))
+
+    def remove_edges(self, u, v, w=None) -> UpdateResult:
+        return self.update(GraphUpdate.remove_edges(u, v, w))
+
+    def add_nodes(self, nw) -> UpdateResult:
+        return self.update(GraphUpdate.add_nodes(nw))
+
+    def stats(self) -> dict:
+        """Engine + store + session counters (the serving dashboard row)."""
+        d = self.engine.stats_dict()
+        d.update(
+            updates=self._step,
+            escalations=self.escalations,
+            engine_rebuilds=self.engine_rebuilds,
+            compact_calls=self.store.stats.compact_calls,
+            compact_compiles=self.store.stats.compact_compiles,
+            compact_bucket_count=self.store.stats.compact_bucket_count,
+            overlay_len=self.store.overlay_len,
+            edges_added=self.store.stats.edges_added,
+            edges_removed=self.store.stats.edges_removed,
+            nodes_added=self.store.stats.nodes_added,
+        )
+        return d

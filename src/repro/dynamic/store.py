@@ -1,0 +1,457 @@
+"""Mutable device-resident graph store (dynamic subsystem, layer 1).
+
+The static pipeline treats the graph as immutable: ``GraphNP`` is built once
+and every device structure (arenas, chunk packs, ELL packs) is cached
+against its identity.  A serving workload instead sees a *stream* of edge
+and node updates.  This module keeps the graph resident on device across
+that stream:
+
+* **Base CSR** — a bucket-padded :class:`~repro.graph.csr.GraphDev`
+  (uploaded once via :func:`~repro.graph.csr.to_device_csr`, or the output
+  of the previous compaction).  All O(m) state stays on device.
+* **Delta overlay** — a bounded host-side COO buffer of signed arc-weight
+  deltas (``add_edges`` appends ``+w`` arcs, ``remove_edges`` appends
+  ``-w``; both directions of each undirected edge).  Batches are cheap
+  appends; nothing is re-sorted until compaction.  Weight deltas are
+  integral (int32 semantics) so merged float32 sums are exact in any
+  order — the precondition every bit-reproducibility guarantee of the
+  subsystem rests on.
+* **Compaction** — :func:`merge_overlay_device` folds the overlay back into
+  CSR as ONE bucketed executable: the PR-2 contraction machinery minus the
+  relabel (fused ``u * Nb + v`` value-only key sort, run segmentation,
+  scatter-add weight sums, searchsorted CSR rebuild), plus a *drop* of runs
+  whose merged weight reaches zero (removed edges).  Overlay batches are
+  padded to pow2 buckets and the live count is traced, so a steady update
+  stream compiles once per ``(Mb, Rb, Nb)`` bucket — the PR-1 jit-cache
+  discipline applied to mutation.
+
+An inverse update stream is lossless: appending ``+w`` then ``-w`` for the
+same arcs and compacting reproduces the original CSR bit-for-bit (same
+(u, v) sort order as :func:`~repro.graph.csr.from_edges`, exact integral
+sums) — regression-tested in tests/test_dynamic.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2, to_device_csr
+
+__all__ = ["DynamicGraphStore", "GraphUpdate", "StoreStats", "merge_overlay_device"]
+
+
+def _as_ids(a) -> np.ndarray:
+    return np.asarray(a, dtype=np.int64).reshape(-1)
+
+
+def _as_w(w, size: int) -> np.ndarray:
+    if w is None:
+        return np.ones(size, dtype=np.int64)
+    w = np.asarray(w, dtype=np.float64).reshape(-1)
+    if not np.all(w == np.round(w)):
+        raise ValueError("update weights must be integral (int32 deltas)")
+    if w.size and np.abs(w).max() >= 2**24:
+        # f32 loses integer exactness at 2^24 — the bound every
+        # bit-reproducibility guarantee of the subsystem rests on
+        raise ValueError("update weight deltas must stay below 2^24")
+    return w.astype(np.int64)
+
+
+@dataclass
+class GraphUpdate:
+    """One batched mutation request (all arrays host numpy, int semantics).
+
+    ``add_u/add_v/add_w`` are undirected edges whose weight is *increased*
+    by ``w`` (creating the edge if absent); ``rem_u/rem_v/rem_w`` decrease
+    it (an edge whose merged weight reaches zero disappears).  ``add_node_w``
+    appends new nodes with the given weights; new node ids are assigned
+    contiguously from the current n, so a batch may add nodes and then wire
+    them up with edges in the same request.
+    """
+
+    add_u: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    add_v: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    add_w: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    rem_u: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    rem_v: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    rem_w: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    add_node_w: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+
+    @staticmethod
+    def add_edges(u, v, w=None) -> "GraphUpdate":
+        u, v = _as_ids(u), _as_ids(v)
+        return GraphUpdate(add_u=u, add_v=v, add_w=_as_w(w, u.shape[0]))
+
+    @staticmethod
+    def remove_edges(u, v, w=None) -> "GraphUpdate":
+        u, v = _as_ids(u), _as_ids(v)
+        return GraphUpdate(rem_u=u, rem_v=v, rem_w=_as_w(w, u.shape[0]))
+
+    @staticmethod
+    def add_nodes(nw) -> "GraphUpdate":
+        return GraphUpdate(add_node_w=_as_w(nw, len(np.atleast_1d(nw))))
+
+    @property
+    def num_new_nodes(self) -> int:
+        return int(self.add_node_w.shape[0])
+
+    def merged(self, other: "GraphUpdate") -> "GraphUpdate":
+        """Concatenate two requests into one batch (other's edges may
+        reference nodes this batch adds)."""
+        cat = np.concatenate
+        return GraphUpdate(
+            add_u=cat([self.add_u, other.add_u]),
+            add_v=cat([self.add_v, other.add_v]),
+            add_w=cat([self.add_w, other.add_w]),
+            rem_u=cat([self.rem_u, other.rem_u]),
+            rem_v=cat([self.rem_v, other.rem_v]),
+            rem_w=cat([self.rem_w, other.rem_w]),
+            add_node_w=cat([self.add_node_w, other.add_node_w]),
+        )
+
+    def arcs(self) -> tuple:
+        """Symmetric signed arc deltas ``(u, v, w)`` of the batch: both arcs
+        per undirected edge, ``+w`` for adds, ``-w`` for removals."""
+        u = np.concatenate([self.add_u, self.add_v, self.rem_u, self.rem_v])
+        v = np.concatenate([self.add_v, self.add_u, self.rem_v, self.rem_u])
+        w = np.concatenate([self.add_w, self.add_w, -self.rem_w, -self.rem_w])
+        return u, v, w
+
+    def net_arcs(self, n: int) -> tuple:
+        """Deduplicated net arc deltas over the batch — the batch's true
+        effect.  Arcs whose adds and removals cancel vanish here, which is
+        what makes a net-no-op batch leave labels bit-identical: the session
+        skips repair entirely when this comes back empty."""
+        u, v, w = self.arcs()
+        if u.size == 0:
+            return u.astype(np.int64), v.astype(np.int64), w
+        key = u * np.int64(n) + v
+        order = np.argsort(key, kind="stable")
+        key_s, w_s = key[order], w[order]
+        boundary = np.empty(key_s.shape[0], dtype=bool)
+        boundary[0] = True
+        boundary[1:] = key_s[1:] != key_s[:-1]
+        run = np.cumsum(boundary) - 1
+        net = np.zeros(int(run[-1]) + 1, dtype=np.int64)
+        np.add.at(net, run, w_s)
+        first = key_s[np.flatnonzero(boundary)]
+        live = net != 0
+        return (first[live] // n, first[live] % n, net[live])
+
+
+@dataclass
+class StoreStats:
+    """Counters surfaced through ``PartitionSession.stats()``."""
+
+    update_batches: int = 0
+    edges_added: int = 0
+    edges_removed: int = 0
+    nodes_added: int = 0
+    compact_calls: int = 0
+    compact_compiles: int = 0       # distinct (Mb, Rb, Nb) merge buckets
+    compact_buckets: set = field(default_factory=set)
+
+    @property
+    def compact_bucket_count(self) -> int:
+        return len(self.compact_buckets)
+
+
+def _merge_body(src, dst, ew, ou, ov, ow, nw, n, m, r):
+    Mb = src.shape[0]
+    Rb = ou.shape[0]
+    Nb = nw.shape[0]
+    T = Mb + Rb
+    iota = jnp.arange(T, dtype=jnp.int32)
+    u = jnp.concatenate([src, ou])
+    v = jnp.concatenate([dst, ov])
+    w = jnp.concatenate([ew, ow])
+    valid = jnp.concatenate(
+        [jnp.arange(Mb, dtype=jnp.int32) < m, jnp.arange(Rb, dtype=jnp.int32) < r]
+    )
+    if Nb * Nb < 2**31:
+        # fused int32 key, value-only sort (the PR-2 general path): run ids
+        # recovered by binary search, weights merged by scatter-add — exact
+        # for the integral deltas the store enforces
+        big = jnp.int32(2**31 - 1)
+        key = jnp.where(valid, u * jnp.int32(Nb) + v, big)
+        ks = jnp.sort(key)
+        oks = ks < big
+        first = jnp.concatenate([oks[:1], oks[1:] & (ks[1:] != ks[:-1])])
+        run = (jnp.cumsum(first) - 1).astype(jnp.int32)
+        pos = jnp.minimum(jnp.searchsorted(ks, key), T - 1)
+        run_of = jnp.where(valid, run[pos], T)
+        firstpos = jnp.sort(jnp.where(first, iota, jnp.int32(T)))
+        fp = jnp.minimum(firstpos, T - 1)
+        uk = ks[fp]
+        ru = (uk // jnp.int32(Nb)).astype(jnp.int32)
+        rv = (uk % jnp.int32(Nb)).astype(jnp.int32)
+    else:
+        # > 46k-node graphs: two-pass payload lexsort (mirrors the
+        # contract_device fallback; rare at this repo's scales)
+        sent = jnp.int32(Nb)
+        aorder = jnp.lexsort((jnp.where(valid, v, sent), jnp.where(valid, u, sent)))
+        oks = valid[aorder]
+        u_s = jnp.where(oks, u[aorder], sent)
+        v_s = jnp.where(oks, v[aorder], sent)
+        first = jnp.concatenate(
+            [oks[:1], oks[1:] & ((u_s[1:] != u_s[:-1]) | (v_s[1:] != v_s[:-1]))]
+        )
+        run = (jnp.cumsum(first) - 1).astype(jnp.int32)
+        run_of = jnp.zeros((T,), jnp.int32).at[aorder].set(
+            jnp.where(oks, run, T)
+        )
+        run_of = jnp.where(valid, run_of, T)
+        firstpos = jnp.sort(jnp.where(first, iota, jnp.int32(T)))
+        fp = jnp.minimum(firstpos, T - 1)
+        ru = u_s[fp]
+        rv = v_s[fp]
+    nrun = jnp.sum(first).astype(jnp.int32)
+    rw = jnp.zeros((T,), jnp.float32).at[run_of].add(
+        jnp.where(valid, w, 0.0), mode="drop"
+    )
+    # drop runs whose merged weight hit zero (removed edges); kept runs stay
+    # in (u, v) key order, so a second value-only sort IS the compaction
+    keep = (iota < nrun) & (rw > 0.0)
+    kpos = jnp.sort(jnp.where(keep, iota, jnp.int32(T)))
+    kp = jnp.minimum(kpos, T - 1)
+    m_new = jnp.sum(keep).astype(jnp.int32)
+    arc_ok = iota < m_new
+    src_c = jnp.where(arc_ok, ru[kp], 0).astype(jnp.int32)
+    dst_c = jnp.where(arc_ok, rv[kp], 0).astype(jnp.int32)
+    ew_c = jnp.where(arc_ok, rw[kp], 0.0)
+    cu_sorted = jnp.where(arc_ok, src_c, jnp.int32(Nb))
+    indptr_c = jnp.searchsorted(
+        cu_sorted, jnp.arange(Nb + 1, dtype=jnp.int32)
+    ).astype(jnp.int32)
+    return indptr_c, src_c, dst_c, ew_c, m_new, jnp.max(nw), jnp.max(ew_c)
+
+
+merge_overlay_device = jax.jit(_merge_body)
+merge_overlay_device.__doc__ = """Fold a COO delta overlay into a CSR on device (one bucketed executable).
+
+Args:
+  src, dst, ew: (Mb,) base arcs; entries >= ``m`` are inert padding.
+  ou, ov, ow:   (Rb,) overlay arc deltas (symmetric, signed f32 with
+    integral values); entries >= ``r`` are inert padding.
+  nw:           (Nb,) node weights of the POST-update node set (0 beyond n).
+  n, m, r:      traced live counts — one compiled executable per
+    ``(Mb, Rb, Nb)`` bucket serves the whole update stream.
+
+Returns ``(indptr, src, dst, ew, m_new, nw_max, ew_max)``, all
+device-resident: a merged CSR in (u, v) sort order — identical to what
+``from_edges`` would emit for the merged edge list — with zero-weight
+(fully removed) edges dropped and GraphDev padding invariants restored.
+Removal is saturating: a merged weight at or below zero (removing more
+weight than the edge carries, or removing an edge that never existed)
+drops the edge rather than raising — the host side cannot cheaply know
+per-edge weights without materializing the CSR, so over-removal is defined
+as deletion.
+"""
+
+
+class DynamicGraphStore:
+    """Device-resident base CSR + bounded COO delta overlay.
+
+    ``apply`` appends update batches to the overlay (O(batch) host work,
+    no device dispatch); ``compact`` merges the overlay into a fresh
+    :class:`GraphDev` base.  ``graph()`` hands out the up-to-date handle,
+    compacting first when dirty — callers that need merged adjacency (the
+    repair's region gather, cut evaluation) go through it.  The overlay is
+    bounded by ``overlay_cap`` arcs; exceeding it triggers an automatic
+    compaction, so device memory for pending deltas is O(cap) regardless of
+    stream length.
+    """
+
+    def __init__(
+        self,
+        g: GraphNP,
+        *,
+        overlay_cap: int = 1 << 16,
+        on_h2d: Optional[Callable[[int], None]] = None,
+        on_d2h: Optional[Callable[[int], None]] = None,
+    ):
+        if g.m and not bool(np.all(g.ew == np.round(g.ew))):
+            raise ValueError("dynamic store requires integral edge weights")
+        if g.m and float(g.ew.max()) >= 2**24:
+            raise ValueError("edge weights must stay below 2^24 (f32-exact)")
+        self._on_h2d = on_h2d or (lambda b: None)
+        self._on_d2h = on_d2h or (lambda b: None)
+        self.overlay_cap = int(overlay_cap)
+        self.stats = StoreStats()
+        self.n = g.n
+        self._nw = g.nw.astype(np.float64).copy()   # host mirror, authoritative
+        self.base: GraphDev = to_device_csr(
+            g, on_materialize=self._on_d2h, on_upload=self._on_h2d
+        )
+        self._nw_dev: Optional[jax.Array] = self.base.nw  # survives compacts
+        self._base_host: Optional[GraphNP] = g
+        self._ou: List[np.ndarray] = []
+        self._ov: List[np.ndarray] = []
+        self._ow: List[np.ndarray] = []
+        self._olen = 0
+
+    # ------------------------------------------------------------- properties
+
+    @property
+    def m(self) -> int:
+        """Arc count of the last compacted base (overlay arcs not included
+        until ``compact``)."""
+        return self.base.m
+
+    @property
+    def overlay_len(self) -> int:
+        return self._olen
+
+    @property
+    def dirty(self) -> bool:
+        return self._olen > 0
+
+    @property
+    def total_node_weight(self) -> float:
+        return float(self._nw.sum())
+
+    def node_weights(self) -> np.ndarray:
+        return self._nw
+
+    # ---------------------------------------------------------------- updates
+
+    def apply(self, upd: GraphUpdate) -> None:
+        """Append one batch: new nodes first (ids from the current n), then
+        the batch's symmetric arc deltas into the overlay.  The whole batch
+        is validated up front, so a rejected request leaves the store
+        untouched (no half-applied node adds)."""
+        u, v, w = upd.arcs()
+        n_after = self.n + upd.num_new_nodes
+        if u.size:
+            if u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n_after:
+                raise ValueError("edge endpoint out of range")
+            if np.any(u == v):
+                raise ValueError("self loops are not representable")
+        if upd.num_new_nodes:
+            self._nw = np.concatenate(
+                [self._nw, upd.add_node_w.astype(np.float64)]
+            )
+            self.n = n_after
+            self.stats.nodes_added += upd.num_new_nodes
+            self._nw_dev = None         # device mirror is stale
+        if u.size:
+            self._ou.append(u.astype(np.int32))
+            self._ov.append(v.astype(np.int32))
+            self._ow.append(w.astype(np.float32))
+            self._olen += u.size
+        self.stats.update_batches += 1
+        self.stats.edges_added += int(upd.add_u.shape[0])
+        self.stats.edges_removed += int(upd.rem_u.shape[0])
+        if self._olen > self.overlay_cap:
+            self.compact()
+
+    def add_edges(self, u, v, w=None) -> None:
+        self.apply(GraphUpdate.add_edges(u, v, w))
+
+    def remove_edges(self, u, v, w=None) -> None:
+        self.apply(GraphUpdate.remove_edges(u, v, w))
+
+    def add_nodes(self, nw) -> None:
+        self.apply(GraphUpdate.add_nodes(nw))
+
+    # ------------------------------------------------------------- compaction
+
+    def compact(self) -> GraphDev:
+        """Merge the overlay into a fresh base CSR (no-op when clean).
+
+        One bucketed device executable (:func:`merge_overlay_device`); only
+        the ``(m_new, nw_max, ew_max)`` scalars sync to host.  The previous
+        base handle is dropped — callers caching device state against the
+        old handle's identity must evict (the session does)."""
+        if not self.dirty and self.n == self.base.n:
+            return self.base
+        self.stats.compact_calls += 1
+        r = self._olen
+        Rb = pow2(max(r, 8))
+        ou = np.zeros(Rb, np.int32)
+        ov = np.zeros(Rb, np.int32)
+        ow = np.zeros(Rb, np.float32)
+        o = 0
+        for cu, cv, cw in zip(self._ou, self._ov, self._ow):
+            ou[o : o + cu.size] = cu
+            ov[o : o + cu.size] = cv
+            ow[o : o + cu.size] = cw
+            o += cu.size
+        Nb = pow2(max(self.n, 8))
+        # node weights re-upload only after node churn (edge-only streams —
+        # the common case — reuse the resident array across compactions)
+        if self._nw_dev is None or self._nw_dev.shape[0] != Nb:
+            nw = np.zeros(Nb, np.float32)
+            nw[: self.n] = self._nw
+            self._nw_dev = jnp.asarray(nw)
+            self._on_h2d(nw.nbytes)
+        self._on_h2d(ou.nbytes + ov.nbytes + ow.nbytes)
+        Mb = self.base.indices.shape[0]
+        ckey = (Mb, Rb, Nb)
+        if ckey not in self.stats.compact_buckets:
+            self.stats.compact_buckets.add(ckey)
+            self.stats.compact_compiles += 1
+        # base node bucket may be smaller than Nb after node adds; the merge
+        # only reads arc arrays + the new nw, so no base re-pad is needed
+        indptr, src_c, dst_c, ew_c, m_new, nwmax, ewmax = merge_overlay_device(
+            self.base.src, self.base.indices, self.base.ew,
+            jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
+            self._nw_dev,
+            jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
+        )
+        m_new, nwmax, ewmax = jax.device_get((m_new, nwmax, ewmax))
+        m_new = int(m_new)
+        self._on_d2h(12)
+        if float(ewmax) >= 2**24:
+            # the first merge whose sums could round in f32: refuse rather
+            # than silently break the exact-merge / bit-round-trip contract
+            raise ValueError(
+                "merged edge weight reached 2^24 — f32 exactness lost"
+            )
+        Mcb = arc_bucket(m_new)
+
+        def fit(a, L, fill=0):
+            if a.shape[0] == L:
+                return a
+            if a.shape[0] > L:
+                return a[:L]
+            return jnp.concatenate(
+                [a, jnp.full((L - a.shape[0],), fill, a.dtype)]
+            )
+
+        self.base = GraphDev(
+            indptr=indptr,
+            indices=fit(dst_c, Mcb),
+            ew=fit(ew_c, Mcb),
+            nw=self._nw_dev,
+            src=fit(src_c, Mcb),
+            n=self.n, m=m_new,
+            nw_max=float(nwmax), ew_max=float(ewmax), ew_integral=True,
+            on_materialize=self._on_d2h,
+        )
+        self._base_host = None
+        self._ou, self._ov, self._ow = [], [], []
+        self._olen = 0
+        return self.base
+
+    def graph(self) -> GraphDev:
+        """The up-to-date device graph: compacts first when the overlay has
+        pending arcs OR nodes were added since the last compaction (node
+        adds leave the overlay clean but the base's node set stale)."""
+        if self.dirty or self.n != self.base.n:
+            return self.compact()
+        return self.base
+
+    def csr_host(self) -> GraphNP:
+        """Host CSR of the CURRENT graph (compacts, then materializes —
+        the escalation path's one O(n + m) download)."""
+        g = self.graph()
+        if self._base_host is None:
+            self._base_host = g.to_host()
+        return self._base_host

@@ -37,11 +37,33 @@ __all__ = [
     "Graph",
     "GraphDev",
     "GraphNP",
+    "arc_bucket",
     "from_edges",
+    "pow2",
     "to_device",
+    "to_device_csr",
     "to_host",
     "validate",
 ]
+
+
+def pow2(x: int) -> int:
+    """Smallest power of two >= x (the node/label-axis bucket policy)."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+def arc_bucket(m: int) -> int:
+    """Arc-axis bucket: pow2 below 16384, then 16384-arc rungs.
+
+    Single source of truth shared by the LP engine's contraction buckets and
+    the dynamic store's compaction buckets: value-only key sorts over the
+    arc axis are the critical path and scale with the PADDED arc count, so
+    hot (large) levels get a tight rung (<= 8% padding) instead of the
+    up-to-2x tax of pure pow2; small levels keep pow2 rungs so the bucket
+    count stays O(log m)."""
+    if m <= 16384:
+        return pow2(max(m, 8))
+    return -(-m // 16384) * 16384
 
 
 @jax.tree_util.register_pytree_node_class
@@ -268,6 +290,46 @@ def to_device(g: GraphNP) -> Graph:
         indices=jnp.asarray(g.indices, dtype=jnp.int32),
         ew=jnp.asarray(g.ew, dtype=jnp.float32),
         nw=jnp.asarray(g.nw, dtype=jnp.float32),
+    )
+
+
+def to_device_csr(g: GraphNP, on_materialize=None, on_upload=None) -> GraphDev:
+    """Upload a host CSR into a bucket-padded device-resident :class:`GraphDev`.
+
+    The handle satisfies exactly the invariants ``contract_device`` outputs
+    satisfy (pow2 node bucket, ``arc_bucket`` arc bucket, inert padding:
+    rows >= n hold m, arcs >= m hold index 0 / weight 0), so downstream
+    consumers (the LP engine's device pack gather, the dynamic store's
+    compaction) cannot tell an uploaded finest graph from a contracted
+    coarse level.  ``on_upload(nbytes)``, when set, lets the owner account
+    the host->device traffic of the one-time upload."""
+    n, m = g.n, g.m
+    Nb = pow2(max(n, 8))
+    Mb = arc_bucket(m)
+    indptr = np.full(Nb + 1, m, dtype=np.int64)
+    indptr[: n + 1] = g.indptr
+    indices = np.zeros(Mb, dtype=np.int32)
+    indices[:m] = g.indices
+    ew = np.zeros(Mb, dtype=np.float32)
+    ew[:m] = g.ew
+    src = np.zeros(Mb, dtype=np.int32)
+    src[:m] = g.arc_sources()
+    nw = np.zeros(Nb, dtype=np.float32)
+    nw[:n] = g.nw
+    if on_upload is not None:
+        on_upload(indptr.nbytes // 2 + indices.nbytes + ew.nbytes
+                  + src.nbytes + nw.nbytes)
+    return GraphDev(
+        indptr=jnp.asarray(indptr, dtype=jnp.int32),
+        indices=jnp.asarray(indices),
+        ew=jnp.asarray(ew),
+        nw=jnp.asarray(nw),
+        src=jnp.asarray(src),
+        n=n, m=m,
+        nw_max=float(g.nw.max()) if n else 0.0,
+        ew_max=float(g.ew.max()) if m else 0.0,
+        ew_integral=bool(np.all(g.ew == np.round(g.ew))) if m else True,
+        on_materialize=on_materialize,
     )
 
 

@@ -62,6 +62,7 @@ __all__ = [
     "ShardedGraph",
     "chunk_geometry",
     "plan_chunks",
+    "plan_region_pack",
     "layout_nodes",
     "pack_chunks",
     "gather_pack_device",
@@ -175,6 +176,33 @@ def layout_nodes(order: np.ndarray, node_chunk: np.ndarray, C: int, N: int, n: i
         nodes[pos] = order
         node_valid[pos] = True
     return nodes.reshape(C, N), node_valid.reshape(C, N)
+
+
+def plan_region_pack(
+    deg_ordered: np.ndarray,
+    order: np.ndarray,
+    n: int,
+    max_nodes: int = 4096,
+    max_edges: int = 32768,
+    block: int = 8,
+):
+    """Chunk plan + node layout for a SUBSET of the graph's nodes.
+
+    The dynamic repairer packs only the nodes of the affected region into
+    chunks (``order`` holds region node ids, ``deg_ordered`` their degrees
+    in that order); the rest of the graph participates in the sweep solely
+    as (label, weight) context through the arena arrays.  Reuses
+    :func:`plan_chunks` / :func:`layout_nodes` with the region size as the
+    packed-node count but the GLOBAL ``n`` as the slot sentinel, so the
+    emitted layout feeds :func:`gather_pack_device` against the full
+    resident CSR unchanged.  Returns ``(nodes, node_valid, C, N, E)``.
+    """
+    r = int(order.shape[0])
+    node_chunk, C, N, E = plan_chunks(
+        deg_ordered, r, max_nodes=max_nodes, max_edges=max_edges, block=block
+    )
+    nodes, node_valid = layout_nodes(order, node_chunk, C, N, n)
+    return nodes, node_valid, C, N, E
 
 
 def pack_chunks(

@@ -119,6 +119,55 @@ def test_partition_device_coarsening_matches_host_coarsening():
     assert rep_host.engine_stats["contract_calls"] == 0
 
 
+def test_packed_key_fallback_threshold_pinned():
+    """ISSUE 4 satellite: pin the packed-key -> scatter-add fallback
+    boundary (``Nb^2 * 2^wbits > PACKED_KEY_SPACE = 2^32``, plus the int32
+    cumsum bound ``Mb * (2^wbits - 1) < 2^31``) so a future x64 enablement
+    can't silently flip the fast path without updating this test."""
+    from repro.core.contraction import PACKED_KEY_SPACE, packed_key_wbits
+
+    assert PACKED_KEY_SPACE == 2**32
+    # exactly ON the key-space boundary: (2^12)^2 * 2^8 == 2^32 -> fast path
+    assert packed_key_wbits(2**12, 10_000, ew_max=255.0, ew_integral=True) == 8
+    # one weight bit past it -> fallback
+    assert packed_key_wbits(2**12, 10_000, ew_max=256.0, ew_integral=True) == 0
+    # same overflow driven by the node bucket instead of the weight
+    assert packed_key_wbits(2**13, 10_000, ew_max=255.0, ew_integral=True) == 0
+    # int32 cumsum bound: Mb * (2^b - 1) must stay below 2^31
+    assert packed_key_wbits(2**8, 2**24, ew_max=255.0, ew_integral=True) == 0
+    assert packed_key_wbits(2**8, 2**22, ew_max=255.0, ew_integral=True) == 8
+    # non-integral or sub-1 weights never pack
+    assert packed_key_wbits(2**4, 100, ew_max=3.5, ew_integral=False) == 0
+    assert packed_key_wbits(2**4, 100, ew_max=0.0, ew_integral=True) == 0
+
+
+def test_packed_key_fallback_contract_matches_oracle():
+    """Weights big enough to overflow the packed key select wbits=0 (visible
+    in the engine's contract bucket keys) and still reproduce the host
+    oracle; the same shape with unit weights stays on the fast path."""
+    from repro.graph import from_edges
+
+    rng = np.random.default_rng(0)
+    n = 256
+    u = rng.integers(0, n, 800)
+    v = (u + 1 + rng.integers(0, n - 1, 800)) % n
+    w_big = (rng.integers(1, 8, 800) * 2**18).astype(np.float32)
+    g_big = from_edges(n, u, v, w=w_big)
+    g_unit = from_edges(n, u, v, w=np.ones(800, np.float32))
+    labels = rng.integers(0, 50, n).astype(np.int32)
+    for g, want_packed in ((g_big, False), (g_unit, True)):
+        eng = LPEngine(g, seed=0)
+        cdev, cmap = eng.contract(g, labels)
+        (ckey,) = eng.stats.contract_buckets
+        assert (ckey[2] > 0) == want_packed
+        chost, C_host = contract(g, labels)
+        np.testing.assert_array_equal(cmap.host(), C_host)
+        gh = cdev.to_host()
+        np.testing.assert_array_equal(gh.indptr, chost.indptr)
+        np.testing.assert_array_equal(gh.indices, chost.indices)
+        np.testing.assert_allclose(gh.ew, chost.ew, rtol=1e-6)
+
+
 def test_contract_compile_count_bounded_by_buckets():
     """Compile-count regression: a multi-level, multi-cycle run dispatches
     one contraction compile per (Nb, Mb) bucket — never per level x cycle."""

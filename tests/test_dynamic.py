@@ -1,0 +1,361 @@
+"""Dynamic partitioning subsystem (ISSUE 4): mutable device-resident store,
+incremental size-constrained repair, and the batched update-serving session.
+
+The contract under test: a net-no-op update batch leaves the resident labels
+BIT-identical; an inverse update stream (add then remove the same batch)
+compacts back to the original CSR bit-for-bit; repair touches only the
+h-hop affected region, keeps the partition feasible, and compiles once per
+shape bucket across a multi-batch stream (repair_compiles ==
+repair_bucket_count); the quality guard escalates to a full V-cycle when
+local repair can no longer hold the cut.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import LPEngine, PartitionerConfig, partition
+from repro.core.metrics import cut_np, lmax
+from repro.dynamic import (
+    DynamicGraphStore,
+    GraphUpdate,
+    PartitionSession,
+    SessionConfig,
+)
+from repro.graph import GraphDev, barabasi_albert, mesh2d, planted_partition, validate
+
+pytestmark = pytest.mark.dynamic
+
+
+def _assert_csr_equal(a, b):
+    np.testing.assert_array_equal(a.indptr, b.indptr)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.ew, b.ew)
+    np.testing.assert_array_equal(a.nw, b.nw.astype(np.float32))
+
+
+# --------------------------------------------------------------------- store
+
+
+def test_store_inverse_batches_round_trip_to_original_csr():
+    """add_edges then remove_edges of the same batch (separate calls, so the
+    overlay really holds both) must compact back to the exact original CSR —
+    same arc order, bit-identical float32 weights."""
+    g = barabasi_albert(1024, 4, seed=2)
+    st = DynamicGraphStore(g)
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, g.n, 64)
+    v = (u + 1 + rng.integers(0, g.n - 1, 64)) % g.n
+    w = rng.integers(1, 5, 64)
+    st.add_edges(u, v, w)
+    assert st.dirty and st.overlay_len == 2 * 64   # symmetric arcs
+    st.remove_edges(u, v, w)
+    assert st.overlay_len == 4 * 64                # + the inverse batch
+    g2 = st.csr_host()
+    assert not st.dirty
+    _assert_csr_equal(g2, g)
+    validate(g2)
+
+
+def test_store_add_remove_changes_csr_and_validates():
+    """Adding brand-new edges grows m by 2 per edge; removing an existing
+    unit-weight edge deletes it; the merged CSR stays a valid symmetric
+    graph and matches a host-rebuilt oracle."""
+    g = mesh2d(16)  # unit weights, no parallel edges
+    st = DynamicGraphStore(g)
+    # add edges that do not exist (the 8-neighbourhood mesh has +1/+15/+16/
+    # +17 arcs; distance-2 pairs are new), remove existing ones
+    d_u = np.arange(0, 64, dtype=np.int64)
+    d_v = d_u + 2
+    st.add_edges(d_u, d_v)
+    e_u = np.arange(100, 110, dtype=np.int64)
+    e_v = e_u + 1                 # existing horizontal edges, weight 1
+    st.remove_edges(e_u, e_v)
+    g2 = st.csr_host()
+    validate(g2)
+    assert g2.m == g.m + 2 * 64 - 2 * 10
+    # oracle: rebuild from the merged edge list on host
+    from repro.graph import from_edges
+
+    src = g.arc_sources()
+    keep = np.ones(g.m, bool)
+    for uu, vv in zip(e_u, e_v):
+        keep &= ~(((src == uu) & (g.indices == vv)) | ((src == vv) & (g.indices == uu)))
+    ou = np.concatenate([src[keep], d_u, d_v])
+    ov = np.concatenate([g.indices[keep], d_v, d_u])
+    ow = np.concatenate([g.ew[keep], np.ones(128, np.float32)])
+    ghost = from_edges(g.n, ou, ov, w=ow, symmetrize=False)
+    _assert_csr_equal(g2, ghost)
+
+
+def test_store_add_nodes_then_wire_them_in_one_batch():
+    g = barabasi_albert(500, 3, seed=1)
+    st = DynamicGraphStore(g)
+    upd = GraphUpdate.add_nodes([2, 3]).merged(
+        GraphUpdate.add_edges([500, 501, 500], [0, 7, 501])
+    )
+    st.apply(upd)
+    g2 = st.csr_host()
+    validate(g2)
+    assert st.n == 502 and g2.n == 502
+    assert g2.m == g.m + 6
+    np.testing.assert_array_equal(g2.nw[500:], np.array([2.0, 3.0], np.float32))
+    assert st.total_node_weight == pytest.approx(g.nw.sum() + 5)
+
+
+def test_store_rejected_batch_leaves_store_untouched():
+    """Validation runs before any mutation: a batch with an out-of-range
+    edge must not half-apply its node adds."""
+    g = mesh2d(8)
+    st = DynamicGraphStore(g)
+    bad = GraphUpdate.add_nodes([1]).merged(
+        GraphUpdate.add_edges([0], [10**6])
+    )
+    with pytest.raises(ValueError):
+        st.apply(bad)
+    assert st.n == g.n and st.overlay_len == 0
+    assert st.total_node_weight == pytest.approx(g.nw.sum())
+
+
+def test_tiny_graph_device_csr_fits_engine_arena():
+    """to_device_csr floors the node bucket at 8; the engine arena must not
+    underrun it on graphs with n <= 3."""
+    from repro.graph import from_edges, to_device_csr
+
+    g = from_edges(3, [0, 1], [1, 2])
+    eng = LPEngine(g, seed=0)
+    gd = to_device_csr(g)
+    lab = eng.to_arena(np.array([0, 1, 1], np.int32), 3, fill=2)
+    assert float(eng.cut(gd, lab)) == 1.0
+    np.testing.assert_allclose(eng.block_weights(gd, lab, 2), [1.0, 2.0])
+
+
+def test_store_overlay_cap_triggers_auto_compaction():
+    g = mesh2d(8)
+    st = DynamicGraphStore(g, overlay_cap=16)
+    u = np.arange(0, 10, dtype=np.int64)
+    st.add_edges(u, u + 16)   # 20 overlay arcs > cap
+    assert st.stats.compact_calls == 1 and not st.dirty
+    assert isinstance(st.base, GraphDev)
+
+
+def test_store_compact_is_compile_bounded_across_a_stream():
+    """Same-bucket batches reuse ONE merge executable: compiles == buckets
+    even across many compactions."""
+    g = barabasi_albert(1024, 4, seed=3)
+    st = DynamicGraphStore(g)
+    rng = np.random.default_rng(1)
+    for i in range(5):
+        u = rng.integers(0, g.n, 32)
+        v = (u + 1 + rng.integers(0, g.n - 1, 32)) % g.n
+        st.add_edges(u, v)
+        st.compact()
+    assert st.stats.compact_calls == 5
+    assert st.stats.compact_compiles == st.stats.compact_bucket_count
+    assert st.stats.compact_compiles < st.stats.compact_calls
+
+
+# -------------------------------------------------------------------- repair
+
+
+def _bfs_hops(g, seeds, hops):
+    mask = np.zeros(g.n, bool)
+    mask[seeds] = True
+    for _ in range(hops):
+        nxt = mask.copy()
+        for v in np.flatnonzero(mask):
+            nxt[g.indices[g.indptr[v]:g.indptr[v + 1]]] = True
+        mask = nxt
+    return mask
+
+
+def test_repair_moves_only_region_nodes():
+    """Nodes outside the h-hop region keep their labels bit-identically —
+    the locality guarantee every session-level invariant builds on."""
+    g = mesh2d(32)
+    k = 2
+    L = lmax(g.n, k, 0.03)
+    eng = LPEngine(g, seed=0)
+    rng = np.random.default_rng(0)
+    lab0 = (np.arange(g.n) // (g.n // k)).clip(0, k - 1).astype(np.int32)
+    noisy = lab0.copy()
+    flip = rng.random(g.n) < 0.2
+    noisy[flip] ^= 1
+    touched = np.array([100, 505], dtype=np.int64)
+    hops = 2
+    out, rsize, cut, bw = eng.repair(
+        g, noisy, touched, k, L, hops=hops, iters=4, seed=3
+    )
+    out_np = np.asarray(out[: g.n])
+    region = _bfs_hops(g, touched, hops)
+    assert rsize == int(region.sum())
+    np.testing.assert_array_equal(out_np[~region], noisy[~region])
+    assert eng.stats.repair_calls == 1
+    assert eng.stats.repair_compiles == eng.stats.repair_bucket_count
+    # the returned score really is the returned labels' score
+    assert cut == pytest.approx(cut_np(g, out_np))
+    np.testing.assert_allclose(
+        bw, np.bincount(out_np, weights=g.nw, minlength=k), rtol=1e-6
+    )
+
+
+def test_repair_gain_round_device_matches_fm_spec():
+    """gain_round_device == fm.gain_round_np(region=..., influx_gate=True),
+    op for op."""
+    from repro.core.fm import gain_round_np
+    from repro.dynamic.repair import gain_round_device
+
+    g = planted_partition(300, 4, p_in=0.06, p_out=0.01, seed=2)
+    k = 3
+    Ab = 512
+    rng = np.random.default_rng(0)
+    lab = np.full(Ab, k, np.int32)
+    lab[: g.n] = rng.integers(0, k, g.n)
+    nw = np.zeros(Ab, np.float32)
+    nw[: g.n] = g.nw
+    region = np.zeros(Ab, bool)
+    region[rng.integers(0, g.n, 80)] = True
+    src = g.arc_sources().astype(np.int32)
+    dst = g.indices.astype(np.int32)
+    L = lmax(g.n, k, 0.03)
+    want = gain_round_np(
+        src, dst, g.ew, nw, lab, g.n, k, k + 1, np.float32(L),
+        0x1234, 0x5678, region=region, influx_gate=True,
+    )
+    got = gain_round_device(
+        jnp.asarray(src), jnp.asarray(dst), jnp.asarray(g.ew),
+        jnp.asarray(nw), jnp.asarray(lab), jnp.asarray(region),
+        jnp.int32(g.n), jnp.int32(k), jnp.float32(L),
+        jnp.uint32(0x1234), jnp.uint32(0x5678), Kb=k + 1,
+    )
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert np.any(want != lab)          # the round actually moved something
+    np.testing.assert_array_equal(np.asarray(got)[~region], lab[~region])
+
+
+# ------------------------------------------------------------------- session
+
+
+def _mk_session(g, k=2, **kw):
+    return PartitionSession(g, SessionConfig(k=k, seed=0, **kw))
+
+
+def test_session_noop_batch_keeps_labels_bit_identical():
+    g = planted_partition(1500, 8, p_in=0.03, p_out=0.002, seed=1)
+    sess = _mk_session(g, k=2)
+    lab0 = sess.labels_np().copy()
+    dev0 = sess.labels
+    # an empty batch and a self-cancelling batch are both net no-ops
+    res = sess.update(GraphUpdate())
+    assert res.noop
+    u = np.array([3, 10, 77])
+    v = np.array([500, 900, 1200])
+    res = sess.update(
+        GraphUpdate.add_edges(u, v, [2, 1, 3]).merged(
+            GraphUpdate.remove_edges(u, v, [2, 1, 3])
+        )
+    )
+    assert res.noop
+    assert sess.labels is dev0          # not even re-dispatched
+    np.testing.assert_array_equal(sess.labels_np(), lab0)
+    assert sess.engine.stats.repair_calls == 0
+    assert not sess.store.dirty and sess.store.stats.compact_calls == 0
+
+
+def test_session_stream_stays_feasible_and_compile_bounded():
+    """A multi-batch add/remove stream: every step feasible (imbalance <=
+    eps), repair compiles bounded by buckets with actual cache reuse, and
+    the final cut stays within a sane factor of a fresh full re-partition."""
+    g = barabasi_albert(4096, 5, seed=1)
+    sess = _mk_session(g, k=4)
+    eps = sess.cfg.eps
+    rng = np.random.default_rng(7)
+    src = g.arc_sources()
+    for step in range(4):
+        nb = 40
+        au = rng.integers(0, g.n, nb)
+        av = (au + 1 + rng.integers(0, g.n - 1, nb)) % g.n
+        pick = rng.integers(0, g.m, nb)          # existing arcs to remove
+        ru, rv = src[pick], g.indices[pick]
+        res = sess.update(
+            GraphUpdate.add_edges(au, av).merged(
+                GraphUpdate.remove_edges(ru, rv)
+            )
+        )
+        assert res.feasible and res.imbalance <= eps + 1e-6
+        assert res.region_size > 0
+    st = sess.stats()
+    assert st["repair_calls"] == 4
+    assert st["repair_compiles"] == st["repair_bucket_count"]
+    # each repair dispatches 5 kernel families (frontier, gather, sweep,
+    # gain, balance); a compile-per-call regression would hit ~20
+    assert st["repair_compiles"] <= 12
+    assert st["compact_compiles"] == st["compact_bucket_count"]
+    # quality: within a loose factor of a fresh full V-cycle on the final
+    # graph (the benchmark pins the tight 5% acceptance number)
+    gh = sess.store.csr_host()
+    full = partition(gh, PartitionerConfig(k=4, preset="fast", seed=1))
+    assert sess.cut <= max(1.35 * full.cut, full.cut + 50)
+
+
+def test_session_repair_is_deterministic():
+    """Same initial graph + config + stream => bit-identical labels."""
+    g = planted_partition(1200, 6, p_in=0.04, p_out=0.003, seed=4)
+
+    def run():
+        sess = _mk_session(g, k=2)
+        rng = np.random.default_rng(3)
+        for _ in range(2):
+            u = rng.integers(0, g.n, 25)
+            v = (u + 1 + rng.integers(0, g.n - 1, 25)) % g.n
+            sess.update(GraphUpdate.add_edges(u, v))
+        return sess.labels_np()
+
+    np.testing.assert_array_equal(run(), run())
+
+
+def test_session_add_nodes_keeps_balance():
+    g = planted_partition(1024, 8, p_in=0.04, p_out=0.002, seed=2)
+    sess = _mk_session(g, k=2)
+    res = sess.update(GraphUpdate.add_nodes(np.ones(24, np.int64)))
+    assert res.feasible
+    lab = sess.labels_np()
+    assert lab.shape[0] == g.n + 24
+    assert np.all(lab[g.n:] < 2)        # new nodes really assigned
+    # wire the new nodes up and keep serving
+    u = np.arange(g.n, g.n + 24, dtype=np.int64)
+    v = np.arange(0, 24, dtype=np.int64)
+    res = sess.update(GraphUpdate.add_edges(u, v))
+    assert res.feasible and sess.n == g.n + 24
+
+
+def test_session_node_growth_past_arena_rebuilds_engine():
+    """n crossing the pow2 label arena forces a fresh engine; labels carry
+    over and serving continues."""
+    g = planted_partition(1000, 8, p_in=0.04, p_out=0.002, seed=3)
+    sess = _mk_session(g, k=2)
+    assert sess.engine.A == 1024
+    lab_before = sess.labels_np().copy()
+    res = sess.update(GraphUpdate.add_nodes(np.ones(40, np.int64)))
+    assert sess.engine_rebuilds == 1 and sess.engine.A >= 2048
+    assert res.feasible and sess.n == 1040
+    np.testing.assert_array_equal(sess.labels_np()[:1000], lab_before)
+    # and the new engine keeps repairing
+    u = np.arange(1000, 1040, dtype=np.int64)
+    v = np.arange(0, 40, dtype=np.int64)
+    res = sess.update(GraphUpdate.add_edges(u, v))
+    assert res.feasible and res.region_size > 0
+
+
+def test_session_quality_guard_escalates_on_cut_collapse():
+    """A huge random batch destroys locality; the guard must fire a full
+    V-cycle and land back on a feasible partition."""
+    g = planted_partition(1024, 8, p_in=0.05, p_out=0.001, seed=6)
+    sess = _mk_session(g, k=2, escalate_cut_ratio=1.05, hops=1)
+    rng = np.random.default_rng(5)
+    u = rng.integers(0, g.n, 600)
+    v = (u + 1 + rng.integers(0, g.n - 1, 600)) % g.n
+    res = sess.update(GraphUpdate.add_edges(u, v))
+    assert res.escalated and sess.escalations == 1
+    assert res.feasible

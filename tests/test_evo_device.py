@@ -172,6 +172,34 @@ def test_greedy_growing_k_ge_n_guard():
         np.testing.assert_array_equal(lab, np.arange(g.n) % k)
 
 
+def test_grow_rounds_scale_with_diameter_on_deep_path_like_graph():
+    """ISSUE 4 satellite: the fixed GROW_ROUNDS=16 frontier truncated deep
+    coarsest graphs — on a ring, all but ~2*(16+1) nodes used to land in the
+    round-robin leftover fallback, whose alternating labels cut almost every
+    edge.  The degree/diameter-proportional budget
+    (evolutionary.grow_rounds_bound) lets both seeds grow to contiguous
+    arcs: tiny cut, and the device path stays bit-identical to the oracle on
+    the deep graph (the traced bound + stall exit change neither side's
+    hash streams)."""
+    from repro.core.evolutionary import GROW_ROUNDS, grow_rounds_bound
+    from repro.graph import ring
+
+    g = ring(300)
+    assert grow_rounds_bound(g.n, 2, g.m) >= g.n // 2   # deep graph: ~n
+    assert grow_rounds_bound(1600, 2, 1600 * 11) == max(
+        GROW_ROUNDS, int(np.ceil(4 * 1600 / 2 / 11))
+    )                                                   # shallow: ~n/(k*deg)
+    L = lmax(g.n, 2, 0.03)
+    eng = LPEngine(g, seed=0)
+    cfg = _cfg(2, L, 1, 1, 0, seed=5)
+    lab_dev = np.asarray(eng.evolve_device(g, cfg))
+    lab_ora = eng.evolve_oracle(g, cfg)
+    np.testing.assert_array_equal(lab_dev, lab_ora)
+    # two contiguous blocks cut O(1) edges; 16-round truncation left the
+    # leftover tail alternating (cut ~ hundreds)
+    assert cut_np(g, lab_dev) <= 20
+
+
 def test_device_ell_gather_matches_host_pack():
     """Satellite: dense refinement's ELL pack for a GraphDev level is now
     gathered on device — bit-identical to ell_pack on the materialized

@@ -631,6 +631,7 @@ class LPEngine:
         gain_rounds: int = 2,
         balance_rounds: int = 3,
         seed: int = 0,
+        hop_degree_cap: Optional[int] = None,
     ) -> Tuple[jax.Array, int, float, np.ndarray]:
         """Incremental size-constrained repair after a graph mutation.
 
@@ -647,6 +648,13 @@ class LPEngine:
         cut/feasibility guard — the uncoarsening monotonicity guard's twin
         — keeps the repaired labels only if the cut did not worsen or
         feasibility was restored.
+
+        ``hop_degree_cap`` bounds the region on power-law graphs: hops past
+        the first only expand *through* nodes of degree <= cap, so a hub
+        adjacent to the touched set joins the region but no longer drags
+        its entire neighbourhood in (the ROADMAP repair-locality item).
+        ``None`` or a non-positive value disables the cap (bit-identical
+        to the uncapped expansion).
 
         Every kernel is shape-bucketed with traced live counts, so a steady
         update stream compiles once per bucket (``repair_compiles ==
@@ -678,10 +686,18 @@ class LPEngine:
         tpad = np.full(Tb, n, np.int32)
         tpad[: t_ids.size] = t_ids
         self.stats.h2d_bytes += tpad.nbytes
-        self._note_repair_key(("frontier", Tb, ar.src.shape[0], self.A))
+        ip = self._indptr_dev(g)
+        # None and <= 0 both disable the cap (the session's "0 = off"
+        # convention holds at the engine too — a literal cap of 0 would
+        # silently freeze expansion at hop 1)
+        cap = (0x7FFFFFFF if hop_degree_cap is None or hop_degree_cap <= 0
+               else int(hop_degree_cap))
+        self._note_repair_key(
+            ("frontier", Tb, ar.src.shape[0], ip.shape[0], self.A)
+        )
         mask = expand_region_device(
-            jnp.asarray(tpad), ar.src, ar.dst, jnp.int32(n), jnp.int32(hops),
-            A=self.A,
+            jnp.asarray(tpad), ar.src, ar.dst, ip, jnp.int32(n),
+            jnp.int32(hops), jnp.int32(cap), A=self.A,
         )
         mask_np = np.asarray(mask[:n])
         self.stats.d2h_bytes += mask_np.nbytes
@@ -690,7 +706,6 @@ class LPEngine:
             return lab, 0, self.cut(g, lab), self.block_weights(g, lab, k)
         # ---- region pack: host O(region) plan, device O(region m) gather
         order = np.random.default_rng(seed).permutation(region).astype(np.int64)
-        ip = self._indptr_dev(g)
         if isinstance(g, GraphDev):
             # region degrees gathered ON device: every compaction hands
             # repair a fresh handle whose O(n) host degree cache is cold,

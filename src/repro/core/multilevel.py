@@ -94,6 +94,13 @@ class PartitionerConfig:
     islands: int = 2
     pop_per_island: int = 2
     generations: int = 0
+    # seed the FIRST V-cycle with an existing k-way partition via the
+    # restrict machinery (cycle 0 then behaves exactly like cycle >= 2 of
+    # an iterated run: clustering never merges across the seed's cut edges
+    # and the coarsest GA is seeded with the projected labels).  Used by
+    # the dynamic session's escalation path so a full re-partition starts
+    # from the served solution instead of from scratch.
+    initial_labels: Optional[np.ndarray] = None
 
     def __post_init__(self):
         if self.preset == "eco":
@@ -289,6 +296,13 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
     )
 
     cur_labels: Optional[np.ndarray] = None
+    if cfg.initial_labels is not None:
+        il = np.asarray(cfg.initial_labels, dtype=np.int64).reshape(-1)
+        if il.shape[0] != g.n:
+            raise ValueError("initial_labels length must equal g.n")
+        if il.size and (il.min() < 0 or il.max() >= k):
+            raise ValueError("initial_labels must lie in [0, k)")
+        cur_labels = il
     for cycle in range(cfg.vcycles):
         # ---------------- coarsening ----------------
         f = _f_value(cfg, gtype, cycle, rng)

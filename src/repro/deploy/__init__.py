@@ -1,0 +1,47 @@
+"""Partition deployment subsystem: turn labels into servable per-block
+artifacts and keep them consistent under the dynamic session's updates.
+
+Three layers (ISSUE 5):
+
+* :mod:`repro.deploy.extract` — device-resident block shard extraction:
+  one :class:`BlockShard` per block (block-local CSR, h-ring ghost halo,
+  global<->local id maps, all_gather-ready interface-exchange schedule),
+  materialized from a resident CSR by bucketed executables, with a
+  bit-identical numpy oracle (:func:`extract_blocks_numpy`) and an exact
+  reassembly inverse (:func:`reassemble`).
+* :mod:`repro.deploy.metrics` — the objectives deployed partitions pay
+  for: per-block communication volume and boundary-node counts, measured
+  from labels and from shard artifacts (they agree at halo 1).
+* :mod:`repro.deploy.migrate` — :class:`ShardDeployment`, the incremental
+  bridge from :class:`~repro.dynamic.session.PartitionSession`: after each
+  repair, a :class:`MigrationDelta` patches only the affected shards,
+  escalating to full re-extraction when patching degenerates.
+"""
+
+from .extract import (
+    BlockExtractor,
+    BlockShard,
+    BlockShardNP,
+    DeployStats,
+    assemble_schedule,
+    extract_blocks_numpy,
+    ghost_exchange_numpy,
+    reassemble,
+)
+from .metrics import block_comm_metrics_np, shard_comm_metrics
+from .migrate import MigrationDelta, ShardDeployment
+
+__all__ = [
+    "BlockExtractor",
+    "BlockShard",
+    "BlockShardNP",
+    "DeployStats",
+    "MigrationDelta",
+    "ShardDeployment",
+    "assemble_schedule",
+    "block_comm_metrics_np",
+    "extract_blocks_numpy",
+    "ghost_exchange_numpy",
+    "reassemble",
+    "shard_comm_metrics",
+]

@@ -7,7 +7,10 @@ kernel — after a batch of edge/node updates, only the h-hop neighbourhood
 of the touched endpoints can profit from moving, so the repairer
 
 1. expands the **affected region** on device (:func:`expand_region_device`:
-   a frontier scatter per hop over the resident arc arrays),
+   a frontier scatter per hop over the resident arc arrays; hops past the
+   first are *hub-bounded* — they only expand through nodes of degree
+   <= ``deg_cap``, so power-law hubs stop dragging the whole graph into a
+   2-hop region while remaining movable themselves),
 2. runs the engine's cached ``_lp_sweep`` over a *region pack* — chunks
    containing only region nodes, dispatched by
    :meth:`repro.core.engine.LPEngine.repair` — against **exact global block
@@ -65,7 +68,8 @@ def _hash_unit(base, a, b):
 
 
 @functools.partial(jax.jit, static_argnames=("A",))
-def expand_region_device(touched, src, dst, n, hops, *, A: int):
+def expand_region_device(touched, src, dst, indptr, n, hops, deg_cap, *,
+                         A: int):
     """h-hop frontier expansion over the resident arc arrays.
 
     Args:
@@ -73,17 +77,31 @@ def expand_region_device(touched, src, dst, n, hops, *, A: int):
         sentinel slot is outside the live region slice).
       src, dst: (>= m,) int32 arc endpoints; trailing padding arcs are
         (0, 0) and only ever re-mark node 0 from itself — inert.
+      indptr: (>= n + 1,) int32 CSR row pointers (for per-arc source
+        degrees; only read when the cap can bind).
       n: traced live node count.
       hops: traced hop count.
+      deg_cap: traced degree threshold for hops past the first: hop 1 is
+        always the touched nodes' full neighbourhood, but hops 2..h only
+        expand *through* nodes of degree <= deg_cap.  On power-law graphs a
+        2-hop region through a hub is ~the whole graph — repair quality
+        doesn't need it (the hub itself is in the region and movable), so
+        the cap restores the O(local) region size hubs destroy.  Pass
+        ``0x7FFFFFFF`` to disable (bit-identical to the uncapped PR-4
+        expansion).
       A: static mask length (the engine arena size).
 
     Returns an (A,) bool mask: True for every node within ``hops`` hops of a
-    touched node.  One executable per (Tb, m-bucket, A) shape.
+    touched node (hub-gated past hop 1).  One executable per
+    (Tb, m-bucket, indptr-bucket, A) shape.
     """
     mask = jnp.zeros((A,), jnp.bool_).at[touched].max(touched < n)
+    last = indptr.shape[0] - 1
+    deg_src = indptr[jnp.minimum(src + 1, last)] - indptr[src]
 
-    def hop(_, mk):
-        reach = jnp.zeros((A,), jnp.bool_).at[dst].max(mk[src])
+    def hop(i, mk):
+        allow = mk[src] & ((i == 0) | (deg_src <= deg_cap))
+        reach = jnp.zeros((A,), jnp.bool_).at[dst].max(allow)
         return mk | reach
 
     return lax.fori_loop(0, hops, hop, mask)

@@ -55,6 +55,12 @@ class SessionConfig:
     repair_iters: int = 6
     gain_rounds: int = 2
     balance_rounds: int = 3
+    # hub-bounded frontier expansion (repair locality on power-law graphs):
+    # hops past the first only expand through nodes of degree <= cap, so a
+    # 2-hop region no longer engulfs the graph at hubs.  None = auto
+    # (8x the current average degree, floored at 64 — meshes and other
+    # bounded-degree graphs are never capped), 0 = disabled, > 0 explicit.
+    hop_degree_cap: Optional[int] = None
     # escalate to a full V-cycle when the running cut exceeds this ratio of
     # the (edge-weight-scaled) cut of the last full partition
     escalate_cut_ratio: float = 1.6
@@ -135,6 +141,14 @@ class PartitionSession:
     def _lmax(self) -> float:
         return lmax(self.store.total_node_weight, self.k, self.cfg.eps)
 
+    def _hop_cap(self) -> Optional[int]:
+        """Effective frontier degree cap: auto scales with the current
+        average degree so bounded-degree (mesh) graphs never bind."""
+        c = self.cfg.hop_degree_cap
+        if c is None:
+            return max(64, int(8 * self.store.m / max(self.store.n, 1)))
+        return None if c == 0 else int(c)
+
     def _score(self, g) -> tuple:
         """(cut, imbalance, feasible) of the resident labels on device."""
         cut = self.engine.cut(g, self.labels)
@@ -189,9 +203,19 @@ class PartitionSession:
 
     def _escalate(self, seed: int) -> None:
         """Full multilevel re-partition of the compacted graph (the quality
-        guard's fallback); resets the cut reference."""
+        guard's fallback); resets the cut reference.  The fresh V-cycle is
+        seeded with the CURRENT labels through the restrict machinery
+        (``PartitionerConfig.initial_labels``): cycle 0 behaves like cycle
+        >= 2 of an iterated run, so the escalation refines the served
+        solution instead of re-partitioning from scratch."""
         gh = self.store.csr_host()
-        rep = partition(gh, self.cfg.make_partition_cfg(seed))
+        cfg = self.cfg.make_partition_cfg(seed)
+        lab = self.labels_np()
+        cfg.initial_labels = lab if np.all(lab < self.k) else None
+        try:
+            rep = partition(gh, cfg)
+        finally:
+            cfg.initial_labels = None   # never pin O(n) labels on the cfg
         self.labels = self.engine.to_arena(rep.labels, gh.n, fill=self.k)
         self._cut_ref = float(rep.cut)
         self._ew_ref = max(float(gh.ew.sum()) / 2.0, 1e-9)
@@ -254,6 +278,7 @@ class PartitionSession:
             hops=self.cfg.hops, iters=self.cfg.repair_iters,
             gain_rounds=self.cfg.gain_rounds,
             balance_rounds=self.cfg.balance_rounds, seed=seed,
+            hop_degree_cap=self._hop_cap(),
         )
         # the repair guard already evaluated the returned labels — score
         # the step from its cut/block-weight results, no re-reduction

@@ -1,0 +1,339 @@
+"""Partition deployment subsystem (ISSUE 5): device block shard extraction,
+ghost-exchange schedules, and incremental migration from the dynamic session.
+
+The contract under test: device extraction is bit-identical to the numpy
+oracle (every array, every dtype) across seeds / k / halo depths; the
+exchange schedule round-trips (packing each owner's interface buffer in
+slot order and scattering through (owner, slot) reproduces every ghost
+table); reassembling the owned rows of all shards reproduces the global CSR
+bit-for-bit (hence the global cut exactly); extraction and migration
+compile once per shape bucket (deploy_compiles == deploy_bucket_count);
+and a ShardDeployment tracking a PartitionSession stays consistent with a
+fresh oracle extraction after every update batch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import comm_volume_np, cut_np
+from repro.deploy import (
+    BlockExtractor,
+    ShardDeployment,
+    block_comm_metrics_np,
+    extract_blocks_numpy,
+    ghost_exchange_numpy,
+    reassemble,
+    shard_comm_metrics,
+)
+from repro.dynamic import GraphUpdate, PartitionSession, SessionConfig
+from repro.graph import (
+    barabasi_albert,
+    mesh2d,
+    planted_partition,
+    rmat,
+    to_device_csr,
+    validate,
+)
+
+pytestmark = pytest.mark.deploy
+
+_FIELDS = (
+    "own_global", "ghost_global", "ghost_hop", "ghost_block", "nw",
+    "ghost_nw", "indptr", "indices", "ew", "ghost_slot", "iface_global",
+    "iface_local", "send_blocks", "send_ptr", "send_local",
+)
+
+
+def _assert_shards_equal(dev_shards, oracle):
+    for s, o in zip(dev_shards, oracle):
+        h = s.host()
+        assert (h.block, h.n_own, h.n_ghost, h.n_rows, h.m_local) == (
+            o.block, o.n_own, o.n_ghost, o.n_rows, o.m_local
+        )
+        for f in _FIELDS:
+            a, b = getattr(h, f), getattr(o, f)
+            assert a.dtype == b.dtype, (f, a.dtype, b.dtype)
+            np.testing.assert_array_equal(a, b, err_msg=f"block {s.block}: {f}")
+
+
+# ----------------------------------------------------------------- extraction
+
+
+@pytest.mark.parametrize("k,halo,seed", [(2, 1, 0), (4, 1, 1), (4, 2, 2),
+                                         (3, 3, 3), (8, 2, 4)])
+def test_device_extraction_bit_parity_vs_numpy_oracle(k, halo, seed):
+    """Every array of every shard — CSR, halo, id maps, schedule — matches
+    the numpy oracle bit for bit, from both GraphNP and GraphDev inputs."""
+    g = barabasi_albert(700, 4, seed=seed)
+    rng = np.random.default_rng(seed)
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    oracle = extract_blocks_numpy(g, lab, k, halo=halo)
+    ex = BlockExtractor()
+    _assert_shards_equal(ex.extract(g, lab, k, halo=halo), oracle)
+    # the device-resident path: same graph uploaded as a GraphDev handle
+    ex2 = BlockExtractor()
+    _assert_shards_equal(
+        ex2.extract(to_device_csr(g), lab, k, halo=halo), oracle
+    )
+
+
+def test_extraction_on_mesh_partition_labels():
+    """Structured (low-boundary) labels from a real partition, not random —
+    halos are thin rings here, the opposite regime of the random-label case."""
+    g = mesh2d(24)
+    k = 4
+    lab = ((np.arange(g.n) // 24 // 12) * 2 + (np.arange(g.n) % 24) // 12)
+    lab = lab.astype(np.int32)
+    for halo in (1, 2):
+        ex = BlockExtractor()
+        _assert_shards_equal(
+            ex.extract(g, lab, k, halo=halo),
+            extract_blocks_numpy(g, lab, k, halo=halo),
+        )
+
+
+def test_shard_structure_invariants():
+    """Local id space and h-ring layout: owned ids ascending, ghosts ordered
+    by (ring, id), rows = owned + interior ghosts, every row's adjacency
+    fully inside the shard, ghost blocks correct."""
+    g = planted_partition(900, 6, p_in=0.04, p_out=0.004, seed=5)
+    k, halo = 3, 2
+    rng = np.random.default_rng(1)
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    for h in extract_blocks_numpy(g, lab, k, halo=halo):
+        assert np.all(np.diff(h.own_global) > 0)
+        np.testing.assert_array_equal(lab[h.own_global], h.block)
+        key = h.ghost_hop.astype(np.int64) * g.n + h.ghost_global
+        assert np.all(np.diff(key) > 0)          # (ring, id) strictly sorted
+        assert np.all((h.ghost_hop >= 1) & (h.ghost_hop <= halo))
+        np.testing.assert_array_equal(lab[h.ghost_global], h.ghost_block)
+        assert np.all(h.ghost_block != h.block)
+        n_interior = int((h.ghost_hop < halo).sum())
+        assert h.n_rows == h.n_own + n_interior
+        assert h.indices.min(initial=0) >= 0
+        assert h.indices.max(initial=-1) < h.n_own + h.n_ghost
+        # row adjacency is complete: degree in-shard == global degree
+        rows_g = h.local_global[: h.n_rows]
+        np.testing.assert_array_equal(
+            np.diff(h.indptr), g.degrees()[rows_g]
+        )
+
+
+# ---------------------------------------------------------------- reassembly
+
+
+@pytest.mark.parametrize("halo", [1, 2])
+def test_reassembly_reproduces_global_graph_and_cut(halo):
+    g = rmat(10, 8, seed=3)
+    k = 4
+    sess_lab = np.random.default_rng(2).integers(0, k, g.n).astype(np.int32)
+    ex = BlockExtractor()
+    shards = ex.extract(g, sess_lab, k, halo=halo)
+    g2 = reassemble(shards, g.n)
+    np.testing.assert_array_equal(g2.indptr, g.indptr)
+    np.testing.assert_array_equal(g2.indices, g.indices)
+    np.testing.assert_array_equal(g2.ew, g.ew)      # same float bits
+    np.testing.assert_array_equal(g2.nw, g.nw)
+    validate(g2)
+    assert cut_np(g2, sess_lab) == cut_np(g, sess_lab)
+    # the shards' ghost arcs ARE the cut: heads >= n_own from owned rows
+    tot = 0.0
+    for s in shards:
+        h = s.host()
+        m_own = int(h.indptr[h.n_own])
+        tot += float(h.ew[:m_own][h.indices[:m_own] >= h.n_own].sum())
+    assert tot / 2.0 == pytest.approx(cut_np(g, sess_lab))
+
+
+# ------------------------------------------------------------ ghost exchange
+
+
+def test_ghost_exchange_round_trip():
+    """Pack every owner's interface buffer in slot order, scatter through
+    (owner, slot): every ghost table must equal the owners' values — for
+    labels and for an arbitrary per-node payload, at halo 1 and 2."""
+    g = barabasi_albert(800, 5, seed=7)
+    k = 5
+    rng = np.random.default_rng(7)
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    for halo in (1, 2):
+        ex = BlockExtractor()
+        shards = ex.extract(g, lab, k, halo=halo)
+        for vals in (lab, rng.integers(0, 10**6, g.n)):
+            recvs = ghost_exchange_numpy(shards, vals)
+            for s, r in zip(shards, recvs):
+                np.testing.assert_array_equal(r, vals[s.ghost_global_np()])
+        # labels through the schedule reproduce ghost_block exactly
+        recvs = ghost_exchange_numpy(shards, lab)
+        for s, r in zip(shards, recvs):
+            np.testing.assert_array_equal(r, s.ghost_block_np())
+
+
+# -------------------------------------------------------------------- metrics
+
+
+def test_comm_metrics_label_and_shard_views_agree():
+    g = planted_partition(1200, 8, p_in=0.03, p_out=0.003, seed=9)
+    k = 4
+    lab = np.random.default_rng(4).integers(0, k, g.n).astype(np.int32)
+    m_lab = block_comm_metrics_np(g, lab, k)
+    ex = BlockExtractor()
+    m_sh = shard_comm_metrics(ex.extract(g, lab, k, halo=1))
+    for f in ("boundary", "send", "recv"):
+        np.testing.assert_array_equal(m_lab[f], m_sh[f])
+    assert m_lab["total_volume"] == int(comm_volume_np(g, lab, k))
+    assert int(m_lab["send"].sum()) == int(m_lab["recv"].sum())
+
+
+# ------------------------------------------------------------ compile bounds
+
+
+def test_deploy_compiles_bounded_by_buckets():
+    """Balanced blocks share one (mask, extract) bucket pair; repeated
+    extraction over a churn stream must not add compiles."""
+    g = barabasi_albert(2048, 4, seed=11)
+    k = 4
+    rng = np.random.default_rng(11)
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    ex = BlockExtractor()
+    ex.extract(g, lab, k, halo=1)
+    st = ex.stats
+    assert st.deploy_compiles == st.deploy_bucket_count
+    first = st.deploy_compiles
+    assert first <= 4  # one mask bucket + a handful of sticky extract buckets
+    for _ in range(3):
+        lab2 = lab.copy()
+        flip = rng.integers(0, g.n, 30)
+        lab2[flip] = (lab2[flip] + 1) % k
+        ex.extract(g, lab2, k, halo=1)
+        lab = lab2
+    assert st.deploy_compiles == st.deploy_bucket_count
+    assert st.extract_calls == 16
+    assert st.deploy_compiles <= first + 2  # sticky buckets absorb the churn
+
+
+def test_extractor_reuse_across_graph_scales_and_partial_extraction():
+    """One extractor serving graphs of different scales must clamp its
+    sticky buckets (a small graph cannot inherit a big graph's node
+    bucket), and a partial extraction must refuse schedule assembly (the
+    schedule needs every ghost's owner present)."""
+    ex = BlockExtractor()
+    big = barabasi_albert(2048, 4, seed=1)
+    small = barabasi_albert(200, 3, seed=2)
+    k = 2
+    lab_big = (np.arange(big.n) % k).astype(np.int32)
+    lab_small = (np.arange(small.n) % k).astype(np.int32)
+    ex.extract(big, lab_big, k, halo=1)
+    shards = ex.extract(small, lab_small, k, halo=1)   # must not crash
+    _assert_shards_equal(shards, extract_blocks_numpy(small, lab_small, k))
+    with pytest.raises(ValueError, match="assemble"):
+        ex.extract(small, lab_small, k, halo=1, blocks=[0])
+    sub = ex.extract(small, lab_small, k, halo=1, blocks=[0], assemble=False)
+    assert len(sub) == 1 and sub[0].ghost_slot is None
+
+
+# ------------------------------------------------------------------ migration
+
+
+def test_shard_deployment_tracks_session_and_patches_incrementally():
+    """After every update batch the deployed shard set must equal a fresh
+    oracle extraction of the session's current graph + labels; localized
+    churn must patch a strict subset of blocks; compiles stay bounded."""
+    g = planted_partition(1600, 8, p_in=0.05, p_out=0.0003, seed=13)
+    k = 8
+    sess = PartitionSession(g, SessionConfig(k=k, seed=0))
+    dep = ShardDeployment(sess, halo=1)
+    rng = np.random.default_rng(13)
+    partial_steps = 0
+    for step in range(4):
+        # localized churn: wire random pairs among one block's INTERIOR
+        # nodes (no foreign neighbour — the only nodes that are a member of
+        # exactly one shard; boundary churn legitimately fans out to every
+        # subscribing block)
+        lab = sess.labels_np()
+        gh = sess.store.csr_host()
+        src = gh.arc_sources()
+        bnd = np.zeros(gh.n, bool)
+        np.logical_or.at(bnd, src[lab[src] != lab[gh.indices]], True)
+        interior = np.bincount(lab[~bnd], minlength=k)
+        b = int(np.argmax(interior))     # block with the most interior nodes
+        ids = np.flatnonzero((lab == b) & ~bnd)
+        assert ids.size >= 12
+        u = rng.choice(ids, 12)
+        v = rng.choice(ids, 12)
+        keep = u != v
+        res, delta = dep.update(GraphUpdate.add_edges(u[keep], v[keep]))
+        assert not res.noop
+        assert delta.blocks_patched.size >= 1
+        if not delta.full_rebuild:
+            partial_steps += 1
+            assert delta.blocks_patched.size < k
+        # consistency vs a fresh oracle on the current state
+        gh = sess.store.csr_host()
+        _assert_shards_equal(
+            dep.shards, extract_blocks_numpy(gh, sess.labels_np(), k, halo=1)
+        )
+    assert partial_steps >= 1   # localized churn really took the cheap path
+    st = dep.stats()
+    assert st["deploy_compiles"] == st["deploy_bucket_count"]
+    assert st["blocks_patched_total"] < st["migrate_calls"] * k + 1
+
+
+def test_migration_delta_reports_moves_and_halo_churn():
+    g = planted_partition(1000, 6, p_in=0.05, p_out=0.003, seed=17)
+    k = 2
+    sess = PartitionSession(g, SessionConfig(k=k, seed=0))
+    dep = ShardDeployment(sess, halo=1)
+    lab0 = sess.labels_np().copy()
+    rng = np.random.default_rng(17)
+    u = rng.integers(0, g.n, 30)
+    v = (u + 1 + rng.integers(0, g.n - 1, 30)) % g.n
+    res, delta = dep.update(GraphUpdate.add_edges(u, v))
+    lab1 = sess.labels_np()
+    np.testing.assert_array_equal(
+        delta.moved, np.flatnonzero(lab1 != lab0)
+    )
+    np.testing.assert_array_equal(delta.moved_from, lab0[delta.moved])
+    np.testing.assert_array_equal(delta.moved_to, lab1[delta.moved])
+    # churned endpoints are dirty even when no node moved
+    assert np.isin(u, delta.dirty).all() and np.isin(v, delta.dirty).all()
+    for b in delta.blocks_patched:
+        assert b in delta.halo_added and b in delta.halo_removed
+
+
+def test_migration_noop_batch_patches_nothing():
+    g = planted_partition(800, 6, p_in=0.05, p_out=0.003, seed=19)
+    sess = PartitionSession(g, SessionConfig(k=2, seed=0))
+    dep = ShardDeployment(sess, halo=1)
+    shards_before = list(dep.shards)
+    res, delta = dep.update(GraphUpdate())
+    assert res.noop and delta.noop and delta.blocks_patched.size == 0
+    assert all(a is b for a, b in zip(dep.shards, shards_before))
+
+
+def test_migration_survives_node_growth_and_escalation():
+    """add_nodes (arena growth) and a forced quality-guard escalation both
+    end in a consistent (fully rebuilt) shard set."""
+    g = planted_partition(1000, 8, p_in=0.05, p_out=0.001, seed=23)
+    k = 2
+    sess = PartitionSession(
+        g, SessionConfig(k=k, seed=0, escalate_cut_ratio=1.05, hops=1)
+    )
+    dep = ShardDeployment(sess, halo=1)
+    res, delta = dep.update(GraphUpdate.add_nodes(np.ones(50, np.int64)))
+    assert sess.n == 1050
+    gh = sess.store.csr_host()
+    _assert_shards_equal(
+        dep.shards, extract_blocks_numpy(gh, sess.labels_np(), k, halo=1)
+    )
+    rng = np.random.default_rng(5)
+    u = rng.integers(0, sess.n, 600)
+    v = (u + 1 + rng.integers(0, sess.n - 1, 600)) % sess.n
+    res, delta = dep.update(GraphUpdate.add_edges(u, v))
+    assert res.escalated and delta.full_rebuild
+    gh = sess.store.csr_host()
+    _assert_shards_equal(
+        dep.shards, extract_blocks_numpy(gh, sess.labels_np(), k, halo=1)
+    )
+    st = dep.stats()
+    assert st["deploy_compiles"] == st["deploy_bucket_count"]

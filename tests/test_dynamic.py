@@ -200,6 +200,117 @@ def test_repair_moves_only_region_nodes():
     )
 
 
+def test_hub_bounded_frontier_keeps_region_local_on_powerlaw():
+    """ROADMAP repair-locality item: on an R-MAT graph a 2-hop region
+    through the hubs is ~the whole graph; the degree-capped expansion must
+    bound it while the uncapped expansion reproduces the old behaviour, and
+    the repair guard (cut never worsens unless feasibility is restored)
+    holds either way."""
+    from repro.graph import rmat
+
+    g = rmat(12, 8, seed=5)
+    k = 4
+    L = lmax(g.n, k, 0.03)
+    rng = np.random.default_rng(0)
+    lab = rng.integers(0, k, g.n).astype(np.int32)
+    deg = g.degrees()
+    cap = max(64, int(8 * g.m / g.n))
+    # the serving case the ROADMAP item describes: an ORDINARY node whose
+    # neighbourhood contains a hub — at hop 2 the uncapped frontier fans
+    # out through the hub and engulfs the (reachable) graph
+    hub = int(np.argmax(deg))
+    nb_hub = g.indices[g.indptr[hub]:g.indptr[hub + 1]]
+    spoke = int(nb_hub[np.argmin(deg[nb_hub])])
+    assert deg[hub] > cap and deg[spoke] <= cap
+    touched = np.array([spoke], dtype=np.int64)
+    eng = LPEngine(g, seed=0)
+    lab_dev = eng.to_arena(lab, g.n, fill=k)
+    before_cut = cut_np(g, lab)
+    hops = 3
+    out_u, rsize_u, cut_u, bw_u = eng.repair(
+        g, lab_dev, touched, k, L, hops=hops, iters=2, seed=1
+    )
+    out_c, rsize_c, cut_c, bw_c = eng.repair(
+        g, lab_dev, touched, k, L, hops=hops, iters=2, seed=1,
+        hop_degree_cap=cap,
+    )
+    assert rsize_u > 0.5 * g.n          # the hub really engulfs the graph
+    assert rsize_c < 0.1 * rsize_u      # the cap restores locality
+    # cut guard unchanged: neither path may worsen the cut
+    assert cut_u <= before_cut + 1e-6 and cut_c <= before_cut + 1e-6
+    # capped region oracle: hop 1 full, later hops only through deg <= cap
+    src = g.arc_sources()
+    mask_np = np.zeros(g.n, bool)
+    mask_np[spoke] = True
+    for i in range(hops):
+        allow = mask_np[src] & ((i == 0) | (deg[src] <= cap))
+        reach = np.zeros(g.n, bool)
+        np.logical_or.at(reach, g.indices, allow)
+        mask_np |= reach
+    assert mask_np[hub]                 # the hub is IN the region, gated
+    assert rsize_c == int(mask_np.sum())
+    np.testing.assert_array_equal(
+        np.asarray(out_c[: g.n])[~mask_np], lab[~mask_np]
+    )
+
+
+def test_session_auto_hop_cap_binds_only_on_powerlaw():
+    """SessionConfig.hop_degree_cap=None (auto) must cap hub expansion on
+    social graphs but stay inert on bounded-degree meshes."""
+    from repro.graph import rmat
+
+    g = rmat(12, 8, seed=7)
+    deg = g.degrees()
+    hub = int(np.argmax(deg))
+    nb_hub = g.indices[g.indptr[hub]:g.indptr[hub + 1]]
+    # churn between two ordinary hub neighbours: the touched set is
+    # low-degree, but the uncapped 2-hop region fans out through the hub
+    spokes = nb_hub[np.argsort(deg[nb_hub])[:2]].astype(np.int64)
+    sess_auto = PartitionSession(g, SessionConfig(k=4, seed=0))
+    sess_off = PartitionSession(
+        g, SessionConfig(k=4, seed=0, hop_degree_cap=0)
+    )
+    for sess in (sess_auto, sess_off):
+        res = sess.update(GraphUpdate.add_edges([spokes[0]], [spokes[1]]))
+        assert res.feasible
+    r_auto = sess_auto.trajectory[-1].region_size
+    r_off = sess_off.trajectory[-1].region_size
+    # uncapped: the 2-hop region swallows the hub's whole fan-out; capped:
+    # the hub joins the region but its fan-out stays outside
+    assert r_off > int(deg[hub]) and r_auto < 0.2 * r_off
+    # meshes: auto cap (floor 64 >= max degree 8) is inert — identical labels
+    gm = mesh2d(24)
+    s1 = PartitionSession(gm, SessionConfig(k=2, seed=0))
+    s2 = PartitionSession(gm, SessionConfig(k=2, seed=0, hop_degree_cap=0))
+    for s in (s1, s2):
+        s.update(GraphUpdate.add_edges([0, 30], [5, 80]))
+    np.testing.assert_array_equal(s1.labels_np(), s2.labels_np())
+    assert (s1.trajectory[-1].region_size == s2.trajectory[-1].region_size)
+
+
+def test_escalation_seeds_vcycle_with_current_labels():
+    """ROADMAP item: PartitionerConfig.initial_labels routes an existing
+    partition through the restrict machinery, and the session's escalation
+    uses it — a seeded re-partition of a community graph must not lose to
+    the seed it was given."""
+    g = planted_partition(2048, 16, p_in=0.04, p_out=0.001, seed=8)
+    k = 4
+    rep0 = partition(g, PartitionerConfig(k=k, preset="fast", seed=0))
+    cfg = PartitionerConfig(k=k, preset="minimal", seed=1)
+    cfg.initial_labels = rep0.labels
+    rep1 = partition(g, cfg)
+    assert rep1.feasible
+    assert rep1.cut <= 1.05 * rep0.cut + 1e-6
+    # invalid seeds are rejected, not silently mangled
+    bad = PartitionerConfig(k=k, preset="minimal", seed=1)
+    bad.initial_labels = np.full(g.n, k, np.int64)
+    with pytest.raises(ValueError):
+        partition(g, bad)
+    bad.initial_labels = rep0.labels[:-1]
+    with pytest.raises(ValueError):
+        partition(g, bad)
+
+
 def test_repair_gain_round_device_matches_fm_spec():
     """gain_round_device == fm.gain_round_np(region=..., influx_gate=True),
     op for op."""

@@ -41,6 +41,13 @@ at laptop scale, preserving the paper's *relative* claims:
                          migration vs full re-extraction under ~1%
                          localized churn, deploy compile/bucket counts,
                          per-block communication-volume objectives
+  resilience_hot      -> PR 6: fault-tolerant serving (transactional
+                         updates: snapshot -> apply -> audit -> commit) —
+                         snapshot overhead per update, invariant-audit
+                         cost per cadence tick, steady-state transactional
+                         overhead vs the bare session, and fault-recovery
+                         latency (rollback-based heal) vs a full
+                         re-partition
 
 Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
 With ``--json PATH``, tables additionally emit machine-readable rows
@@ -1001,6 +1008,162 @@ def deploy_hot():
     return rows
 
 
+def resilience_hot():
+    """PR 6: what fault tolerance costs, and what it buys.
+
+    Two identical PartitionSessions absorb the same ~0.5% edge-churn batch
+    stream on the ba-16384 graph (k=4): one bare (the PR 4 serving loop),
+    one wrapped in a ResilientSession (validate -> snapshot -> apply ->
+    audit@cadence -> commit).  Steady state (warm jit caches, min-of-3
+    cadence-length groups so each timed group amortizes exactly one audit):
+
+      * overhead row — transactional us/update vs bare us/update; the
+        acceptance gate is < 10% at audit cadence 8.
+      * snapshot row — SnapshotManager.take() alone: jax arrays are
+        immutable, so a version is O(delta) reference capture, not a copy.
+      * audit row — one full invariant pass (CSR well-formedness checksums,
+        stored-vs-recomputed cut, feasibility) on the resident state.
+      * recovery row — inject label corruption, heal() (audit -> rollback
+        -> re-audit) vs recomputing the partition from scratch with a full
+        multilevel run on the same graph (min-of-3).
+
+    Timings are XLA-CPU; on TPU the audit kernels (segment reductions +
+    wrap-sum hashes) vectorize while the host baselines do not, so the
+    relative overhead here is an upper bound.
+    """
+    from repro.core import PartitionerConfig, partition
+    from repro.dynamic import GraphUpdate, PartitionSession, SessionConfig
+    from repro.graph import barabasi_albert
+    from repro.resilience import (
+        FaultInjector, ResilientConfig, ResilientSession, SnapshotManager,
+    )
+
+    rows = []
+    g = barabasi_albert(16384, 6, seed=3)
+    k = 4
+    cadence = 8
+    groups_warm, groups_timed = 1, 3
+    sess_plain = PartitionSession(g, SessionConfig(k=k, seed=0))
+    sess_res = PartitionSession(g, SessionConfig(k=k, seed=0))
+    rs = ResilientSession(
+        sess_res, cfg=ResilientConfig(audit_cadence=cadence)
+    )
+    nb = max(g.m // 2 // 200, 64)
+    rng = np.random.default_rng(11)
+    batches = []
+    for _ in range((groups_warm + groups_timed) * cadence):
+        au = rng.integers(0, g.n, nb)
+        av = (au + 1 + rng.integers(0, g.n - 1, nb)) % g.n
+        batches.append(GraphUpdate.add_edges(au, av))
+
+    def run_group(i, apply_fn):
+        t0 = time.time()
+        for b in batches[i * cadence:(i + 1) * cadence]:
+            apply_fn(b)
+        return (time.time() - t0) / cadence
+
+    for i in range(groups_warm):                  # warm compiles both paths
+        run_group(i, sess_plain.update)
+        run_group(i, rs.submit)
+    t_plain, t_res = [], []
+    for i in range(groups_warm, groups_warm + groups_timed):
+        t_plain.append(run_group(i, sess_plain.update))
+        t_res.append(run_group(i, rs.submit))
+    us_plain = min(t_plain) * 1e6
+    us_res = min(t_res) * 1e6
+    overhead = 100.0 * (us_res - us_plain) / max(us_plain, 1)
+
+    # ---- snapshot cost alone (reference capture, no device work) ----
+    mgr = SnapshotManager(sess_plain, keep=8)
+    mgr.take()
+    reps = 50
+    t0 = time.time()
+    for _ in range(reps):
+        mgr.take()
+    us_snap = (time.time() - t0) / reps * 1e6
+
+    # ---- one full audit pass (warm) ----
+    t_aud = []
+    for _ in range(3):
+        t0 = time.time()
+        rep = rs.auditor.audit()
+        t_aud.append(time.time() - t0)
+    assert rep.ok, rep.failures
+    us_audit = min(t_aud) * 1e6
+
+    # ---- recovery: heal a corrupted serving state vs full re-partition ----
+    FaultInjector(seed=1).corrupt_labels(sess_res, count=8)
+    t0 = time.time()
+    rep = rs.heal()
+    t_heal = time.time() - t0
+    assert rep.ok, rep.failures
+    gh = sess_res.store.csr_host()
+    t_full = []
+    for r in range(3):
+        t0 = time.time()
+        partition(gh, PartitionerConfig(k=k, preset="fast", seed=r))
+        t_full.append(time.time() - t0)
+    us_heal = t_heal * 1e6
+    us_full = min(t_full) * 1e6
+    st = rs.stats()
+    print("metric,value")
+    print(f"graph,ba-16384 k={k} audit_cadence={cadence}")
+    print(f"batch_edges_added,{nb}")
+    print(f"steady_state_us_per_update_bare,{us_plain:.0f}")
+    print(f"steady_state_us_per_update_transactional,{us_res:.0f}")
+    print(f"transactional_overhead_pct,{overhead:.1f}  # acceptance: < 10")
+    print(f"snapshot_take_us,{us_snap:.1f}")
+    print(f"audit_full_pass_us,{us_audit:.0f}")
+    print(f"audit_amortized_us_per_update,{us_audit / cadence:.0f}")
+    print(f"heal_after_label_corruption_us,{us_heal:.0f}")
+    print(f"full_repartition_us,{us_full:.0f}")
+    print(f"recovery_vs_full_speedup,x{us_full / max(us_heal, 1):.1f}  "
+          f"# acceptance: > 1")
+    print(f"audits,{st['audits']}")
+    print(f"failed_audits,{st['failed_audits']}")
+    print(f"audit_compiles,{st['audit_compiles']}")
+    print(f"audit_buckets,{st['audit_bucket_count']}")
+    print(f"snapshots_taken,{st['snapshots_taken']}")
+    print(f"tx_rollbacks,{st['tx_rollbacks']}")
+    print(f"# timings are XLA-CPU (see docstring): the audit kernels "
+          f"vectorize on TPU, so the overhead is an upper bound")
+    rows.append(dict(
+        name="resilience_hot_steady",
+        us_per_call=us_res,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, k=k, audit_cadence=cadence,
+            batch_edges_added=int(nb),
+            groups_timed=groups_timed, updates_per_group=cadence,
+            us_per_update_bare=us_plain,
+            us_per_update_transactional=us_res,
+            overhead_pct=float(overhead),
+            snapshot_take_us=us_snap,
+            audit_full_pass_us=us_audit,
+            audit_amortized_us_per_update=us_audit / cadence,
+            audits=st["audits"], failed_audits=st["failed_audits"],
+            audit_compiles=st["audit_compiles"],
+            audit_buckets=st["audit_bucket_count"],
+            compiles_bounded=bool(
+                st["audit_compiles"] == st["audit_bucket_count"]
+            ),
+            snapshots_taken=st["snapshots_taken"],
+        ),
+    ))
+    rows.append(dict(
+        name="resilience_hot_recovery",
+        us_per_call=us_heal,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, k=k,
+            corrupt_label_count=8,
+            heal_us=us_heal, full_repartition_us=us_full,
+            speedup_vs_full=us_full / max(us_heal, 1),
+            healed_ok=True,
+            tx_rollbacks=st["tx_rollbacks"],
+        ),
+    ))
+    return rows
+
+
 TABLES = {
     "table2_quality": table2_quality,
     "table3_k32": table3_k32,
@@ -1017,6 +1180,7 @@ TABLES = {
     "evo_hot": evo_hot,
     "dynamic_hot": dynamic_hot,
     "deploy_hot": deploy_hot,
+    "resilience_hot": resilience_hot,
 }
 
 

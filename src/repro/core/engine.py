@@ -134,6 +134,8 @@ class EngineStats:
     gather_compiles: int = 0        # distinct gather shape combinations
     repair_calls: int = 0           # incremental-repair dispatches (dynamic)
     repair_compiles: int = 0        # distinct repair-kernel shape buckets
+    audit_calls: int = 0            # invariant-audit dispatches (resilience)
+    audit_compiles: int = 0         # distinct audit-kernel shape buckets
     h2d_bytes: int = 0              # host->device uploads the engine issued
     d2h_bytes: int = 0              # device->host downloads (scalars + lazy
                                     # materializations of GraphDev/CoarseMap)
@@ -141,6 +143,7 @@ class EngineStats:
     contract_buckets: set = field(default_factory=set)  # distinct (Nb, Mb)
     evo_buckets: set = field(default_factory=set)  # distinct evo shape keys
     repair_buckets: set = field(default_factory=set)  # distinct repair shapes
+    audit_buckets: set = field(default_factory=set)  # distinct audit shapes
 
     @property
     def bucket_count(self) -> int:
@@ -158,13 +161,25 @@ class EngineStats:
     def repair_bucket_count(self) -> int:
         return len(self.repair_buckets)
 
+    @property
+    def audit_bucket_count(self) -> int:
+        return len(self.audit_buckets)
+
+    def note_audit_key(self, key) -> None:
+        """Record one audit-kernel dispatch shape (the resilience auditor's
+        compile-accounting hook — same discipline as every other kernel
+        family: ``audit_compiles == audit_bucket_count``)."""
+        if key not in self.audit_buckets:
+            self.audit_buckets.add(key)
+            self.audit_compiles += 1
+
 
 class LPEngine:
     """Owns packing, caching, and sweep dispatch for one multilevel run."""
 
     def __init__(
         self,
-        g0: GraphNP,
+        g0: AnyGraph,
         *,
         target_chunks: int = 64,
         seed: int = 0,
@@ -814,12 +829,23 @@ class LPEngine:
         fitness keys and order-independent f32 scatter sums."""
         if self._exact_weights is None:
             g = self._g0
-            self._exact_weights = bool(
-                (g.m == 0 or np.all(g.ew == np.round(g.ew)))
-                and np.all(g.nw == np.round(g.nw))
-                and float(g.ew.sum()) < 2**24
-                and float(g.nw.sum()) < 2**24
-            )
+            if isinstance(g, GraphDev):
+                # device-resident finest graph (the dynamic session's
+                # escalation path): integrality of ew is tracked metadata,
+                # nw is scanned on device — padding is 0, hence inert
+                self._exact_weights = bool(
+                    (g.m == 0 or g.ew_integral)
+                    and bool(jnp.all(g.nw == jnp.round(g.nw)))
+                    and float(jnp.sum(g.ew)) < 2**24
+                    and float(jnp.sum(g.nw)) < 2**24
+                )
+            else:
+                self._exact_weights = bool(
+                    (g.m == 0 or np.all(g.ew == np.round(g.ew)))
+                    and np.all(g.nw == np.round(g.nw))
+                    and float(g.ew.sum()) < 2**24
+                    and float(g.nw.sum()) < 2**24
+                )
         return self._exact_weights
 
     def can_evolve_device(self, g: AnyGraph, k: int, islands: int,
@@ -1220,6 +1246,9 @@ class LPEngine:
             repair_calls=self.stats.repair_calls,
             repair_compiles=self.stats.repair_compiles,
             repair_bucket_count=self.stats.repair_bucket_count,
+            audit_calls=self.stats.audit_calls,
+            audit_compiles=self.stats.audit_compiles,
+            audit_bucket_count=self.stats.audit_bucket_count,
             h2d_bytes=self.stats.h2d_bytes,
             d2h_bytes=self.stats.d2h_bytes,
             arena=self.A,

@@ -265,12 +265,23 @@ def _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng):
     return np.asarray(lab)  # device-evo labels may reach here untouched
 
 
-def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
+def partition(g, cfg: PartitionerConfig) -> PartitionReport:
+    """Iterated multilevel V-cycles on ``g`` (GraphNP or GraphDev).
+
+    A :class:`GraphDev` finest graph keeps the whole run device-first: the
+    engine and the coarsening chain consume the resident handle directly
+    (no arena re-upload), and only the host-side finalization steps
+    (type detection, balance repair, final metrics) touch the cached
+    ``to_host()`` view.  This is the dynamic session's escalation path.
+    """
     t0 = time.time()
     rng = np.random.default_rng(cfg.seed)
     k = cfg.k
-    L = lmax(g.total_node_weight, k, cfg.eps)
-    gtype = cfg.graph_type if cfg.graph_type != "auto" else _detect_type(g)
+    # host view for host-only ops (cached on GraphDev: one O(n+m) download,
+    # which the caller typically already paid for serving)
+    gh = g.to_host() if isinstance(g, GraphDev) else g
+    L = lmax(gh.total_node_weight, k, cfg.eps)
+    gtype = cfg.graph_type if cfg.graph_type != "auto" else _detect_type(gh)
     coarsest_target = cfg.coarsest_factor * k
     # One LP engine per run: owns pack/jit caches and device-resident state
     # for every level of every V-cycle (numpy engine needs none).
@@ -315,9 +326,10 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
             if gg.n <= coarsest_target:
                 break
             seed = int(rng.integers(1 << 30))
-            if isinstance(gg, GraphDev) and _use_numpy(gg, cfg):
-                # below the engine threshold: hand the level chain back to
-                # the host engines (lazy materialization, one download)
+            if isinstance(gg, GraphDev) and (_use_numpy(gg, cfg) or not dev_coarsen):
+                # below the engine threshold (or host coarsening requested):
+                # hand the level chain back to the host engines (lazy
+                # materialization, one download — cached on the finest level)
                 gg = gg.to_host()
                 if restrict is not None and not isinstance(restrict, np.ndarray):
                     restrict = np.asarray(restrict[: gg.n]).astype(np.int64)
@@ -392,9 +404,9 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
         if cfg.fm_finest and g.n <= cfg.fm_finest_max_n:
             from .fm import fm_refine
 
-            lab = fm_refine(g, lab, k, L, seed=int(rng.integers(1 << 30)))
-        lab = repair_balance(g, lab, k, L, seed=cfg.seed)
-        c = cut_np(g, lab)
+            lab = fm_refine(gh, lab, k, L, seed=int(rng.integers(1 << 30)))
+        lab = repair_balance(gh, lab, k, L, seed=cfg.seed)
+        c = cut_np(gh, lab)
         cycle_cuts.append(c)
         cur_labels = lab.astype(np.int64)
         if c < best_cut:
@@ -405,9 +417,9 @@ def partition(g: GraphNP, cfg: PartitionerConfig) -> PartitionReport:
     return PartitionReport(
         labels=best_labels,
         cut=float(best_cut),
-        imbalance=imbalance_np(g, best_labels, k),
+        imbalance=imbalance_np(gh, best_labels, k),
         feasible=bool(
-            np.bincount(best_labels, weights=g.nw, minlength=k).max() <= L + 1e-6
+            np.bincount(best_labels, weights=gh.nw, minlength=k).max() <= L + 1e-6
         ),
         level_sizes=level_sizes,
         shrink_first=shrink_first,

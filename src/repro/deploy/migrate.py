@@ -60,6 +60,8 @@ class MigrationDelta:
     full_rebuild: bool               # escalated to re-extracting all blocks
     halo_added: Dict[int, np.ndarray] = field(default_factory=dict)
     halo_removed: Dict[int, np.ndarray] = field(default_factory=dict)
+    failed: bool = False             # extraction failed: shard set left on
+                                     # the last consistent (stale) state
     seconds: float = 0.0
 
     @property
@@ -88,6 +90,15 @@ class ShardDeployment:
         self.full_rebuilds = 0
         self.migrate_calls = 0
         self.blocks_patched_total = 0
+        self.failed_migrations = 0
+        self.shard_recoveries = 0
+        # a failed migration leaves the shard set on its last consistent
+        # state: ``stale`` flags that it lags the session until the next
+        # successful migrate catches up (``_labels`` is only advanced on
+        # success, so moved nodes are never lost; churned endpoints of the
+        # failed step are carried in ``_pending_dirty``)
+        self.stale = False
+        self._pending_dirty: List[np.ndarray] = []
         self._labels = session.labels_np().copy()
         self.shards: List[BlockShard] = self.extractor.extract(
             session.store.graph(), session.labels, self.k, halo=self.halo
@@ -148,7 +159,9 @@ class ShardDeployment:
             u, v, _ = upd.net_arcs(max(n_new, 1))
         else:
             u = v = np.zeros(0, np.int64)
-        dirty = np.unique(np.concatenate([moved_all, u, v]))
+        dirty = np.unique(np.concatenate(
+            [moved_all, u, v] + self._pending_dirty
+        ).astype(np.int64))
         step = res.step if res is not None else sess.trajectory[-1].step
         if dirty.size == 0:
             delta = MigrationDelta(
@@ -171,10 +184,30 @@ class ShardDeployment:
             b: self.shards[b].ghost_global_np() for b in blocks
         }
         g = sess.store.graph()
-        fresh = self.extractor.extract(
-            g, sess.labels, self.k, halo=self.halo, blocks=blocks,
-            assemble=False,
-        )
+        try:
+            fresh = self.extractor.extract(
+                g, sess.labels, self.k, halo=self.halo, blocks=blocks,
+                assemble=False,
+            )
+        except Exception:
+            # failed migration: serve the last consistent shard set (stale).
+            # ``_labels`` is NOT advanced, so the next successful migrate
+            # re-discovers every moved node; the failed step's churned
+            # endpoints are queued so halo effects are not lost either.
+            self.failed_migrations += 1
+            self.stale = True
+            if u.size or v.size:
+                self._pending_dirty.append(
+                    np.concatenate([u, v]).astype(np.int64)
+                )
+            delta = MigrationDelta(
+                step=step, moved=moved_all, moved_from=moved_from,
+                moved_to=moved_to, dirty=dirty,
+                blocks_patched=np.zeros(0, np.int64), full_rebuild=full,
+                failed=True, seconds=time.time() - t0,
+            )
+            self.deltas.append(delta)
+            return delta
         for b, s in zip(blocks, fresh):
             self.shards[b] = s
         # schedule is globally coupled through the owners' buffer orderings:
@@ -187,6 +220,8 @@ class ShardDeployment:
             halo_added[b] = np.setdiff1d(new_g, old_ghosts[b])
             halo_removed[b] = np.setdiff1d(old_ghosts[b], new_g)
         self._labels = lab_new.copy()
+        self.stale = False
+        self._pending_dirty = []
         if full:
             self.full_rebuilds += 1
         self.blocks_patched_total += len(blocks)
@@ -200,6 +235,56 @@ class ShardDeployment:
         self.deltas.append(delta)
         return delta
 
+    def resync(self, upd: Optional[GraphUpdate] = None,
+               full: bool = False) -> MigrationDelta:
+        """Catch the shard set up with the session OUTSIDE the normal
+        update flow — the rollback path's shard repair.
+
+        A plain ``migrate(None)`` only re-extracts blocks with *moved*
+        nodes, which is not enough after a rollback: the undone batch's
+        graph churn left halo content in shards that the restored base no
+        longer has.  Passing the undone ``upd`` queues its endpoints as
+        dirty so those blocks are re-extracted too; ``full=True`` marks
+        every node dirty (a full re-extraction through the same migrate
+        machinery) for when the set of undone batches is unknown."""
+        if full:
+            self._pending_dirty.append(
+                np.arange(self.session.n, dtype=np.int64)
+            )
+        elif upd is not None:
+            eps = np.concatenate([
+                upd.add_u, upd.add_v, upd.rem_u, upd.rem_v,
+            ]).astype(np.int64)
+            eps = eps[(eps >= 0) & (eps < self.session.n)]
+            if eps.size:
+                self._pending_dirty.append(eps)
+        return self.migrate(None)
+
+    def recover_block(self, b: int) -> BlockShard:
+        """Re-extract block ``b`` from the resident global state — the
+        recovery path for a lost or corrupted :class:`BlockShard`.
+
+        If the deployment is stale (a prior migration failed), a catch-up
+        ``migrate(None)`` runs first so the recovered shard is not newer
+        than its peers — the schedule re-assembly couples every shard's
+        buffer orderings, so consistency must be restored set-wide.  Always
+        re-assembles the exchange schedule."""
+        if not 0 <= b < self.k:
+            raise ValueError(f"block id {b} outside [0, {self.k})")
+        if self.stale:
+            self.migrate(None)
+        sess = self.session
+        g = sess.store.graph()
+        fresh = self.extractor.extract(
+            g, sess.labels, self.k, halo=self.halo, blocks=[b],
+            assemble=False,
+        )
+        self.shards[b] = fresh[0]
+        assemble_schedule(self.shards)
+        self._refresh_member_rows([b], sess.n)
+        self.shard_recoveries += 1
+        return self.shards[b]
+
     def stats(self) -> dict:
         """Session + extractor counters (the deployment dashboard row)."""
         d = self.session.stats()
@@ -208,6 +293,9 @@ class ShardDeployment:
             migrate_calls=self.migrate_calls,
             full_rebuilds=self.full_rebuilds,
             blocks_patched_total=self.blocks_patched_total,
+            failed_migrations=self.failed_migrations,
+            shard_recoveries=self.shard_recoveries,
+            shards_stale=self.stale,
             extract_calls=st.extract_calls,
             deploy_compiles=st.deploy_compiles,
             deploy_bucket_count=st.deploy_bucket_count,

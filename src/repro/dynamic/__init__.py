@@ -17,7 +17,7 @@ Three layers (ISSUE 4):
 """
 
 from .session import PartitionSession, SessionConfig, UpdateResult
-from .store import DynamicGraphStore, GraphUpdate
+from .store import DynamicGraphStore, GraphUpdate, UpdateValidationError
 
 __all__ = [
     "DynamicGraphStore",
@@ -25,4 +25,5 @@ __all__ = [
     "PartitionSession",
     "SessionConfig",
     "UpdateResult",
+    "UpdateValidationError",
 ]

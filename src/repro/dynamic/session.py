@@ -97,6 +97,8 @@ class UpdateResult:
     region_size: int = 0
     escalated: bool = False
     noop: bool = False
+    stale: bool = False         # degraded mode: escalation wanted but
+                                # suppressed — serving last repaired labels
     seconds: float = 0.0
     h2d_bytes: int = 0          # engine-accounted transfer deltas of the step
     d2h_bytes: int = 0
@@ -121,6 +123,11 @@ class PartitionSession:
         self.labels = self.engine.to_arena(rep.labels, g.n, fill=self.k)
         self.escalations = 0
         self.engine_rebuilds = 0
+        self.escalate_h2d_saved = 0
+        self.suppressed_escalations = 0
+        # degraded mode (set by the resilience watchdog): quality-guard
+        # escalations are skipped and the step is flagged ``stale`` instead
+        self.suppress_escalation = False
         self._step = 0
         self._cut_ref = float(rep.cut)
         self._ew_ref = max(float(g.ew.sum()) / 2.0, 1e-9)
@@ -202,23 +209,33 @@ class PartitionSession:
         self.engine_rebuilds += 1
 
     def _escalate(self, seed: int) -> None:
-        """Full multilevel re-partition of the compacted graph (the quality
-        guard's fallback); resets the cut reference.  The fresh V-cycle is
-        seeded with the CURRENT labels through the restrict machinery
-        (``PartitionerConfig.initial_labels``): cycle 0 behaves like cycle
-        >= 2 of an iterated run, so the escalation refines the served
-        solution instead of re-partitioning from scratch."""
-        gh = self.store.csr_host()
+        """Full multilevel re-partition of the RESIDENT device graph (the
+        quality guard's fallback); resets the cut reference.  The fresh
+        V-cycle is seeded with the CURRENT labels through the restrict
+        machinery (``PartitionerConfig.initial_labels``): cycle 0 behaves
+        like cycle >= 2 of an iterated run, so the escalation refines the
+        served solution instead of re-partitioning from scratch.
+
+        ``partition()`` consumes the :class:`GraphDev` handle directly —
+        the coarsening chain starts from the already-resident CSR instead
+        of re-uploading a host copy, and ``escalate_h2d_saved`` accounts
+        the bytes that no longer cross (arc triplet + node weights)."""
+        gd = self.store.graph()
         cfg = self.cfg.make_partition_cfg(seed)
         lab = self.labels_np()
         cfg.initial_labels = lab if np.all(lab < self.k) else None
         try:
-            rep = partition(gh, cfg)
+            rep = partition(gd, cfg)
         finally:
             cfg.initial_labels = None   # never pin O(n) labels on the cfg
-        self.labels = self.engine.to_arena(rep.labels, gh.n, fill=self.k)
+        # the host path would have re-uploaded the bucketed CSR (src,
+        # indices, ew) plus node weights to build the V-cycle's engine
+        self.escalate_h2d_saved += (
+            gd.indices.shape[0] * 12 + gd.nw.shape[0] * 4
+        )
+        self.labels = self.engine.to_arena(rep.labels, gd.n, fill=self.k)
         self._cut_ref = float(rep.cut)
-        self._ew_ref = max(float(gh.ew.sum()) / 2.0, 1e-9)
+        self._ew_ref = max(float(jnp.sum(gd.ew)) / 2.0, 1e-9)
         self.escalations += 1
 
     # ----------------------------------------------------------------- public
@@ -239,9 +256,15 @@ class PartitionSession:
         return self.engine.to_host(self.labels, self.store.n)
 
     def update(self, upd: GraphUpdate) -> UpdateResult:
-        """Absorb one batched update: store -> compact -> region repair ->
-        quality guard.  Returns (and appends) the new trajectory point."""
+        """Absorb one batched update: validate -> store -> compact -> region
+        repair -> quality guard.  Returns (and appends) the new trajectory
+        point.  Validation runs before ANY session state moves (including
+        the step counter that seeds repair), so a rejected batch leaves the
+        session and store bit-identical — replaying the stream after a
+        rejection produces the same labels as if the bad batch never
+        arrived."""
         t0 = time.time()
+        upd.validate(self.store.n)
         self._step += 1
         step = self._step
         st = self.engine.stats
@@ -288,16 +311,20 @@ class PartitionSession:
         ew_now = max(float(jnp.sum(g.ew)) / 2.0, 1e-9)
         st.d2h_bytes += 4
         scaled_ref = self._cut_ref * (ew_now / self._ew_ref)
-        escalated = (not feas) or (
+        wanted = (not feas) or (
             cut > self.cfg.escalate_cut_ratio * max(scaled_ref, 1.0)
         )
+        escalated = wanted and not self.suppress_escalation
+        stale = wanted and self.suppress_escalation
+        if stale:
+            self.suppressed_escalations += 1
         if escalated:
             self._escalate(seed)
             cut, imb, feas = self._score(g)
         res = UpdateResult(
             step=step, n=self.store.n, m=self.store.m, cut=cut,
             imbalance=imb, feasible=feas, region_size=int(rsize),
-            escalated=escalated, seconds=time.time() - t0,
+            escalated=escalated, stale=stale, seconds=time.time() - t0,
             h2d_bytes=st.h2d_bytes - h2d0, d2h_bytes=st.d2h_bytes - d2h0,
         )
         self.trajectory.append(res)
@@ -318,6 +345,9 @@ class PartitionSession:
         d.update(
             updates=self._step,
             escalations=self.escalations,
+            escalate_h2d_saved=self.escalate_h2d_saved,
+            suppressed_escalations=self.suppressed_escalations,
+            degraded=self.suppress_escalation,
             engine_rebuilds=self.engine_rebuilds,
             compact_calls=self.store.stats.compact_calls,
             compact_compiles=self.store.stats.compact_compiles,
@@ -328,3 +358,42 @@ class PartitionSession:
             nodes_added=self.store.stats.nodes_added,
         )
         return d
+
+    # ------------------------------------------------------- snapshot support
+
+    def snapshot_state(self) -> dict:
+        """Capture the full serving state by reference (O(1) + overlay chunk
+        lists): labels (immutable jax array), quality-guard references, the
+        step counter that seeds repair, the engine handle (its jit caches
+        are process-global, its arena immutable), the trajectory prefix, and
+        the store's graph state.  Restoring a capture makes the session
+        bit-identical to the moment it was taken — replaying the same update
+        stream reproduces the same labels, because every seed derives from
+        the restored step counter."""
+        return dict(
+            labels=self.labels,
+            step=self._step,
+            cut_ref=self._cut_ref,
+            ew_ref=self._ew_ref,
+            base_id=self._base_id,
+            engine=self.engine,
+            escalations=self.escalations,
+            engine_rebuilds=self.engine_rebuilds,
+            escalate_h2d_saved=self.escalate_h2d_saved,
+            trajectory=list(self.trajectory),
+            store=self.store.snapshot_state(),
+        )
+
+    def restore_state(self, st: dict) -> None:
+        """Rebind session state to a :meth:`snapshot_state` capture."""
+        self.labels = st["labels"]
+        self._step = st["step"]
+        self._cut_ref = st["cut_ref"]
+        self._ew_ref = st["ew_ref"]
+        self._base_id = st["base_id"]
+        self.engine = st["engine"]
+        self.escalations = st["escalations"]
+        self.engine_rebuilds = st["engine_rebuilds"]
+        self.escalate_h2d_saved = st["escalate_h2d_saved"]
+        self.trajectory = list(st["trajectory"])
+        self.store.restore_state(st["store"])

@@ -43,7 +43,27 @@ import jax.numpy as jnp
 
 from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2, to_device_csr
 
-__all__ = ["DynamicGraphStore", "GraphUpdate", "StoreStats", "merge_overlay_device"]
+__all__ = [
+    "DynamicGraphStore",
+    "GraphUpdate",
+    "StoreStats",
+    "UpdateValidationError",
+    "merge_overlay_device",
+]
+
+
+class UpdateValidationError(ValueError):
+    """A :class:`GraphUpdate` failed pre-apply validation.
+
+    Subclasses ``ValueError`` (the historical raise type) and carries a
+    structured ``reason`` tag so the resilience layer can quarantine by
+    fault class instead of parsing messages.
+    """
+
+    def __init__(self, reason: str, detail: str):
+        super().__init__(f"{reason}: {detail}")
+        self.reason = reason
+        self.detail = detail
 
 
 def _as_ids(a) -> np.ndarray:
@@ -114,6 +134,44 @@ class GraphUpdate:
             rem_w=cat([self.rem_w, other.rem_w]),
             add_node_w=cat([self.add_node_w, other.add_node_w]),
         )
+
+    def validate(self, n_before: int) -> None:
+        """Raise :class:`UpdateValidationError` unless the batch is applicable
+        to a graph with ``n_before`` nodes.  Covers everything the factory
+        helpers enforce (integral weights below 2^24) plus the structural
+        checks (endpoint range against the post-batch node set, self loops) —
+        so a request built by direct field construction is held to the same
+        contract.  Pure read-only: validation never touches store state,
+        which is what makes rejection atomic by construction."""
+        n_after = int(n_before) + self.num_new_nodes
+        for tag, arr in (
+            ("add_w", self.add_w), ("rem_w", self.rem_w),
+            ("add_node_w", self.add_node_w),
+        ):
+            a = np.asarray(arr, dtype=np.float64).reshape(-1)
+            if a.size and not np.all(a == np.round(a)):
+                raise UpdateValidationError(
+                    "non_integral_weight", f"{tag} must be integral"
+                )
+            if a.size and np.abs(a).max() >= 2**24:
+                raise UpdateValidationError(
+                    "weight_overflow", f"{tag} must stay below 2^24"
+                )
+        if not (self.add_u.shape[0] == self.add_v.shape[0] == self.add_w.shape[0]):
+            raise UpdateValidationError("shape_mismatch", "add arrays disagree")
+        if not (self.rem_u.shape[0] == self.rem_v.shape[0] == self.rem_w.shape[0]):
+            raise UpdateValidationError("shape_mismatch", "rem arrays disagree")
+        u, v, _ = self.arcs()
+        if u.size:
+            if u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n_after:
+                raise UpdateValidationError(
+                    "endpoint_out_of_range",
+                    f"edge endpoint outside [0, {n_after})",
+                )
+            if np.any(u == v):
+                raise UpdateValidationError(
+                    "self_loop", "self loops are not representable"
+                )
 
     def arcs(self) -> tuple:
         """Symmetric signed arc deltas ``(u, v, w)`` of the batch: both arcs
@@ -324,15 +382,11 @@ class DynamicGraphStore:
     def apply(self, upd: GraphUpdate) -> None:
         """Append one batch: new nodes first (ids from the current n), then
         the batch's symmetric arc deltas into the overlay.  The whole batch
-        is validated up front, so a rejected request leaves the store
-        untouched (no half-applied node adds)."""
+        is validated up front (:meth:`GraphUpdate.validate`), so a rejected
+        request leaves the store untouched (no half-applied node adds)."""
+        upd.validate(self.n)
         u, v, w = upd.arcs()
         n_after = self.n + upd.num_new_nodes
-        if u.size:
-            if u.min() < 0 or v.min() < 0 or max(u.max(), v.max()) >= n_after:
-                raise ValueError("edge endpoint out of range")
-            if np.any(u == v):
-                raise ValueError("self loops are not representable")
         if upd.num_new_nodes:
             self._nw = np.concatenate(
                 [self._nw, upd.add_node_w.astype(np.float64)]
@@ -455,3 +509,39 @@ class DynamicGraphStore:
         if self._base_host is None:
             self._base_host = g.to_host()
         return self._base_host
+
+    # ------------------------------------------------------- snapshot support
+
+    def snapshot_state(self) -> dict:
+        """O(overlay-chunks) structural snapshot of the store's graph state.
+
+        Every payload array is captured *by reference*: the base
+        :class:`GraphDev` holds immutable jax arrays, ``_nw`` and
+        ``_nw_dev`` are rebind-only (``apply`` concatenates into a fresh
+        array), and overlay chunks are appended but never mutated in place —
+        so only the chunk *lists* need copying.  Counters (``stats``) are
+        monitoring state, not serving state, and are deliberately excluded."""
+        return dict(
+            n=self.n,
+            base=self.base,
+            nw=self._nw,
+            nw_dev=self._nw_dev,
+            base_host=self._base_host,
+            ou=list(self._ou),
+            ov=list(self._ov),
+            ow=list(self._ow),
+            olen=self._olen,
+        )
+
+    def restore_state(self, st: dict) -> None:
+        """Rebind graph state to a :meth:`snapshot_state` capture — restores
+        node set, base CSR handle, and the pending overlay bit-identically."""
+        self.n = st["n"]
+        self.base = st["base"]
+        self._nw = st["nw"]
+        self._nw_dev = st["nw_dev"]
+        self._base_host = st["base_host"]
+        self._ou = list(st["ou"])
+        self._ov = list(st["ov"])
+        self._ow = list(st["ow"])
+        self._olen = st["olen"]

@@ -188,6 +188,11 @@ class GraphDev:
     def m(self) -> int:
         return self._m
 
+    @property
+    def total_node_weight(self) -> float:
+        """Total node weight, reduced on device (padding is 0 — inert)."""
+        return float(jnp.sum(self.nw))
+
     def _indptr_np(self) -> np.ndarray:
         if self._indptr_host is None:
             self._indptr_host = np.asarray(self.indptr[: self._n + 1], dtype=np.int64)

@@ -1,0 +1,43 @@
+"""Fault-tolerance layer around the dynamic session and deploy subsystems.
+
+The serving stack (PR 4's :class:`~repro.dynamic.session.PartitionSession`,
+PR 5's :class:`~repro.deploy.migrate.ShardDeployment`) keeps partition
+state resident on device across an unbounded update stream — which means a
+single malformed batch, a repeatedly-failing repair, or a corrupted shard
+would poison that state forever.  This package makes the partition a
+transactional, auditable artifact:
+
+* :mod:`~repro.resilience.snapshot` — versioned O(delta) snapshots of the
+  full session state with bit-identical rollback;
+* :mod:`~repro.resilience.audit` — device-side invariant auditor (CSR
+  well-formedness, partition health, shard health) at configurable cadence;
+* :mod:`~repro.resilience.faults` — seeded deterministic fault injection,
+  so every recovery path is exercised in tests rather than claimed;
+* :mod:`~repro.resilience.transact` — the transactional serving loop:
+  validate -> apply -> audit -> commit-or-rollback, with quarantine,
+  bounded retry, an escalation watchdog, and explicit degraded mode.
+"""
+
+from .audit import AuditReport, InvariantAuditor
+from .faults import FaultInjector, InjectedFault
+from .snapshot import SessionSnapshot, SnapshotManager, host_digest
+from .transact import (
+    QuarantinedBatch,
+    ResilientConfig,
+    ResilientSession,
+    TxResult,
+)
+
+__all__ = [
+    "AuditReport",
+    "FaultInjector",
+    "InjectedFault",
+    "InvariantAuditor",
+    "QuarantinedBatch",
+    "ResilientConfig",
+    "ResilientSession",
+    "SessionSnapshot",
+    "SnapshotManager",
+    "TxResult",
+    "host_digest",
+]

@@ -1,0 +1,305 @@
+"""Device-side invariant auditor (resilience, layer 2).
+
+Three invariant families, each checked by cheap device reductions:
+
+* **CSR well-formedness** of the store's resident base — monotone
+  zero-based ``indptr`` closed at ``m``, inert padding (rows ``>= n`` hold
+  ``m``, arcs ``>= m`` hold 0/0), endpoints in range, no self loops,
+  ``src`` consistent with ``indptr`` (degree sums), and arc symmetry via a
+  uint32 wrap-sum checksum (``sum H(u, v, w) == sum H(v, u, w)`` over live
+  arcs — order-free, one pass, necessary-not-sufficient by design: a
+  counterexample needs two corruptions whose hashes cancel mod 2^32);
+* **partition health** — labels in ``[0, k)``, the stored (trajectory)
+  cut bitwise-equal to a recomputation through the *same* engine
+  reduction, block weights feasible against the current ``L_max``;
+* **shard health** — the wrap-sum of every shard's owned-row global arcs
+  equals the base CSR's arc checksum (blocks partition the node set, so
+  each arc is owned exactly once — reassembly equality without
+  materializing a reassembly), and every ghost's recorded owner block
+  matches the served labels.
+
+Every audit kernel is one ``jax.jit`` executable reused across the stream;
+dispatch shapes are recorded through ``EngineStats.note_audit_key`` so the
+``audit_compiles == audit_bucket_count`` discipline is regression-tested
+like every other kernel family.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.metrics import lmax
+
+__all__ = ["AuditReport", "InvariantAuditor"]
+
+
+# --------------------------------------------------------------- device side
+
+def _mix(u, v, wbits):
+    """Order-free arc hash: identical in every checksum kernel, so shard
+    sums are directly comparable with the base CSR's."""
+    uu = u.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    vv = v.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+    h = (uu ^ vv ^ wbits) + jnp.uint32(0x165667B1)
+    return h * jnp.uint32(0x27D4EB2F)
+
+
+@jax.jit
+def _csr_audit(indptr, src, dst, ew, nw, n, m):
+    """All base-CSR invariants in one executable.
+
+    Returns ``(flags, chk_fwd, chk_rev)``: 8 bools (see ``_CSR_FLAGS``)
+    plus the forward/transposed arc checksums — ``chk_fwd`` doubles as the
+    reference the shard reassembly audit compares against.
+    """
+    Nb = indptr.shape[0] - 1
+    Mb = src.shape[0]
+    iota_n = jnp.arange(Nb + 1, dtype=jnp.int32)
+    iota_m = jnp.arange(Mb, dtype=jnp.int32)
+    live = iota_m < m
+    mono = jnp.all(indptr[1:] >= indptr[:-1])
+    closed = (indptr[0] == 0) & jnp.all(
+        jnp.where(iota_n >= n, indptr == m, True)
+    )
+    in_range = jnp.all(
+        jnp.where(live, (src >= 0) & (src < n) & (dst >= 0) & (dst < n), True)
+    )
+    no_self = jnp.all(jnp.where(live, src != dst, True))
+    # src consistent with indptr: arc i lies inside its source's row
+    row_lo = jnp.take(indptr, jnp.clip(src, 0, Nb - 1))
+    row_hi = jnp.take(indptr, jnp.clip(src, 0, Nb - 1) + 1)
+    deg_ok = jnp.all(jnp.where(live, (row_lo <= iota_m) & (iota_m < row_hi), True))
+    w_pos = jnp.all(jnp.where(live, ew > 0.0, True))
+    pad_inert = jnp.all(
+        jnp.where(live, True, (src == 0) & (dst == 0) & (ew == 0.0))
+    )
+    nw_pad = jnp.all(
+        jnp.where(jnp.arange(nw.shape[0], dtype=jnp.int32) >= n, nw == 0.0, True)
+    )
+    wbits = jax.lax.bitcast_convert_type(ew, jnp.uint32)
+    h_fwd = jnp.where(live, _mix(src, dst, wbits), jnp.uint32(0))
+    h_rev = jnp.where(live, _mix(dst, src, wbits), jnp.uint32(0))
+    flags = jnp.stack([
+        mono, closed, in_range, no_self, deg_ok, w_pos, pad_inert, nw_pad
+    ])
+    return flags, jnp.sum(h_fwd), jnp.sum(h_rev)
+
+
+_CSR_FLAGS = [
+    "indptr_monotone", "indptr_closed", "endpoints_in_range",
+    "self_loop_free", "src_indptr_consistent", "weights_positive",
+    "arc_padding_inert", "nw_padding_zero",
+]
+
+
+@jax.jit
+def _labels_audit(labels, n, k):
+    iota = jnp.arange(labels.shape[0], dtype=jnp.int32)
+    live = iota < n
+    return jnp.all(jnp.where(live, (labels >= 0) & (labels < k), True))
+
+
+@jax.jit
+def _shard_owned_chk(own_g, ghost_g, indptr, indices, ew, n_own, m_local):
+    """uint32 wrap-sum of one shard's owned-row arcs in GLOBAL ids.
+
+    Local rank ``r`` maps to ``own_g[r]`` below ``n_own`` and
+    ``ghost_g[r - n_own]`` above (the extractor's layout-sort order);
+    heads are local ranks, rows recovered by ``searchsorted`` on the
+    local indptr.  Padding arcs and non-owned rows are masked out."""
+    Eb = indices.shape[0]
+    Ob = own_g.shape[0]
+    Gb = ghost_g.shape[0]
+    iota_e = jnp.arange(Eb, dtype=jnp.int32)
+    row_of = (jnp.searchsorted(indptr, iota_e, side="right") - 1).astype(
+        jnp.int32
+    )
+    live = (iota_e < m_local) & (row_of >= 0) & (row_of < n_own)
+    u_g = jnp.take(own_g, jnp.clip(row_of, 0, Ob - 1))
+    head_own = jnp.take(own_g, jnp.clip(indices, 0, Ob - 1))
+    head_gho = jnp.take(ghost_g, jnp.clip(indices - n_own, 0, Gb - 1))
+    v_g = jnp.where(indices < n_own, head_own, head_gho)
+    wbits = jax.lax.bitcast_convert_type(ew, jnp.uint32)
+    return jnp.sum(jnp.where(live, _mix(u_g, v_g, wbits), jnp.uint32(0)))
+
+
+@jax.jit
+def _ghost_owner_audit(ghost_g, ghost_block, labels, n_ghost):
+    iota = jnp.arange(ghost_g.shape[0], dtype=jnp.int32)
+    live = iota < n_ghost
+    A = labels.shape[0]
+    lab_of = jnp.take(labels, jnp.clip(ghost_g, 0, A - 1))
+    return jnp.all(jnp.where(live, lab_of == ghost_block, True))
+
+
+# ---------------------------------------------------------------- host side
+
+@dataclass
+class AuditReport:
+    """Outcome of one audit pass."""
+
+    step: int
+    ok: bool
+    failures: List[str] = field(default_factory=list)
+    checked: List[str] = field(default_factory=list)
+    stored_cut: float = 0.0
+    recomputed_cut: float = 0.0
+    seconds: float = 0.0
+
+    def fail(self, what: str) -> None:
+        self.failures.append(what)
+        self.ok = False
+
+
+class InvariantAuditor:
+    """Configurable-cadence auditor over a session (+ optional deployment).
+
+    ``maybe_audit(step)`` runs a full pass every ``cadence`` committed
+    steps (always at ``cadence=1``); ``audit()`` forces one.  Each pass is
+    a handful of device reductions over already-resident arrays — no data
+    movement beyond a few scalars — so steady-state overhead at cadence
+    ``>= 8`` stays in the noise (benchmarked in ``resilience_hot``).
+    """
+
+    def __init__(self, session, deployment=None, cadence: int = 8):
+        if cadence < 1:
+            raise ValueError("cadence must be >= 1")
+        self.session = session
+        self.deployment = deployment
+        self.cadence = int(cadence)
+        self.audits = 0
+        self.failed_audits = 0
+        self.reports: List[AuditReport] = []
+
+    # ------------------------------------------------------------- internals
+
+    def _note(self, key) -> None:
+        st = self.session.engine.stats
+        st.audit_calls += 1
+        st.note_audit_key(key)
+
+    def _audit_graph(self, rep: AuditReport) -> Optional[np.uint32]:
+        """CSR well-formedness of the resident base; returns the arc
+        checksum for the shard pass (None when structure is broken)."""
+        g = self.session.store.base
+        flags, chk_f, chk_r = _csr_audit(
+            g.indptr, g.src, g.indices, g.ew, g.nw,
+            jnp.int32(g.n), jnp.int32(g.m),
+        )
+        self._note(("csr", g.indptr.shape[0], g.src.shape[0]))
+        flags = np.asarray(flags)
+        self.session.engine.stats.d2h_bytes += flags.nbytes + 8
+        for name, okay in zip(_CSR_FLAGS, flags):
+            rep.checked.append(f"csr:{name}")
+            if not bool(okay):
+                rep.fail(f"csr:{name}")
+        chk_f, chk_r = np.uint32(chk_f), np.uint32(chk_r)
+        rep.checked.append("csr:arc_symmetry")
+        if chk_f != chk_r:
+            rep.fail("csr:arc_symmetry")
+        return chk_f if rep.ok else None
+
+    def _audit_partition(self, rep: AuditReport) -> None:
+        sess = self.session
+        g = sess.store.base
+        in_range = _labels_audit(
+            sess.labels, jnp.int32(sess.store.n), jnp.int32(sess.k)
+        )
+        self._note(("labels", sess.labels.shape[0]))
+        rep.checked.append("partition:labels_in_range")
+        if not bool(in_range):
+            rep.fail("partition:labels_in_range")
+            return  # cut/bw of out-of-range labels is meaningless
+        # recompute through the SAME engine reductions the serving loop
+        # scored with: identical arrays, identical reduction shapes ->
+        # bitwise-equal floats, so exact comparison is sound
+        rep.stored_cut = float(sess.trajectory[-1].cut)
+        rep.recomputed_cut = sess.engine.cut(g, sess.labels)
+        rep.checked.append("partition:cut_matches")
+        if rep.recomputed_cut != rep.stored_cut:
+            rep.fail("partition:cut_matches")
+        bw = sess.engine.block_weights(g, sess.labels, sess.k)
+        L = lmax(sess.store.total_node_weight, sess.k, sess.cfg.eps)
+        rep.checked.append("partition:feasible")
+        if float(bw.max()) > L + 1e-6:
+            rep.fail("partition:feasible")
+        rep.checked.append("partition:weights_conserved")
+        if not np.isclose(float(bw.sum()), sess.store.total_node_weight):
+            rep.fail("partition:weights_conserved")
+
+    def _audit_shards(self, rep: AuditReport, base_chk: Optional[np.uint32]) -> None:
+        dep = self.deployment
+        if dep is None:
+            return
+        if dep.stale:
+            # a failed migration left the set on its last consistent state:
+            # shards lag the session by design, so content checks against
+            # the current graph would false-positive — surfaced, not failed
+            rep.checked.append("shards:skipped_stale")
+            return
+        total = 0  # python int; reduced mod 2**32 at the end (wrap-sum)
+        for s in dep.shards:
+            if s is None:
+                rep.fail("shards:missing_shard")
+                return
+            chk = _shard_owned_chk(
+                s.own_g, s.ghost_g, s.indptr, s.indices, s.ew,
+                jnp.int32(s.n_own), jnp.int32(s.m_local),
+            )
+            self._note(
+                ("shard", s.own_g.shape[0], s.ghost_g.shape[0],
+                 s.indices.shape[0])
+            )
+            gok = _ghost_owner_audit(
+                s.ghost_g, s.ghost_block_dev, self.session.labels,
+                jnp.int32(s.n_ghost),
+            )
+            self._note(("ghost", s.ghost_g.shape[0], self.session.labels.shape[0]))
+            self.session.engine.stats.d2h_bytes += 5
+            if not bool(gok):
+                rep.fail(f"shards:ghost_owner_block_{s.block}")
+            total = (total + int(chk)) & 0xFFFFFFFF
+        rep.checked.append("shards:reassembly_checksum")
+        rep.checked.append("shards:ghost_owner_map")
+        if base_chk is not None and np.uint32(total) != base_chk:
+            rep.fail("shards:reassembly_checksum")
+
+    # ---------------------------------------------------------------- public
+
+    def audit(self) -> AuditReport:
+        """One full invariant pass; appends and returns the report."""
+        t0 = time.time()
+        sess = self.session
+        rep = AuditReport(step=sess._step, ok=True)
+        # audits run against the compacted base (the served graph); a dirty
+        # overlay is pending-but-valid state, not an invariant violation
+        sess.store.graph()
+        base_chk = self._audit_graph(rep)
+        self._audit_partition(rep)
+        self._audit_shards(rep, base_chk)
+        rep.seconds = time.time() - t0
+        self.audits += 1
+        if not rep.ok:
+            self.failed_audits += 1
+        self.reports.append(rep)
+        return rep
+
+    def maybe_audit(self, step: int) -> Optional[AuditReport]:
+        """Cadence gate: audit on every ``cadence``-th step."""
+        if step % self.cadence == 0:
+            return self.audit()
+        return None
+
+    def stats(self) -> dict:
+        return dict(
+            audits=self.audits,
+            failed_audits=self.failed_audits,
+            audit_cadence=self.cadence,
+        )

@@ -1,0 +1,210 @@
+"""Seeded deterministic fault injection (resilience, layer 3).
+
+Every recovery path in this package is exercised against *injected*
+faults, not hypothetical ones.  The injector draws from one
+``np.random.default_rng(seed)``, so a failing test replays exactly; every
+injection is logged as an :class:`InjectedFault` record.
+
+Injection discipline: device state is corrupted by **rebinding fresh
+objects**, never by mutating arrays in place.  Snapshots hold references
+to the pristine arrays (see :mod:`~repro.resilience.snapshot`), so an
+in-place mutation would silently corrupt the snapshot too and rollback
+could not heal it — replacing the session's label binding, swapping an
+overlay chunk for a flipped copy, or rebinding a new ``GraphDev`` over
+the store's base leaves every captured version intact by construction.
+
+Stream-level faults (drop / duplicate / reorder) are modelled on the
+batch sequence itself via :meth:`FaultInjector.mangle_stream`; the
+transactional layer detects them through sequence numbers.  Simulated
+infrastructure failures (extraction/compile blow-ups, escalation
+failures) install one-shot raising wrappers on the real entry points and
+restore them after firing.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..graph.csr import GraphDev
+
+__all__ = ["FaultInjector", "InjectedFault", "InjectedFailure"]
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by one-shot failure hooks (simulated compile/extract crash)."""
+
+
+@dataclass
+class InjectedFault:
+    """Log record of one injection."""
+
+    kind: str
+    detail: str
+    step: int = -1
+
+
+class FaultInjector:
+    """Deterministic fault source over a session / deployment pair."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.log: List[InjectedFault] = []
+
+    def _record(self, kind: str, detail: str) -> InjectedFault:
+        f = InjectedFault(kind=kind, detail=detail)
+        self.log.append(f)
+        return f
+
+    # ------------------------------------------------------- state corruption
+
+    def corrupt_labels(self, session, count: int = 1,
+                       out_of_range: bool = False) -> InjectedFault:
+        """Flip ``count`` served label entries.  ``out_of_range=False``
+        moves nodes to a *valid but wrong* block (caught by the cut
+        checksum), ``True`` writes garbage ``>= k`` (caught by the range
+        check)."""
+        n = session.store.n
+        idx = self.rng.choice(n, size=min(count, n), replace=False)
+        lab = np.asarray(session.labels[jnp.asarray(idx)])
+        if out_of_range:
+            vals = lab + session.k + 1
+        else:
+            vals = (lab + 1 + self.rng.integers(0, session.k - 1, idx.size)) \
+                % session.k
+        session.labels = session.labels.at[jnp.asarray(idx)].set(
+            jnp.asarray(vals.astype(np.int32))
+        )
+        return self._record(
+            "corrupt_labels",
+            f"{idx.size} entries, out_of_range={out_of_range}",
+        )
+
+    def bitflip_overlay(self, store) -> Optional[InjectedFault]:
+        """Flip one bit of one pending overlay weight (the chunk is
+        REPLACED with a modified copy).  Returns None when the overlay is
+        empty (nothing to corrupt)."""
+        if not store._ow:
+            return None
+        ci = int(self.rng.integers(0, len(store._ow)))
+        chunk = store._ow[ci].copy()
+        ei = int(self.rng.integers(0, chunk.size))
+        bits = chunk.view(np.uint32)
+        bits[ei] ^= np.uint32(1 << int(self.rng.integers(0, 23)))
+        store._ow[ci] = chunk
+        return self._record("bitflip_overlay", f"chunk {ci} entry {ei}")
+
+    def corrupt_base_csr(self, store, mode: str = "weight") -> InjectedFault:
+        """Corrupt the resident base CSR by rebinding a NEW ``GraphDev``
+        whose ``ew`` (mode="weight") or ``indices`` (mode="endpoint")
+        differs in one entry — an asymmetric arc, exactly what a partial
+        DMA or a flipped device page would produce."""
+        g = store.base
+        if g.m == 0:
+            raise ValueError("cannot corrupt an edgeless base")
+        ai = int(self.rng.integers(0, g.m))
+        if mode == "weight":
+            ew = np.asarray(g.ew).copy()
+            ew[ai] += 1.0
+            new = GraphDev(
+                indptr=g.indptr, indices=g.indices, ew=jnp.asarray(ew),
+                nw=g.nw, src=g.src, n=g.n, m=g.m, nw_max=g.nw_max,
+                ew_max=g.ew_max, ew_integral=g.ew_integral,
+                on_materialize=g.on_materialize,
+            )
+        elif mode == "endpoint":
+            ind = np.asarray(g.indices).copy()
+            ind[ai] = (ind[ai] + 1) % max(g.n, 1)
+            new = GraphDev(
+                indptr=g.indptr, indices=jnp.asarray(ind), ew=g.ew,
+                nw=g.nw, src=g.src, n=g.n, m=g.m, nw_max=g.nw_max,
+                ew_max=g.ew_max, ew_integral=g.ew_integral,
+                on_materialize=g.on_materialize,
+            )
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        store.base = new
+        store._base_host = None
+        return self._record("corrupt_base_csr", f"arc {ai} mode={mode}")
+
+    def corrupt_shard(self, deployment, block: Optional[int] = None) -> InjectedFault:
+        """Flip one edge weight inside one deployed shard (bit-flip of a
+        served artifact — caught by the reassembly checksum)."""
+        b = int(self.rng.integers(0, deployment.k)) if block is None else block
+        s = deployment.shards[b]
+        ew = np.asarray(s.ew).copy()
+        if s.m_local == 0:
+            raise ValueError(f"shard {b} has no local arcs")
+        ei = int(self.rng.integers(0, s.m_local))
+        ew[ei] += 1.0
+        s.ew = jnp.asarray(ew)
+        s._host = None
+        return self._record("corrupt_shard", f"block {b} arc {ei}")
+
+    def lose_shard(self, deployment, block: Optional[int] = None) -> InjectedFault:
+        """Drop a deployed shard entirely (a lost PE)."""
+        b = int(self.rng.integers(0, deployment.k)) if block is None else block
+        deployment.shards[b] = None
+        return self._record("lose_shard", f"block {b}")
+
+    # --------------------------------------------------------- stream mangling
+
+    def mangle_stream(self, batches: List, drop: float = 0.0,
+                      dup: float = 0.0, swap: float = 0.0) -> List[Tuple[int, object]]:
+        """Turn a batch list into a sequenced ``(seq, batch)`` stream with
+        seeded drops, duplicates, and adjacent swaps (reordering).  The
+        assigned sequence numbers reflect the ORIGINAL order, so the
+        receiver can detect every mangle."""
+        seq = list(enumerate(batches))
+        out: List[Tuple[int, object]] = []
+        for item in seq:
+            r = self.rng.random()
+            if r < drop:
+                self._record("drop_batch", f"seq {item[0]}")
+                continue
+            out.append(item)
+            if self.rng.random() < dup:
+                self._record("duplicate_batch", f"seq {item[0]}")
+                out.append(item)
+        i = 0
+        while i + 1 < len(out):
+            if self.rng.random() < swap:
+                self._record(
+                    "reorder_batches", f"seq {out[i][0]} <-> {out[i+1][0]}"
+                )
+                out[i], out[i + 1] = out[i + 1], out[i]
+                i += 2
+            else:
+                i += 1
+        return out
+
+    # ------------------------------------------------------- one-shot failures
+
+    def fail_next_extract(self, deployment) -> InjectedFault:
+        """Make the deployment's next ``extractor.extract`` raise once
+        (simulated compile/DMA failure during migration)."""
+        extractor = deployment.extractor
+        real = extractor.extract
+
+        def boom(*a, **kw):
+            extractor.extract = real
+            raise InjectedFailure("injected extract failure")
+
+        extractor.extract = boom
+        return self._record("fail_next_extract", "one-shot")
+
+    def fail_next_escalation(self, session) -> InjectedFault:
+        """Make the session's next ``_escalate`` raise once (simulated
+        V-cycle crash — the watchdog/degraded-mode trigger)."""
+        real = session._escalate
+
+        def boom(*a, **kw):
+            session._escalate = real
+            raise InjectedFailure("injected escalation failure")
+
+        session._escalate = boom
+        return self._record("fail_next_escalation", "one-shot")

@@ -1,0 +1,506 @@
+"""Fault-tolerance subsystem (ISSUE 6): snapshot/rollback, invariant
+auditing, fault injection, and transactional serving.
+
+The contract under test: every injected fault class is either REJECTED
+before any state moves (validation faults — session and store stay
+bit-identical) or DETECTED by the invariant auditor and rolled back to
+bit-identical pre-fault state, with the session still serving afterwards.
+Snapshots are parity-tested against a deep-copy numpy oracle; replaying a
+stream from a restored version reproduces the same labels bit for bit;
+audit kernels hold the compile-per-bucket discipline
+(``audit_compiles == audit_bucket_count``); and the escalation satellite
+(``partition()`` consuming the resident ``GraphDev``) is pinned
+bit-identical to the host path.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.multilevel import PartitionerConfig, partition
+from repro.dynamic import (
+    GraphUpdate,
+    PartitionSession,
+    SessionConfig,
+    UpdateValidationError,
+)
+from repro.deploy import ShardDeployment
+from repro.graph import barabasi_albert, planted_partition, to_device_csr
+from repro.resilience import (
+    FaultInjector,
+    InvariantAuditor,
+    ResilientConfig,
+    ResilientSession,
+    SnapshotManager,
+    host_digest,
+)
+from repro.resilience.faults import InjectedFailure
+
+pytestmark = pytest.mark.resilience
+
+
+def _session(n=600, k=4, seed=0, **cfg_kw):
+    g = planted_partition(n, k, 12, 2, seed=seed)
+    return PartitionSession(g, SessionConfig(k=k, seed=seed, **cfg_kw))
+
+
+def _batch(sess, rng, size=24):
+    u = rng.integers(0, sess.n, size)
+    v = (u + 1 + rng.integers(0, sess.n - 1, size)) % sess.n
+    return GraphUpdate.add_edges(u, v)
+
+
+def _digests_equal(a, b):
+    assert a.keys() == b.keys()
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key], err_msg=key)
+
+
+# ----------------------------------------------------------------- snapshots
+
+
+def test_snapshot_rollback_bit_identical_to_numpy_oracle():
+    """Rollback restores every served array bit-for-bit (labels, node
+    weights, base CSR, overlay, step counter) — compared against deep
+    host copies, so no reference aliasing can fake the equality."""
+    sess = _session()
+    rng = np.random.default_rng(1)
+    mgr = SnapshotManager(sess)
+    sess.update(_batch(sess, rng))
+    oracle = host_digest(sess)
+    v = mgr.take()
+    for _ in range(3):
+        sess.update(_batch(sess, rng))
+    assert not np.array_equal(host_digest(sess)["labels"], oracle["labels"]) \
+        or sess._step != int(oracle["step"])
+    mgr.rollback(v)
+    _digests_equal(host_digest(sess), oracle)
+
+
+def test_snapshot_restore_replays_bit_identically():
+    """A restored session replays the same stream to the same labels: the
+    step counter (which seeds repair) is part of the snapshot."""
+    sess = _session()
+    rng = np.random.default_rng(2)
+    sess.update(_batch(sess, rng))
+    mgr = SnapshotManager(sess)
+    v = mgr.take()
+    stream = [_batch(sess, np.random.default_rng(100 + i)) for i in range(4)]
+    for b in stream:
+        sess.update(b)
+    first = sess.labels_np().copy()
+    first_traj = [(r.step, r.cut, r.feasible) for r in sess.trajectory]
+    mgr.rollback(v)
+    for b in stream:
+        sess.update(b)
+    np.testing.assert_array_equal(sess.labels_np(), first)
+    assert [(r.step, r.cut, r.feasible) for r in sess.trajectory] == first_traj
+
+
+def test_snapshot_ring_retention_and_fork():
+    sess = _session(n=200, k=2)
+    mgr = SnapshotManager(sess, keep=3)
+    versions = [mgr.take() for _ in range(5)]
+    assert mgr.versions == versions[-3:]
+    with pytest.raises(KeyError):
+        mgr.get(versions[0])
+    mgr.rollback(versions[-2])
+    assert mgr.versions == versions[-3:-1]  # newer fork discarded
+
+
+# ------------------------------------------------------------ atomic reject
+
+
+@pytest.mark.parametrize("bad,reason", [
+    (lambda n: GraphUpdate(add_u=np.array([0]), add_v=np.array([10**9]),
+                           add_w=np.array([1])), "endpoint_out_of_range"),
+    (lambda n: GraphUpdate(add_u=np.array([5]), add_v=np.array([5]),
+                           add_w=np.array([1])), "self_loop"),
+    (lambda n: GraphUpdate(add_u=np.array([0]), add_v=np.array([1]),
+                           add_w=np.array([0.5])), "non_integral_weight"),
+    (lambda n: GraphUpdate(add_u=np.array([0]), add_v=np.array([1]),
+                           add_w=np.array([2**24])), "weight_overflow"),
+    (lambda n: GraphUpdate(add_u=np.array([0, 1]), add_v=np.array([1]),
+                           add_w=np.array([1])), "shape_mismatch"),
+    (lambda n: GraphUpdate(rem_u=np.array([0]), rem_v=np.array([-3]),
+                           rem_w=np.array([1])), "endpoint_out_of_range"),
+])
+def test_session_rejection_is_fully_atomic(bad, reason):
+    """A batch failing validation leaves session AND store bit-identical —
+    including the step counter that seeds every later repair, so the
+    subsequent stream is unaffected by the rejected batch."""
+    sess = _session(n=300, k=2)
+    rng = np.random.default_rng(3)
+    sess.update(_batch(sess, rng))
+    before = host_digest(sess)
+    traj_len = len(sess.trajectory)
+    with pytest.raises(UpdateValidationError) as ei:
+        sess.update(bad(sess.n))
+    assert ei.value.reason == reason
+    _digests_equal(host_digest(sess), before)
+    assert len(sess.trajectory) == traj_len
+    assert sess.store.overlay_len == 0
+    # still serving: the next good batch applies normally
+    res = sess.update(_batch(sess, rng))
+    assert res.feasible
+
+
+# --------------------------------------------------------------- audit: clean
+
+
+def test_audit_passes_on_healthy_session_and_deployment():
+    sess = _session()
+    dep = ShardDeployment(sess, halo=1)
+    aud = InvariantAuditor(sess, deployment=dep, cadence=1)
+    rng = np.random.default_rng(4)
+    for _ in range(3):
+        u = rng.integers(0, sess.n, 24)
+        v = (u + 1 + rng.integers(0, sess.n - 1, 24)) % sess.n
+        dep.update(GraphUpdate.add_edges(u, v))
+        rep = aud.audit()
+        assert rep.ok, rep.failures
+    assert any(c.startswith("shards:") for c in rep.checked)
+
+
+def test_audit_compiles_bounded_by_buckets():
+    """audit_compiles == audit_bucket_count across a multi-batch stream —
+    the jit-cache discipline every kernel family holds."""
+    sess = _session()
+    aud = InvariantAuditor(sess, cadence=1)
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        sess.update(_batch(sess, rng))
+        assert aud.audit().ok
+    st = sess.stats()
+    assert st["audit_calls"] > 0
+    assert st["audit_compiles"] == st["audit_bucket_count"]
+    assert st["audit_calls"] > st["audit_compiles"]  # cache actually reused
+
+
+def test_audit_cadence_gating():
+    sess = _session(n=200, k=2)
+    aud = InvariantAuditor(sess, cadence=3)
+    ran = [aud.maybe_audit(step) for step in range(1, 10)]
+    assert [r is not None for r in ran] == [
+        s % 3 == 0 for s in range(1, 10)
+    ]
+
+
+# ----------------------------------------------------- audit: fault detection
+
+
+def test_audit_detects_corrupt_labels_in_range():
+    """A label moved to a wrong-but-valid block changes the cut: caught by
+    the stored-vs-recomputed comparison, healed by rollback."""
+    sess = _session()
+    mgr = SnapshotManager(sess)
+    rng = np.random.default_rng(6)
+    sess.update(_batch(sess, rng))
+    oracle = host_digest(sess)
+    v = mgr.take()
+    inj = FaultInjector(seed=1)
+    inj.corrupt_labels(sess, count=3, out_of_range=False)
+    rep = InvariantAuditor(sess, cadence=1).audit()
+    assert not rep.ok
+    assert any("cut" in f or "feasible" in f for f in rep.failures)
+    mgr.rollback(v)
+    _digests_equal(host_digest(sess), oracle)
+    assert InvariantAuditor(sess, cadence=1).audit().ok
+
+
+def test_audit_detects_corrupt_labels_out_of_range():
+    sess = _session()
+    inj = FaultInjector(seed=2)
+    inj.corrupt_labels(sess, count=2, out_of_range=True)
+    rep = InvariantAuditor(sess, cadence=1).audit()
+    assert not rep.ok
+    assert "partition:labels_in_range" in rep.failures
+
+
+def test_audit_detects_overlay_bitflip():
+    """A bit-flipped overlay weight merges into an asymmetric CSR — caught
+    by the wrap-sum symmetry checksum (or the exactness/cut checks)."""
+    g = barabasi_albert(512, 4, seed=7)
+    sess = PartitionSession(g, SessionConfig(k=2, seed=0))
+    mgr = SnapshotManager(sess)
+    rng = np.random.default_rng(7)
+    sess.update(_batch(sess, rng))
+    oracle = host_digest(sess)
+    v = mgr.take()
+    # stage a pending overlay, then flip one of its weights
+    u = rng.integers(0, sess.n, 16)
+    vv = (u + 1) % sess.n
+    sess.store._ou.append(u.astype(np.int32))
+    sess.store._ov.append(vv.astype(np.int32))
+    sess.store._ow.append(np.ones(16, np.float32))
+    sess.store._olen += 16
+    inj = FaultInjector(seed=3)
+    assert inj.bitflip_overlay(sess.store) is not None
+    rep = InvariantAuditor(sess, cadence=1).audit()
+    assert not rep.ok
+    mgr.rollback(v)
+    _digests_equal(host_digest(sess), oracle)
+
+
+def test_audit_detects_corrupt_base_csr():
+    sess = _session()
+    mgr = SnapshotManager(sess)
+    oracle = host_digest(sess)
+    v = mgr.take()
+    inj = FaultInjector(seed=4)
+    inj.corrupt_base_csr(sess.store, mode="weight")
+    rep = InvariantAuditor(sess, cadence=1).audit()
+    assert not rep.ok
+    assert any("symmetry" in f or "cut" in f for f in rep.failures)
+    mgr.rollback(v)
+    _digests_equal(host_digest(sess), oracle)
+    inj.corrupt_base_csr(sess.store, mode="endpoint")
+    rep = InvariantAuditor(sess, cadence=1).audit()
+    assert not rep.ok
+    mgr.rollback(v)
+    _digests_equal(host_digest(sess), oracle)
+
+
+def test_audit_detects_corrupt_shard_and_recovery_restores_parity():
+    sess = _session()
+    dep = ShardDeployment(sess, halo=1)
+    aud = InvariantAuditor(sess, deployment=dep, cadence=1)
+    assert aud.audit().ok
+    inj = FaultInjector(seed=5)
+    f = inj.corrupt_shard(dep)
+    b = int(f.detail.split()[1])
+    rep = aud.audit()
+    assert not rep.ok
+    assert "shards:reassembly_checksum" in rep.failures
+    dep.recover_block(b)
+    assert aud.audit().ok
+    assert dep.shard_recoveries == 1
+
+
+def test_lost_shard_detected_and_reextracted():
+    sess = _session()
+    dep = ShardDeployment(sess, halo=1)
+    aud = InvariantAuditor(sess, deployment=dep, cadence=1)
+    inj = FaultInjector(seed=6)
+    f = inj.lose_shard(dep)
+    b = int(f.detail.split()[1])
+    rep = aud.audit()
+    assert not rep.ok and "shards:missing_shard" in rep.failures
+    dep.recover_block(b)
+    rep = aud.audit()
+    assert rep.ok, rep.failures
+
+
+# ----------------------------------------------------- transactional serving
+
+
+def test_transactional_quarantine_keeps_serving():
+    """Malformed batches are quarantined with structured reasons; the
+    session state is untouched and good batches keep committing."""
+    sess = _session()
+    rs = ResilientSession(sess)
+    rng = np.random.default_rng(8)
+    tx = rs.submit(_batch(sess, rng))
+    assert tx.committed
+    before = host_digest(sess)
+    bad = GraphUpdate(add_u=np.array([1]), add_v=np.array([1]),
+                      add_w=np.array([1]))
+    tx = rs.submit(bad)
+    assert tx.quarantined and not tx.committed
+    assert rs.quarantine[-1].reason == "self_loop"
+    _digests_equal(host_digest(sess), before)
+    tx = rs.submit(_batch(sess, rng))
+    assert tx.committed
+    assert rs.stats()["tx_quarantined"] == 1
+
+
+def test_transactional_rollback_on_midflight_corruption():
+    """Corruption landing between apply and audit (the classic torn write)
+    is detected, rolled back bit-identically, and the clean retry
+    commits."""
+    sess = _session()
+    rs = ResilientSession(sess, cfg=ResilientConfig(audit_cadence=1))
+    rng = np.random.default_rng(9)
+    rs.submit(_batch(sess, rng))
+    inj = FaultInjector(seed=7)
+    orig_update = sess.update
+    calls = {"n": 0}
+
+    def corrupting_update(upd):
+        res = orig_update(upd)
+        if calls["n"] == 0:  # corrupt only the first attempt
+            calls["n"] += 1
+            inj.corrupt_labels(sess, count=2, out_of_range=True)
+        return res
+
+    sess.update = corrupting_update
+    try:
+        tx = rs.submit(_batch(sess, rng))
+    finally:
+        sess.update = orig_update
+    assert tx.committed and tx.rolled_back and tx.retries == 1
+    assert rs.rollbacks == 1
+    assert rs.auditor.audit().ok
+
+
+def test_transactional_heal_walks_back_to_clean_version():
+    sess = _session()
+    rs = ResilientSession(sess, cfg=ResilientConfig(audit_cadence=1))
+    rng = np.random.default_rng(10)
+    for _ in range(3):
+        assert rs.submit(_batch(sess, rng)).committed
+    good = host_digest(sess)
+    FaultInjector(seed=8).corrupt_labels(sess, count=4)
+    rep = rs.heal()
+    assert rep.ok
+    # healed to the most recent clean version: the pre-corruption state
+    # is the last transaction's committed state... which the newest
+    # snapshot precedes by one batch — replay parity still holds
+    assert rs.auditor.audit().ok
+    assert rs.rollbacks >= 1
+    lab = sess.labels_np()
+    assert lab.min() >= 0 and lab.max() < sess.k
+
+
+def test_sequence_numbers_drop_dup_reorder():
+    """A seeded mangled stream: duplicates dropped, swaps parked+drained in
+    order, drops declared lost past the reorder window — and the final
+    labels equal an un-mangled replay of the surviving batches in order."""
+    sess = _session()
+    rs = ResilientSession(sess, cfg=ResilientConfig(reorder_window=2))
+    batches = [_batch(sess, np.random.default_rng(200 + i)) for i in range(8)]
+    inj = FaultInjector(seed=11)
+    stream = inj.mangle_stream(batches, drop=0.2, dup=0.2, swap=0.3)
+    kinds = {f.kind for f in inj.log}
+    assert {"drop_batch", "duplicate_batch", "reorder_batches"} <= kinds
+    applied = []
+    for seq, b in stream:
+        tx = rs.submit(b, seq=seq)
+        for t in [tx] + tx.followups:
+            if t.committed:
+                applied.append(t.seq)
+    assert applied == sorted(applied)            # commit order == seq order
+    assert len(set(applied)) == len(applied)     # no duplicate commits
+    assert rs.duplicates_dropped >= 1
+    # parity: replay exactly the committed subsequence on a fresh session
+    ref = _session()
+    for s in applied:
+        ref.update(batches[s])
+    np.testing.assert_array_equal(sess.labels_np(), ref.labels_np())
+
+
+def test_escalation_watchdog_enters_degraded_mode_and_recovers():
+    """Consecutive escalations past the bound flip the session into
+    degraded mode: further guard trips serve stale labels (flagged), and
+    ``recover()`` re-enables escalation."""
+    sess = _session(escalate_cut_ratio=1.0001)   # hair-trigger guard
+    rs = ResilientSession(
+        sess, cfg=ResilientConfig(max_consecutive_escalations=2)
+    )
+    rng = np.random.default_rng(12)
+    results = [rs.submit(_batch(sess, rng, size=120)) for _ in range(5)]
+    assert rs.degraded
+    assert sess.suppress_escalation
+    stale = [t.result.stale for t in results if t.committed and t.result]
+    assert any(stale)
+    assert rs.stats()["degraded"]
+    assert sess.suppressed_escalations >= 1
+    rep = rs.recover()
+    assert not rs.degraded and not sess.suppress_escalation
+    assert rep.ok
+
+
+def test_escalation_crash_degrades_then_retry_commits():
+    sess = _session(escalate_cut_ratio=1.0001)
+    rs = ResilientSession(sess, cfg=ResilientConfig(max_retries=2))
+    rng = np.random.default_rng(13)
+    inj = FaultInjector(seed=12)
+    inj.fail_next_escalation(sess)
+    tx = rs.submit(_batch(sess, rng, size=120))
+    # first attempt crashed in _escalate -> rollback -> degraded retry
+    # commits WITHOUT escalating (suppressed), serving stale labels
+    assert tx.committed and tx.rolled_back and tx.retries == 1
+    assert rs.degraded
+    assert tx.result.stale and not tx.result.escalated
+
+
+def test_failed_migration_serves_stale_then_catches_up():
+    sess = _session()
+    dep = ShardDeployment(sess, halo=1)
+    rs = ResilientSession(sess, deployment=dep)
+    rng = np.random.default_rng(14)
+    inj = FaultInjector(seed=13)
+    inj.fail_next_extract(dep)
+    tx = rs.submit(_batch(sess, rng))
+    assert tx.committed and tx.migration_failed
+    assert dep.stale and dep.failed_migrations == 1
+    # next commit's migration catches the shard set up
+    tx = rs.submit(_batch(sess, rng))
+    assert tx.committed and not tx.migration_failed
+    assert not dep.stale
+    rep = rs.auditor.audit()
+    assert rep.ok, rep.failures
+
+
+def test_full_seeded_fault_suite_every_fault_recovered():
+    """The acceptance sweep: inject every state-fault class against one
+    serving session; each is detected by audit and healed back to a
+    bit-identical clean state, with the session committing afterwards."""
+    sess = _session()
+    dep = ShardDeployment(sess, halo=1)
+    rs = ResilientSession(
+        sess, deployment=dep, cfg=ResilientConfig(audit_cadence=1)
+    )
+    rng = np.random.default_rng(15)
+    inj = FaultInjector(seed=99)
+    assert rs.submit(_batch(sess, rng)).committed
+
+    def hit(inject, recover=None):
+        inject()
+        rep = rs.auditor.audit()
+        assert not rep.ok, f"fault not detected: {inj.log[-1].kind}"
+        if recover is None:
+            assert rs.heal().ok     # heal resyncs the shard set itself
+        else:
+            recover()
+            assert rs.auditor.audit().ok
+        tx = rs.submit(_batch(sess, rng))
+        assert tx.committed, f"not serving after {inj.log[-1].kind}"
+
+    hit(lambda: inj.corrupt_labels(sess, count=2, out_of_range=False))
+    hit(lambda: inj.corrupt_labels(sess, count=2, out_of_range=True))
+    hit(lambda: inj.corrupt_base_csr(sess.store, mode="weight"))
+    f_shard = {}
+    hit(lambda: f_shard.update(b=int(inj.corrupt_shard(dep).detail.split()[1])),
+        recover=lambda: dep.recover_block(f_shard["b"]))
+    hit(lambda: f_shard.update(b=int(inj.lose_shard(dep).detail.split()[1])),
+        recover=lambda: dep.recover_block(f_shard["b"]))
+    assert len({f.kind for f in inj.log}) >= 4
+
+
+# ----------------------------------------------------- escalation satellite
+
+
+def test_partition_accepts_graphdev_bit_identical():
+    """partition() on the resident GraphDev == partition() on the host
+    graph, bit for bit — the escalation path's correctness pin."""
+    g = barabasi_albert(3000, 4, seed=21)
+    cfg_h = PartitionerConfig(k=4, preset="fast", seed=5, numpy_below=256)
+    cfg_d = PartitionerConfig(k=4, preset="fast", seed=5, numpy_below=256)
+    rep_h = partition(g, cfg_h)
+    rep_d = partition(to_device_csr(g), cfg_d)
+    np.testing.assert_array_equal(rep_h.labels, rep_d.labels)
+    assert rep_h.cut == rep_d.cut
+
+
+def test_escalation_counts_saved_h2d_bytes():
+    sess = _session(escalate_cut_ratio=1.0001)
+    rng = np.random.default_rng(22)
+    sess.update(_batch(sess, rng, size=150))
+    assert sess.escalations >= 1
+    st = sess.stats()
+    assert st["escalate_h2d_saved"] > 0
+    g = sess.store.base
+    per = g.indices.shape[0] * 12 + g.nw.shape[0] * 4
+    assert st["escalate_h2d_saved"] == sess.escalations * per

@@ -48,6 +48,11 @@ at laptop scale, preserving the paper's *relative* claims:
                          overhead vs the bare session, and fault-recovery
                          latency (rollback-based heal) vs a full
                          re-partition
+  resilience_dr       -> PR 7: disaster recovery — durable checkpoint
+                         write latency, WAL-append overhead per commit,
+                         fresh-process restore+WAL-replay (RTO) vs a full
+                         re-partition, and replica failover latency vs
+                         synchronous shard re-extraction
 
 Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
 With ``--json PATH``, tables additionally emit machine-readable rows
@@ -1164,6 +1169,190 @@ def resilience_hot():
     return rows
 
 
+def resilience_dr():
+    """PR 7: what durability costs per commit, and what it buys at recovery.
+
+    The ba-16384 (k=4) serving stack from ``resilience_hot``, now wrapped
+    in the full DR stack (ReplicatedDeployment + ResilientSession +
+    DurableSession writing checkpoints and a per-commit fsynced WAL to a
+    temp dir).  Measured:
+
+      * wal row — transactional submit us/update with durable logging vs
+        without (the WAL-append + fsync tax on the commit path);
+      * checkpoint row — one full durable checkpoint (capture + atomic
+        fsynced write), min-of-3;
+      * restore row — fresh-process restore (checkpoint load + WAL replay
+        of ``checkpoint_every`` committed batches + deployment
+        re-extraction) vs a full multilevel re-partition: the RTO story —
+        restore is bounded by replay length, re-partition by graph size;
+      * failover row — serving a read through a standby promotion
+        (checksum audit + promote + schedule re-assembly) vs a synchronous
+        ``recover_block`` re-extraction: what the replica buys while
+        background recovery runs.
+
+    Timings are XLA-CPU; fsync cost is the local filesystem's.
+    """
+    import shutil as _shutil
+    import tempfile
+
+    from repro.core import PartitionerConfig, partition
+    from repro.deploy import ReplicatedDeployment
+    from repro.dynamic import GraphUpdate, PartitionSession, SessionConfig
+    from repro.graph import barabasi_albert
+    from repro.resilience import (
+        DurableConfig, DurableSession, FaultInjector, ResilientConfig,
+        ResilientSession, host_digest,
+    )
+
+    rows = []
+    g = barabasi_albert(16384, 6, seed=3)
+    k = 4
+    cadence = 8
+    ckpt_every = 4      # the RTO knob: restore replays at most this many
+    sess_bare = PartitionSession(g, SessionConfig(k=k, seed=0))
+    rs_bare = ResilientSession(
+        sess_bare, cfg=ResilientConfig(audit_cadence=cadence)
+    )
+    sess_dur = PartitionSession(g, SessionConfig(k=k, seed=0))
+    dep = ReplicatedDeployment(sess_dur, replicas=2)
+    rs_dur = ResilientSession(
+        sess_dur, deployment=dep, cfg=ResilientConfig(audit_cadence=cadence)
+    )
+    workdir = tempfile.mkdtemp(prefix="bench_dr_")
+    ds = DurableSession(rs_dur, DurableConfig(
+        directory=workdir, checkpoint_every=1 << 30,  # manual rotation
+    ))
+    nb = max(g.m // 2 // 200, 64)
+    rng = np.random.default_rng(11)
+    groups = 4  # 1 warm + 3 timed, cadence updates each
+    batches = []
+    # bare + durable groups, plus one WAL's worth for the restore section
+    for _ in range(2 * groups * cadence + ckpt_every):
+        au = rng.integers(0, g.n, nb)
+        av = (au + 1 + rng.integers(0, g.n - 1, nb)) % g.n
+        batches.append(GraphUpdate.add_edges(au, av))
+    bare_iter = iter(batches[: groups * cadence])
+    dur_iter = iter(batches[groups * cadence:])
+
+    def run_group(submit, it):
+        t0 = time.time()
+        for _ in range(cadence):
+            submit(next(it))
+        return (time.time() - t0) / cadence
+
+    run_group(rs_bare.submit, bare_iter)          # warm both paths
+    run_group(ds.submit, dur_iter)
+    t_bare = [run_group(rs_bare.submit, bare_iter)
+              for _ in range(groups - 1)]
+    t_dur = [run_group(ds.submit, dur_iter) for _ in range(groups - 1)]
+    us_bare = min(t_bare) * 1e6
+    us_dur = min(t_dur) * 1e6
+    wal_overhead = 100.0 * (us_dur - us_bare) / max(us_bare, 1)
+
+    # ---- checkpoint write (capture + atomic fsynced save), min-of-3 ----
+    t_ck = []
+    for _ in range(3):
+        t0 = time.time()
+        assert ds.checkpoint() is not None
+        t_ck.append(time.time() - t0)
+    us_ckpt = min(t_ck) * 1e6
+
+    # ---- restore + replay (RTO) vs full re-partition ----
+    for _ in range(ckpt_every):        # a WAL worth of committed batches
+        ds.submit(next(dur_iter))
+    pre = host_digest(ds.session)
+    t_rs = []
+    for _ in range(3):
+        t0 = time.time()
+        ds2, rep = DurableSession.restore(workdir)
+        t_rs.append(time.time() - t0)
+    assert rep.records_replayed == ckpt_every, rep
+    post = host_digest(ds2.session)
+    assert all(np.array_equal(pre[key], post[key]) for key in pre)
+    us_restore = min(t_rs) * 1e6
+    gh = ds.session.store.csr_host()
+    t_full = []
+    for r in range(3):
+        t0 = time.time()
+        partition(gh, PartitionerConfig(k=k, preset="fast", seed=r))
+        t_full.append(time.time() - t0)
+    us_full = min(t_full) * 1e6
+
+    # ---- failover (standby promotion) vs synchronous re-extraction ----
+    inj = FaultInjector(seed=1)
+    t_fo = []
+    for _ in range(3):
+        inj.corrupt_shard(dep, block=0)
+        t0 = time.time()
+        shard = dep.read_block(0)
+        t_fo.append(time.time() - t0)
+        assert shard is not None
+        dep.run_recovery()             # restore the replica count
+    us_failover = min(t_fo) * 1e6
+    t_rec = []
+    for _ in range(3):
+        t0 = time.time()
+        dep.recover_block(0)
+        t_rec.append(time.time() - t0)
+    us_recover = min(t_rec) * 1e6
+    wal_bytes = sum(
+        os.path.getsize(os.path.join(workdir, f)) for f in os.listdir(workdir)
+        if f.startswith("wal_")
+    )
+    _shutil.rmtree(workdir, ignore_errors=True)
+
+    print("metric,value")
+    print(f"graph,ba-16384 k={k} replicas=2 checkpoint_every={ckpt_every}")
+    print(f"us_per_update_transactional,{us_bare:.0f}")
+    print(f"us_per_update_durable,{us_dur:.0f}")
+    print(f"wal_fsync_overhead_pct,{wal_overhead:.1f}")
+    print(f"checkpoint_write_us,{us_ckpt:.0f}")
+    print(f"restore_replay_us,{us_restore:.0f}  # checkpoint load + "
+          f"{ckpt_every}-batch WAL replay + shard re-extraction")
+    print(f"full_repartition_us,{us_full:.0f}")
+    print(f"restore_vs_full_speedup,x{us_full / max(us_restore, 1):.1f}  "
+          f"# RTO scales with checkpoint_every, not graph size")
+    print(f"restore_bit_identical,True")
+    print(f"failover_read_us,{us_failover:.0f}  # checksum audit + standby "
+          f"promotion + schedule re-assembly")
+    print(f"recover_block_us,{us_recover:.0f}")
+    print(f"failover_vs_recover_speedup,"
+          f"x{us_recover / max(us_failover, 1):.1f}")
+    print(f"wal_bytes_on_disk,{wal_bytes}")
+    print(f"failovers,{dep.failovers}")
+    print(f"# timings are XLA-CPU; fsync cost is the local filesystem's")
+    rows.append(dict(
+        name="resilience_dr_durability",
+        us_per_call=us_dur,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, k=k,
+            checkpoint_every=ckpt_every, batch_edges_added=int(nb),
+            us_per_update_transactional=us_bare,
+            us_per_update_durable=us_dur,
+            wal_fsync_overhead_pct=float(wal_overhead),
+            checkpoint_write_us=us_ckpt,
+            wal_bytes_on_disk=int(wal_bytes),
+        ),
+    ))
+    rows.append(dict(
+        name="resilience_dr_recovery",
+        us_per_call=us_restore,
+        derived=dict(
+            graph="ba-16384", n=g.n, m=g.m, k=k,
+            records_replayed=int(ckpt_every),
+            restore_replay_us=us_restore,
+            full_repartition_us=us_full,
+            restore_vs_full_speedup=us_full / max(us_restore, 1),
+            restore_bit_identical=True,
+            failover_read_us=us_failover,
+            recover_block_us=us_recover,
+            failover_vs_recover_speedup=us_recover / max(us_failover, 1),
+            replicas=2,
+        ),
+    ))
+    return rows
+
+
 TABLES = {
     "table2_quality": table2_quality,
     "table3_k32": table3_k32,
@@ -1181,6 +1370,7 @@ TABLES = {
     "dynamic_hot": dynamic_hot,
     "deploy_hot": deploy_hot,
     "resilience_hot": resilience_hot,
+    "resilience_dr": resilience_dr,
 }
 
 

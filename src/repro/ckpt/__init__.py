@@ -1,5 +1,5 @@
-from .checkpoint import AsyncCheckpointer, latest_step, restore, save
+from .checkpoint import AsyncCheckpointer, latest_step, load, restore, save
 from .elastic import reshard_restore, shardings_for
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer",
+__all__ = ["save", "restore", "load", "latest_step", "AsyncCheckpointer",
            "reshard_restore", "shardings_for"]

@@ -29,7 +29,7 @@ import numpy as np
 
 import jax
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+__all__ = ["save", "restore", "load", "latest_step", "AsyncCheckpointer"]
 
 
 def _flatten(tree):
@@ -37,8 +37,30 @@ def _flatten(tree):
     return leaves, str(treedef)
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory entry — required for rename durability: POSIX only
+    guarantees the rename itself is atomic, not that it has reached disk;
+    a crash after rename but before the parent's metadata flush can revert
+    to the old directory contents on ext4/xfs."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:       # platforms/filesystems without O_RDONLY dir opens
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(path: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
-    """Synchronous atomic checkpoint write; returns the final directory."""
+    """Synchronous atomic checkpoint write; returns the final directory.
+
+    Durability order: arrays fsynced, manifest (with the completion marker)
+    fsynced, tmp dir entry fsynced, atomic rename, PARENT dir entry fsynced.
+    Only after the last step is the checkpoint guaranteed to survive a
+    crash; everything before it leaves a ``.tmp`` that recovery ignores."""
     final = os.path.join(path, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -46,7 +68,10 @@ def save(path: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
     os.makedirs(tmp, exist_ok=True)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     host = [np.asarray(x) for x in leaves]
-    np.savez(os.path.join(tmp, "arrays.npz"), *host)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, *host)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {
         "step": step,
         "n_leaves": len(host),
@@ -59,9 +84,11 @@ def save(path: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic on POSIX
+    _fsync_dir(path)        # rename alone is not crash-durable everywhere
     return final
 
 
@@ -83,6 +110,30 @@ def latest_step(path: str) -> Optional[int]:
         except Exception:
             continue
     return best
+
+
+def load(path: str, step: int):
+    """Load a checkpoint WITHOUT a ``like`` template: returns
+    ``(leaves, manifest)`` with host numpy leaves in saved (tree-flatten)
+    order.  The fresh-process restore path — shapes and dtypes come from
+    the manifest, not from live objects the crashed process no longer
+    has.  Raises on an incomplete manifest (a torn write's ``.tmp`` never
+    has one, but a copied/partial directory might)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    if not manifest.get("complete"):
+        raise ValueError(f"checkpoint at {d} is incomplete")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves = [data[f"arr_{i}"] for i in range(manifest["n_leaves"])]
+    for leaf, shape, dt in zip(leaves, manifest["shapes"],
+                               manifest["dtypes"]):
+        if list(leaf.shape) != list(shape) or str(leaf.dtype) != dt:
+            raise ValueError(
+                f"leaf mismatch in {d}: {leaf.shape}/{leaf.dtype} "
+                f"vs manifest {shape}/{dt}"
+            )
+    return leaves, manifest
 
 
 def restore(path: str, step: int, like: Any, shardings: Any = None):
@@ -110,20 +161,29 @@ def restore(path: str, step: int, like: Any, shardings: Any = None):
 
 
 class AsyncCheckpointer:
-    """Single-writer background checkpoint thread (overlaps training)."""
+    """Single-writer background checkpoint thread (overlaps training).
+
+    A failed background write is never silent: the exception is re-raised
+    on the next ``wait()`` OR the next ``submit()`` (whichever comes
+    first), then cleared so the checkpointer stays usable — the caller
+    decides whether to retry the step or crash.  ``failed_writes`` counts
+    surfaced failures for monitoring."""
 
     def __init__(self, path: str, keep: int = 3):
         self.path = path
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._err: Optional[BaseException] = None
+        self.failed_writes = 0
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
         if self._err:
-            raise self._err
+            err, self._err = self._err, None  # surface once, stay usable
+            self.failed_writes += 1
+            raise err
 
     def submit(self, step: int, tree: Any, extra: Optional[dict] = None):
         self.wait()  # one in flight at a time

@@ -16,6 +16,10 @@ Three layers (ISSUE 5):
   bridge from :class:`~repro.dynamic.session.PartitionSession`: after each
   repair, a :class:`MigrationDelta` patches only the affected shards,
   escalating to full re-extraction when patching degenerates.
+* :mod:`repro.deploy.replicate` — :class:`ReplicatedDeployment` (ISSUE 7):
+  R-way standby replicas per block with checksum-audited reads; a lost or
+  corrupt primary fails over to an audited standby while background
+  recovery restores the replica count, so reads never see a hole.
 """
 
 from .extract import (
@@ -30,6 +34,7 @@ from .extract import (
 )
 from .metrics import block_comm_metrics_np, shard_comm_metrics
 from .migrate import MigrationDelta, ShardDeployment
+from .replicate import ReplicaMiss, ReplicatedDeployment
 
 __all__ = [
     "BlockExtractor",
@@ -37,6 +42,8 @@ __all__ = [
     "BlockShardNP",
     "DeployStats",
     "MigrationDelta",
+    "ReplicaMiss",
+    "ReplicatedDeployment",
     "ShardDeployment",
     "assemble_schedule",
     "block_comm_metrics_np",

@@ -162,8 +162,12 @@ class ShardDeployment:
         dirty = np.unique(np.concatenate(
             [moved_all, u, v] + self._pending_dirty
         ).astype(np.int64))
+        # a lost shard (None — a dropped PE) is re-extracted as part of any
+        # migrate pass, so the catch-up paths (resync, heal) self-repair
+        # holes instead of tripping over them
+        lost = {b for b in range(self.k) if self.shards[b] is None}
         step = res.step if res is not None else sess.trajectory[-1].step
-        if dirty.size == 0:
+        if dirty.size == 0 and not lost:
             delta = MigrationDelta(
                 step=step, moved=moved_all, moved_from=moved_from,
                 moved_to=moved_to, dirty=dirty,
@@ -177,11 +181,14 @@ class ShardDeployment:
         aff = set(np.flatnonzero(self._member[:, in_range].any(axis=1)))
         aff |= {int(b) for b in moved_from if b >= 0}
         aff |= {int(b) for b in moved_to}
+        aff |= lost
         escalated = res.escalated if res is not None else False
         full = escalated or len(aff) > self.escalate_fraction * self.k
         blocks = list(range(self.k)) if full else sorted(aff)
         old_ghosts = {
-            b: self.shards[b].ghost_global_np() for b in blocks
+            b: (self.shards[b].ghost_global_np()
+                if self.shards[b] is not None else np.zeros(0, np.int64))
+            for b in blocks
         }
         g = sess.store.graph()
         try:

@@ -137,6 +137,58 @@ class PartitionSession:
             escalated=True, seconds=time.time() - t0,
         )]
 
+    @classmethod
+    def from_restored(
+        cls,
+        g: GraphNP,
+        cfg: SessionConfig,
+        *,
+        labels: np.ndarray,
+        step: int,
+        cut_ref: float,
+        ew_ref: float,
+        trajectory: Optional[List[UpdateResult]] = None,
+        suppress_escalation: bool = False,
+    ) -> "PartitionSession":
+        """Rebuild a session from durably-captured state WITHOUT running the
+        initial ``partition()`` V-cycle — the disaster-recovery constructor
+        (:mod:`repro.resilience.durable`).  ``g`` is the checkpointed base
+        graph; ``labels``/``step``/``cut_ref``/``ew_ref`` restore the exact
+        serving state, so replaying the same post-checkpoint update stream
+        reproduces the pre-crash labels bit for bit (every repair seed
+        derives from the restored step counter)."""
+        self = cls.__new__(cls)
+        self.cfg = cfg
+        self.k = cfg.k
+        self.engine = LPEngine(
+            g, target_chunks=cfg.target_chunks, seed=cfg.seed
+        )
+        self.store = DynamicGraphStore(
+            g, overlay_cap=cfg.overlay_cap,
+            on_h2d=self._note_h2d, on_d2h=self._note_d2h,
+        )
+        self._base_id = id(self.store.base)
+        self.labels = self.engine.to_arena(
+            np.asarray(labels, np.int32), g.n, fill=self.k
+        )
+        self.escalations = 0
+        self.engine_rebuilds = 0
+        self.escalate_h2d_saved = 0
+        self.suppressed_escalations = 0
+        self.suppress_escalation = bool(suppress_escalation)
+        self._step = int(step)
+        self._cut_ref = float(cut_ref)
+        self._ew_ref = float(ew_ref)
+        if trajectory:
+            self.trajectory = list(trajectory)
+        else:
+            cut, imb, feas = self._score(self.store.base)
+            self.trajectory = [UpdateResult(
+                step=self._step, n=g.n, m=g.m, cut=cut, imbalance=imb,
+                feasible=feas,
+            )]
+        return self
+
     # --------------------------------------------------------------- internal
 
     def _note_h2d(self, nbytes: int) -> None:

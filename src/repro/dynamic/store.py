@@ -33,6 +33,8 @@ sums) — regression-tested in tests/test_dynamic.py.
 
 from __future__ import annotations
 
+import struct
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
@@ -64,6 +66,25 @@ class UpdateValidationError(ValueError):
         super().__init__(f"{reason}: {detail}")
         self.reason = reason
         self.detail = detail
+
+
+# Wire format of one serialized GraphUpdate (the WAL record body):
+#
+#   header  "<4sBBHQI" = magic b"GUPD" | version u8 | flags u8 (reserved 0)
+#                        | reserved u16 | payload_len u64 | crc32 u32
+#   payload 7 x u64 field lengths (add_u, add_v, add_w, rem_u, rem_v,
+#           rem_w, add_node_w) followed by the fields as little-endian
+#           int64 in that order.
+#
+# The crc32 covers the payload only, so a truncated header, a truncated
+# payload, and a bit-flipped payload are three distinguishable rejection
+# reasons — the durable WAL relies on that to stop replay at the first
+# torn/corrupt record instead of applying garbage.
+_WIRE_MAGIC = b"GUPD"
+_WIRE_VERSION = 1
+_WIRE_HEADER = struct.Struct("<4sBBHQI")
+_WIRE_FIELDS = ("add_u", "add_v", "add_w", "rem_u", "rem_v", "rem_w",
+                "add_node_w")
 
 
 def _as_ids(a) -> np.ndarray:
@@ -172,6 +193,81 @@ class GraphUpdate:
                 raise UpdateValidationError(
                     "self_loop", "self loops are not representable"
                 )
+
+    # ------------------------------------------------------------ wire format
+
+    def to_bytes(self) -> bytes:
+        """Serialize to the length + checksum framed wire format (the WAL
+        record body).  Self-delimiting: the header carries the payload
+        length, so records can be concatenated into a log and re-split
+        without an outer index."""
+        fields = [np.ascontiguousarray(getattr(self, f), dtype="<i8")
+                  for f in _WIRE_FIELDS]
+        payload = struct.pack("<7Q", *(f.size for f in fields))
+        payload += b"".join(f.tobytes() for f in fields)
+        crc = zlib.crc32(payload) & 0xFFFFFFFF
+        return _WIRE_HEADER.pack(
+            _WIRE_MAGIC, _WIRE_VERSION, 0, 0, len(payload), crc
+        ) + payload
+
+    @staticmethod
+    def wire_size(data: bytes) -> int:
+        """Total record size (header + payload) of the record at the start
+        of ``data``; raises :class:`UpdateValidationError` when even the
+        header is torn or unrecognizable."""
+        if len(data) < _WIRE_HEADER.size:
+            raise UpdateValidationError(
+                "wal_truncated",
+                f"{len(data)} bytes < {_WIRE_HEADER.size}-byte header",
+            )
+        magic, ver, _, _, plen, _ = _WIRE_HEADER.unpack_from(data)
+        if magic != _WIRE_MAGIC:
+            raise UpdateValidationError("wal_bad_magic", repr(magic))
+        if ver != _WIRE_VERSION:
+            raise UpdateValidationError("wal_bad_version", str(ver))
+        return _WIRE_HEADER.size + plen
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "GraphUpdate":
+        """Parse one record produced by :meth:`to_bytes`.
+
+        Rejects (with :class:`UpdateValidationError`, never a partial
+        object) torn headers/payloads (``wal_truncated``), foreign bytes
+        (``wal_bad_magic`` / ``wal_bad_version``), bit flips anywhere in
+        the payload (``wal_corrupt``, via crc32), and internally
+        inconsistent field lengths (``wal_corrupt``).  Trailing bytes
+        beyond the framed record are rejected too (``wal_trailing``) so a
+        mis-split log cannot silently drop records."""
+        total = GraphUpdate.wire_size(data)
+        if len(data) < total:
+            raise UpdateValidationError(
+                "wal_truncated", f"{len(data)} bytes < {total}-byte record"
+            )
+        if len(data) > total:
+            raise UpdateValidationError(
+                "wal_trailing", f"{len(data) - total} bytes past the record"
+            )
+        _, _, _, _, plen, crc = _WIRE_HEADER.unpack_from(data)
+        payload = data[_WIRE_HEADER.size:total]
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+            raise UpdateValidationError("wal_corrupt", "payload crc mismatch")
+        if plen < 56:
+            raise UpdateValidationError(
+                "wal_corrupt", f"payload {plen} bytes < 56-byte length block"
+            )
+        counts = struct.unpack_from("<7Q", payload)
+        if 56 + 8 * sum(counts) != plen:
+            raise UpdateValidationError(
+                "wal_corrupt",
+                f"field lengths {counts} disagree with payload size {plen}",
+            )
+        out, off = {}, 56
+        for name, c in zip(_WIRE_FIELDS, counts):
+            out[name] = np.frombuffer(
+                payload, dtype="<i8", count=c, offset=off
+            ).astype(np.int64)
+            off += 8 * c
+        return GraphUpdate(**out)
 
     def arcs(self) -> tuple:
         """Symmetric signed arc deltas ``(u, v, w)`` of the batch: both arcs

@@ -15,7 +15,13 @@ transactional, auditable artifact:
   so every recovery path is exercised in tests rather than claimed;
 * :mod:`~repro.resilience.transact` — the transactional serving loop:
   validate -> apply -> audit -> commit-or-rollback, with quarantine,
-  bounded retry, an escalation watchdog, and explicit degraded mode.
+  bounded retry, an escalation watchdog, and explicit degraded mode;
+* :mod:`~repro.resilience.durable` — disaster recovery: atomic durable
+  checkpoints + a per-commit fsynced write-ahead log, with fresh-process
+  ``restore()`` replaying the WAL to a bit-identical session (ISSUE 7);
+* :mod:`~repro.resilience.fuzz` — the end-to-end fault fuzzer: seeded
+  episodes interleaving every fault class against mangled concurrent
+  update streams, asserting the stack heals or restores to the oracle.
 """
 
 from .audit import AuditReport, InvariantAuditor
@@ -27,17 +33,34 @@ from .transact import (
     ResilientSession,
     TxResult,
 )
+from .durable import (
+    DurableConfig,
+    DurableSession,
+    RestoreReport,
+    WalRecord,
+    read_wal,
+)
+from .fuzz import EpisodeResult, FuzzConfig, FuzzReport, run_fuzz
 
 __all__ = [
     "AuditReport",
+    "DurableConfig",
+    "DurableSession",
+    "EpisodeResult",
     "FaultInjector",
+    "FuzzConfig",
+    "FuzzReport",
     "InjectedFault",
     "InvariantAuditor",
     "QuarantinedBatch",
     "ResilientConfig",
     "ResilientSession",
+    "RestoreReport",
     "SessionSnapshot",
     "SnapshotManager",
     "TxResult",
+    "WalRecord",
     "host_digest",
+    "read_wal",
+    "run_fuzz",
 ]

@@ -54,11 +54,22 @@ class FaultInjector:
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
         self.log: List[InjectedFault] = []
+        self._disarmers: List = []
 
     def _record(self, kind: str, detail: str) -> InjectedFault:
         f = InjectedFault(kind=kind, detail=detail)
         self.log.append(f)
         return f
+
+    def disarm(self) -> None:
+        """Restore every armed-but-unfired one-shot hook.  One-shot faults
+        patch live entry points (including the process-global ``ckpt.save``)
+        and restore themselves only when they FIRE — an injector retired
+        with a hook still pending must disarm it, or the stale patch leaks
+        into unrelated code."""
+        for d in self._disarmers:
+            d()
+        self._disarmers.clear()
 
     # ------------------------------------------------------- state corruption
 
@@ -184,27 +195,128 @@ class FaultInjector:
 
     # ------------------------------------------------------- one-shot failures
 
-    def fail_next_extract(self, deployment) -> InjectedFault:
+    def fail_next_extract(self, deployment) -> Optional[InjectedFault]:
         """Make the deployment's next ``extractor.extract`` raise once
-        (simulated compile/DMA failure during migration)."""
+        (simulated compile/DMA failure during migration).  Returns None
+        when a hook is already armed: stacking one-shot patches would
+        capture the first hook as the "real" entry point and re-arm it on
+        fire/disarm."""
         extractor = deployment.extractor
         real = extractor.extract
+        if getattr(real, "_injected_hook", False):
+            return None
 
         def boom(*a, **kw):
             extractor.extract = real
             raise InjectedFailure("injected extract failure")
 
+        def disarm():
+            if extractor.extract is boom:
+                extractor.extract = real
+
+        boom._injected_hook = True
         extractor.extract = boom
+        self._disarmers.append(disarm)
         return self._record("fail_next_extract", "one-shot")
 
-    def fail_next_escalation(self, session) -> InjectedFault:
+    def fail_next_escalation(self, session) -> Optional[InjectedFault]:
         """Make the session's next ``_escalate`` raise once (simulated
-        V-cycle crash — the watchdog/degraded-mode trigger)."""
+        V-cycle crash — the watchdog/degraded-mode trigger).  Returns
+        None when a hook is already armed (no stacking)."""
         real = session._escalate
+        if getattr(real, "_injected_hook", False):
+            return None
 
         def boom(*a, **kw):
             session._escalate = real
             raise InjectedFailure("injected escalation failure")
 
+        def disarm():
+            if session._escalate is boom:
+                session._escalate = real
+
+        boom._injected_hook = True
         session._escalate = boom
+        self._disarmers.append(disarm)
         return self._record("fail_next_escalation", "one-shot")
+
+    # ------------------------------------------------ disaster-recovery faults
+
+    def fail_mid_checkpoint(self, durable) -> Optional[InjectedFault]:
+        """Kill the next checkpoint mid-write: the state capture runs, a
+        torn ``step_X.tmp`` partial is left behind, and the save dies
+        BEFORE the atomic rename (simulated power loss inside the
+        checkpoint window).  The latest complete checkpoint must remain
+        the restorable one.  Returns None when a hook is already armed —
+        ``ckpt.save`` is process-global, and stacking patches would
+        restore the first hook instead of the real writer."""
+        import os
+
+        from .. import ckpt
+
+        durable_cfg = durable.cfg
+        real_save = ckpt.save
+        if getattr(real_save, "_injected_hook", False):
+            return None
+
+        def boom(path, step, tree, extra=None):
+            ckpt.save = real_save
+            tmp = os.path.join(path, f"step_{step:08d}.tmp")
+            os.makedirs(tmp, exist_ok=True)
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                f.write(b"torn partial write")
+            raise InjectedFailure("injected mid-checkpoint crash")
+
+        def disarm():
+            if ckpt.save is boom:
+                ckpt.save = real_save
+
+        boom._injected_hook = True
+        ckpt.save = boom
+        self._disarmers.append(disarm)
+        return self._record(
+            "fail_mid_checkpoint", f"dir {durable_cfg.directory}"
+        )
+
+    def corrupt_wal(self, durable) -> Optional[InjectedFault]:
+        """Flip one bit somewhere in the current WAL file's record bytes
+        (simulated disk corruption).  The framing crc must confine the
+        damage: replay keeps the clean prefix and drops the tail.  Returns
+        None when the WAL holds no records yet."""
+        import os
+
+        from .durable import wal_path
+
+        path = wal_path(durable.cfg.directory, durable.anchor_step)
+        size = os.path.getsize(path) if os.path.exists(path) else 0
+        if size == 0:
+            return None
+        durable._wal._f.flush()
+        byte = int(self.rng.integers(0, size))
+        bit = int(self.rng.integers(0, 8))
+        with open(path, "r+b") as f:
+            f.seek(byte)
+            old = f.read(1)
+            f.seek(byte)
+            f.write(bytes([old[0] ^ (1 << bit)]))
+        return self._record("corrupt_wal", f"byte {byte} bit {bit}")
+
+    def corrupt_replica(self, deployment,
+                        block: Optional[int] = None) -> Optional[InjectedFault]:
+        """Flip one edge weight inside one STANDBY copy (replica rot: the
+        failover path must audit standbys before promoting them).  Returns
+        None when the chosen block has no standbys."""
+        b = int(self.rng.integers(0, deployment.k)) if block is None else block
+        standbys = deployment._standbys[b]
+        if not standbys:
+            return None
+        ri = int(self.rng.integers(0, len(standbys)))
+        s = standbys[ri]
+        if s.m_local == 0:
+            return None
+        ei = int(self.rng.integers(0, s.m_local))
+        ew = np.asarray(s.ew).copy()
+        ew[ei] += 1.0
+        s.ew = jnp.asarray(ew)
+        s._host = None
+        return self._record("corrupt_replica", f"block {b} standby {ri} arc {ei}")

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from ..dynamic.session import PartitionSession, UpdateResult
 from ..dynamic.store import GraphUpdate, UpdateValidationError
@@ -119,6 +119,14 @@ class ResilientSession:
         self._consecutive_escalations = 0
         self._expected_seq = 0
         self._parked: Dict[int, GraphUpdate] = {}
+        # durable-logging attach point: called as on_commit(tx, upd, sup)
+        # at the instant a transaction commits, BEFORE the watchdog can
+        # flip degraded mode — ``sup`` is the suppress_escalation state the
+        # committed apply actually ran under, which is what a WAL replay
+        # must reproduce to stay bit-identical
+        self.on_commit: Optional[
+            Callable[[TxResult, GraphUpdate, bool], None]
+        ] = None
 
     # ------------------------------------------------------------- internals
 
@@ -172,6 +180,7 @@ class ResilientSession:
         version = self.snapshots.take()
         attempts = 0
         while True:
+            sup = self.session.suppress_escalation
             try:
                 res = self.session.update(upd)
             except Exception as e:  # apply crashed (e.g. escalation failure)
@@ -224,6 +233,10 @@ class ResilientSession:
         tx.result = res
         tx.audit = rep
         tx.retries = attempts
+        if self.on_commit is not None:
+            # before the watchdog: ``sup`` must be the state the committed
+            # apply ran under, not whatever the watchdog flips it to next
+            self.on_commit(tx, upd, sup)
         self._watchdog(res)
         tx.seconds = time.time() - t0
         return tx
@@ -285,7 +298,15 @@ class ResilientSession:
         retained versions (newest first) until a version passes — the
         recovery path for corruption that arrived OUTSIDE a transaction
         (a flipped device page, a corrupted served artifact).  Returns the
-        final report; ``ok=False`` means no retained version was clean."""
+        final report; ``ok=False`` means no retained version was clean.
+
+        Healing in degraded mode exits it — but ONLY when the final audit
+        passes: a clean bill of health supersedes the watchdog's stale
+        verdict, while an unhealed session must keep escalations
+        suppressed (they were the failure mode that degraded it).  When a
+        deployment rode through heal in a stale state (a failed migration
+        preceded the corruption), the shard set is caught up before the
+        final audit so shard health is actually re-checked, not skipped."""
         rep = self.auditor.audit()
         for v in sorted(self.snapshots.versions, reverse=True):
             if rep.ok:
@@ -298,6 +319,15 @@ class ResilientSession:
                 # path; correctness beats incrementality)
                 self.deployment.resync(full=True)
             rep = self.auditor.audit()
+        if rep.ok and self.deployment is not None and self.deployment.stale:
+            # a stale set passed only because the auditor skips stale
+            # content checks — resync and prove shard health for real
+            self.deployment.migrate(None)
+            rep = self.auditor.audit()
+        if rep.ok and self.degraded:
+            self.degraded = False
+            self.session.suppress_escalation = False
+            self._consecutive_escalations = 0
         return rep
 
     def recover(self) -> Optional[AuditReport]:

@@ -8,7 +8,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.ckpt import AsyncCheckpointer, latest_step, restore, save
+from repro.ckpt import AsyncCheckpointer, latest_step, load, restore, save
 
 
 def _tree(key, scale=1.0):
@@ -49,6 +49,81 @@ def test_async_checkpointer(tmp_path):
     # GC kept only the last two
     dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
     assert len(dirs) == 2
+
+
+def test_load_fresh_process_roundtrip(tmp_path):
+    """load() needs no ``like`` template — the disaster-restore path on a
+    process that has nothing but the directory."""
+    t = _tree(jax.random.PRNGKey(2))
+    save(str(tmp_path), 5, t, {"tag": "dr"})
+    leaves, manifest = load(str(tmp_path), 5)
+    ref = [np.asarray(x) for x in jax.tree.leaves(t)]
+    assert manifest["extra"]["tag"] == "dr"
+    assert manifest["complete"] and manifest["n_leaves"] == len(ref)
+    for a, b in zip(leaves, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_load_rejects_incomplete_and_mismatched(tmp_path):
+    t = _tree(jax.random.PRNGKey(3))
+    save(str(tmp_path), 1, t)
+    mf = tmp_path / "step_00000001" / "manifest.json"
+    m = json.loads(mf.read_text())
+    m["complete"] = False
+    mf.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="incomplete"):
+        load(str(tmp_path), 1)
+    m["complete"] = True
+    m["shapes"][0] = [1, 1]             # manifest disagrees with arrays
+    mf.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="mismatch"):
+        load(str(tmp_path), 1)
+
+
+def _flaky_save_once(monkeypatch, exc):
+    """Patch the module-level ``save`` the async worker resolves at call
+    time: first call raises, later calls hit the real writer."""
+    import repro.ckpt.checkpoint as ckpt_mod
+
+    real, calls = ckpt_mod.save, {"n": 0}
+
+    def flaky(path, step, tree, extra=None):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise exc
+        return real(path, step, tree, extra)
+
+    monkeypatch.setattr(ckpt_mod, "save", flaky)
+
+
+def test_async_checkpointer_surfaces_error_on_wait(tmp_path, monkeypatch):
+    """A failed background write is never silent: wait() re-raises it,
+    counts it, clears it — the checkpointer stays usable after."""
+    _flaky_save_once(monkeypatch, OSError("disk full (injected)"))
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree(jax.random.PRNGKey(4))
+    ck.submit(1, t)
+    with pytest.raises(OSError, match="disk full"):
+        ck.wait()
+    assert ck.failed_writes == 1
+    ck.submit(2, t)                     # error cleared: still usable
+    ck.wait()
+    assert ck.failed_writes == 1
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_async_checkpointer_surfaces_error_on_next_submit(tmp_path,
+                                                          monkeypatch):
+    _flaky_save_once(monkeypatch, OSError("injected"))
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = _tree(jax.random.PRNGKey(5))
+    ck.submit(1, t)
+    with pytest.raises(OSError, match="injected"):
+        ck.submit(2, t)                 # surfaced at the enqueue
+    assert ck.failed_writes == 1
+    ck.submit(3, t)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
 
 
 def test_elastic_reshard_across_mesh_shapes(tmp_path):

@@ -1,0 +1,383 @@
+"""Disaster recovery (ISSUE 7): durable checkpoints, WAL replay, restore.
+
+The contract under test: every COMMITTED transaction survives process
+death (RPO 0) — restore on a fresh stack loads the newest complete
+checkpoint and replays the fsynced write-ahead log through the real
+``update`` path to a **bit-identical** session (``host_digest`` equality
+against the pre-crash oracle).  A crash mid-checkpoint-write never
+corrupts the latest restorable step; WAL media corruption is confined by
+the crc framing to the torn tail; ``heal()`` timeline forks truncate
+durable state so restores land on the surviving timeline.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.deploy import ReplicatedDeployment
+from repro.dynamic import (
+    GraphUpdate,
+    PartitionSession,
+    SessionConfig,
+    UpdateValidationError,
+)
+from repro.graph import planted_partition
+from repro.resilience import (
+    DurableConfig,
+    DurableSession,
+    FaultInjector,
+    ResilientConfig,
+    ResilientSession,
+    host_digest,
+    read_wal,
+)
+from repro.resilience.durable import wal_path
+
+pytestmark = pytest.mark.resilience
+
+
+def _digests_equal(a, b):
+    assert a.keys() == b.keys()
+    for key in a:
+        np.testing.assert_array_equal(a[key], b[key], err_msg=key)
+
+
+def _stack(tmp_path, n=400, k=3, checkpoint_every=4, replicated=True,
+           audit_cadence=4, seed=0):
+    g = planted_partition(n, k, 10, 2, seed=seed)
+    sess = PartitionSession(g, SessionConfig(k=k, seed=seed))
+    dep = ReplicatedDeployment(sess, replicas=2) if replicated else None
+    rs = ResilientSession(
+        sess, deployment=dep,
+        cfg=ResilientConfig(audit_cadence=audit_cadence),
+    )
+    ds = DurableSession(rs, DurableConfig(
+        directory=str(tmp_path / "dr"), checkpoint_every=checkpoint_every,
+    ))
+    return ds
+
+
+def _batch(sess, rng, size=20):
+    u = rng.integers(0, sess.n, size)
+    v = (u + 1 + rng.integers(0, sess.n - 1, size)) % sess.n
+    return GraphUpdate.add_edges(u, v)
+
+
+# ------------------------------------------------------------- wire format
+
+
+def _wire_update(rng):
+    return GraphUpdate(
+        add_u=rng.integers(0, 100, 7), add_v=rng.integers(100, 200, 7),
+        add_w=rng.integers(1, 9, 7),
+        rem_u=rng.integers(0, 50, 3), rem_v=rng.integers(50, 100, 3),
+        rem_w=rng.integers(1, 5, 3),
+        add_node_w=rng.integers(1, 4, 2),
+    )
+
+
+def test_wire_roundtrip_all_fields():
+    rng = np.random.default_rng(0)
+    upd = _wire_update(rng)
+    out = GraphUpdate.from_bytes(upd.to_bytes())
+    for f in ("add_u", "add_v", "add_w", "rem_u", "rem_v", "rem_w",
+              "add_node_w"):
+        np.testing.assert_array_equal(getattr(upd, f), getattr(out, f), f)
+
+
+def test_wire_roundtrip_empty_update():
+    out = GraphUpdate.from_bytes(GraphUpdate().to_bytes())
+    assert out.add_u.size == 0 and out.add_node_w.size == 0
+
+
+def test_wire_rejects_bit_flips_everywhere():
+    """Seeded single-bit-flip sweep over every byte region of a record:
+    each flip either raises (never a partial object) or — only for the
+    crc-exempt header bits (flags/reserved, which carry no payload
+    meaning) — parses back to the identical update."""
+    rng = np.random.default_rng(1)
+    upd = _wire_update(rng)
+    blob = bytearray(upd.to_bytes())
+    flips = {int(rng.integers(0, len(blob))) for _ in range(64)}
+    flips |= {0, 4, 5, 6, 8, 16, 18, len(blob) - 1}  # every header field
+    rejected = 0
+    for byte in sorted(flips):
+        for bit in (0, 7):
+            mut = bytearray(blob)
+            mut[byte] ^= 1 << bit
+            try:
+                out = GraphUpdate.from_bytes(bytes(mut))
+            except UpdateValidationError as e:
+                assert e.reason.startswith("wal_"), e.reason
+                rejected += 1
+                continue
+            assert 5 <= byte <= 7, (
+                f"undetected flip at byte {byte} outside the crc-exempt "
+                f"flags/reserved header bytes"
+            )
+            np.testing.assert_array_equal(out.add_u, upd.add_u)
+    assert rejected > 100  # the sweep actually exercised the crc
+
+
+def test_wire_rejects_truncation_and_trailing():
+    blob = GraphUpdate.add_edges([1, 2], [3, 4]).to_bytes()
+    for cut in (0, 3, 19, len(blob) - 1):
+        with pytest.raises(UpdateValidationError) as ei:
+            GraphUpdate.from_bytes(blob[:cut])
+        assert ei.value.reason == "wal_truncated"
+    with pytest.raises(UpdateValidationError) as ei:
+        GraphUpdate.from_bytes(blob + b"x")
+    assert ei.value.reason == "wal_trailing"
+    with pytest.raises(UpdateValidationError) as ei:
+        GraphUpdate.from_bytes(b"NOPE" + blob[4:])
+    assert ei.value.reason == "wal_bad_magic"
+
+
+def test_wire_records_concatenate_and_resplit():
+    """Self-delimiting framing: a log of concatenated records re-splits
+    via wire_size without an outer index."""
+    rng = np.random.default_rng(2)
+    upds = [_wire_update(rng) for _ in range(4)]
+    log = b"".join(u.to_bytes() for u in upds)
+    off, seen = 0, 0
+    while off < len(log):
+        size = GraphUpdate.wire_size(log[off:])
+        out = GraphUpdate.from_bytes(log[off:off + size])
+        np.testing.assert_array_equal(out.add_u, upds[seen].add_u)
+        off += size
+        seen += 1
+    assert seen == len(upds)
+
+
+# ------------------------------------------------- kill-and-restart restore
+
+
+def test_restore_bit_identical_after_kill(tmp_path):
+    """The acceptance drill: commits -> (no shutdown) -> fresh-process
+    restore loads the checkpoint, replays the WAL, and lands bit-identical
+    to the pre-crash digest — with the transactional sequence state intact
+    so the stream resumes seamlessly."""
+    ds = _stack(tmp_path, checkpoint_every=3)
+    rng = np.random.default_rng(0)
+    for i in range(8):      # 2 checkpoints + 2 WAL records past the anchor
+        assert ds.submit(_batch(ds.session, rng), seq=i).committed
+    assert ds.checkpoints_written >= 2
+    assert ds._wal.records_appended >= 1
+    pre = host_digest(ds.session)
+    pre_seq = ds.rs._expected_seq
+
+    ds2, rep = DurableSession.restore(str(tmp_path / "dr"))
+    assert rep.records_replayed >= 1
+    assert rep.wal_tail_error is None and rep.wal_bytes_dropped == 0
+    _digests_equal(host_digest(ds2.session), pre)
+    assert ds2.rs._expected_seq == pre_seq
+    # the restored stack serves: deployment rebuilt, stream continues
+    assert isinstance(ds2.rs.deployment, ReplicatedDeployment)
+    assert ds2.rs.auditor.audit().ok
+    tx = ds2.submit(_batch(ds2.session, rng), seq=pre_seq)
+    assert tx.committed
+
+
+def test_restore_replays_degraded_mode_flags(tmp_path):
+    """WAL records carry the suppress_escalation flag the committed apply
+    ran under, so a replay reproduces degraded-mode applies (repairs that
+    skipped escalation) bit-for-bit."""
+    ds = _stack(tmp_path, checkpoint_every=100, audit_cadence=100)
+    rng = np.random.default_rng(1)
+    ds.submit(_batch(ds.session, rng))
+    ds.session.suppress_escalation = True   # operator-forced degraded apply
+    ds.rs.degraded = True
+    ds.submit(_batch(ds.session, rng, size=60))
+    records, _, err = read_wal(wal_path(str(tmp_path / "dr"),
+                                        ds.anchor_step))
+    assert err is None
+    assert [r.suppress for r in records] == [False, True]
+    pre = host_digest(ds.session)
+    ds2, _ = DurableSession.restore(str(tmp_path / "dr"))
+    _digests_equal(host_digest(ds2.session), pre)
+    assert ds2.session.suppress_escalation and ds2.rs.degraded
+
+
+def test_restore_without_deployment(tmp_path):
+    ds = _stack(tmp_path, replicated=False)
+    rng = np.random.default_rng(2)
+    for _ in range(2):
+        ds.submit(_batch(ds.session, rng))
+    pre = host_digest(ds.session)
+    ds2, _ = DurableSession.restore(str(tmp_path / "dr"))
+    assert ds2.rs.deployment is None
+    _digests_equal(host_digest(ds2.session), pre)
+
+
+# ------------------------------------------------------ crash-window safety
+
+
+def test_mid_checkpoint_crash_never_corrupts_latest(tmp_path):
+    """A kill inside the checkpoint write window (torn .tmp, no rename)
+    leaves the previous checkpoint + the still-extending WAL as the
+    restorable state: RPO stays 0 because the WAL covers every commit the
+    failed checkpoint would have absorbed."""
+    ds = _stack(tmp_path, checkpoint_every=100)
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        ds.submit(_batch(ds.session, rng))
+    anchor_before = ds.anchor_step
+    FaultInjector(0).fail_mid_checkpoint(ds)
+    assert ds.checkpoint() is None          # the injected crash
+    assert ds.failed_checkpoints == 1
+    assert ckpt.latest_step(str(tmp_path / "dr")) == anchor_before
+    # the torn .tmp is on disk but invisible to recovery
+    torn = [d for d in os.listdir(tmp_path / "dr") if d.endswith(".tmp")]
+    assert torn
+    pre = host_digest(ds.session)
+    ds2, rep = DurableSession.restore(str(tmp_path / "dr"))
+    assert rep.checkpoint_step == anchor_before
+    assert rep.records_replayed == 3
+    _digests_equal(host_digest(ds2.session), pre)
+    # the next checkpoint attempt (hook consumed) succeeds and rotates
+    assert ds.checkpoint() is not None
+    assert ds._commits_since_ckpt == 0
+
+
+def test_disarmed_injector_leaves_no_global_patch(tmp_path):
+    """fail_mid_checkpoint patches the process-global ckpt.save; retiring
+    the injector without the hook firing must restore it (regression: a
+    leaked patch crashed the NEXT campaign's first checkpoint)."""
+    ds = _stack(tmp_path, replicated=False, checkpoint_every=100)
+    inj = FaultInjector(0)
+    inj.fail_mid_checkpoint(ds)
+    inj.disarm()
+    assert ds.checkpoint() is not None
+    assert ds.failed_checkpoints == 0
+
+
+def test_double_armed_checkpoint_hook_does_not_stack(tmp_path):
+    """Arming fail_mid_checkpoint twice must not stack patches — a
+    stacked hook would capture the FIRST hook as the 'real' writer and
+    re-install it on fire (regression: ckpt.save stayed hooked across
+    fuzz episodes)."""
+    ds = _stack(tmp_path, replicated=False, checkpoint_every=100)
+    inj = FaultInjector(0)
+    assert inj.fail_mid_checkpoint(ds) is not None
+    assert inj.fail_mid_checkpoint(ds) is None
+    assert ds.checkpoint() is None      # the one-shot fires exactly once
+    assert ds.checkpoint() is not None  # and the real writer is back
+
+
+def test_wal_corruption_confined_to_tail(tmp_path):
+    """A bit flip in the WAL drops the torn tail, never the clean prefix:
+    restore lands on the surviving step, reports the damage, truncates the
+    file so future appends stay parseable, and replay stays deterministic
+    (two restores from the same disk state are bit-identical)."""
+    ds = _stack(tmp_path, checkpoint_every=100, audit_cadence=100)
+    rng = np.random.default_rng(4)
+    for _ in range(4):
+        ds.submit(_batch(ds.session, rng))
+    path = wal_path(str(tmp_path / "dr"), ds.anchor_step)
+    clean, _, _ = read_wal(path)
+    assert len(clean) == 4
+    # corrupt the LAST record's payload so a clean prefix survives
+    size = os.path.getsize(path)
+    last = size - 8
+    with open(path, "r+b") as f:
+        f.seek(last)
+        b = f.read(1)
+        f.seek(last)
+        f.write(bytes([b[0] ^ 0x10]))
+    live_step = ds.session._step
+    ds2, rep = DurableSession.restore(str(tmp_path / "dr"))
+    assert rep.wal_tail_error is not None
+    assert rep.wal_bytes_dropped > 0
+    assert rep.records_replayed == 3
+    assert ds2.session._step == live_step - 1
+    ds3, rep3 = DurableSession.restore(str(tmp_path / "dr"))
+    assert rep3.wal_tail_error is None      # restore truncated the tail
+    _digests_equal(host_digest(ds3.session), host_digest(ds2.session))
+
+
+# --------------------------------------------------------- timeline forks
+
+
+def test_heal_truncates_forked_wal(tmp_path):
+    """heal() that rolls back committed batches truncates the WAL (and
+    drops newer checkpoints) so a later restore lands on the HEALED
+    timeline, not the corrupt future it rolled away from."""
+    ds = _stack(tmp_path, checkpoint_every=100, audit_cadence=100,
+                replicated=False)
+    rng = np.random.default_rng(5)
+    ds.submit(_batch(ds.session, rng))
+    FaultInjector(1).corrupt_base_csr(ds.session.store)
+    for _ in range(2):      # commits on the corrupt base enter the WAL
+        ds.submit(_batch(ds.session, rng))
+    forked_step = ds.session._step
+    assert forked_step == 3
+    rep = ds.heal()
+    assert rep.ok
+    healed_step = ds.session._step
+    assert healed_step < forked_step        # rolled past the corruption
+    records, _, err = read_wal(wal_path(str(tmp_path / "dr"),
+                                        ds.anchor_step))
+    assert err is None
+    assert all(r.step <= healed_step for r in records)
+    pre = host_digest(ds.session)
+    ds2, _ = DurableSession.restore(str(tmp_path / "dr"))
+    _digests_equal(host_digest(ds2.session), pre)
+    # the healed timeline keeps extending durably
+    assert ds.submit(_batch(ds.session, rng)).committed
+    pre = host_digest(ds.session)
+    ds3, _ = DurableSession.restore(str(tmp_path / "dr"))
+    _digests_equal(host_digest(ds3.session), pre)
+
+
+def test_heal_below_every_checkpoint_reanchors(tmp_path):
+    """A rollback below the oldest retained checkpoint re-anchors with a
+    fresh one (restorability is never lost to a deep heal)."""
+    g = planted_partition(300, 3, 10, 2, seed=0)
+    sess = PartitionSession(g, SessionConfig(k=3, seed=0))
+    rs = ResilientSession(sess, cfg=ResilientConfig(audit_cadence=100))
+    rng = np.random.default_rng(6)
+    rs.submit(_batch(sess, rng))            # snapshot predates durability
+    ds = DurableSession(rs, DurableConfig(
+        directory=str(tmp_path / "dr"), checkpoint_every=100,
+    ))
+    FaultInjector(2).corrupt_base_csr(sess.store)
+    rep = ds.heal()                          # rolls below the anchor
+    assert rep.ok
+    assert ds.anchor_step == sess._step
+    pre = host_digest(sess)
+    ds2, rep2 = DurableSession.restore(str(tmp_path / "dr"))
+    assert rep2.records_replayed == 0
+    _digests_equal(host_digest(ds2.session), pre)
+
+
+# ------------------------------------------------------------ housekeeping
+
+
+def test_checkpoint_rotation_and_pruning(tmp_path):
+    ds = _stack(tmp_path, checkpoint_every=2)
+    rng = np.random.default_rng(7)
+    for i in range(10):
+        ds.submit(_batch(ds.session, rng), seq=i)
+    d = str(tmp_path / "dr")
+    steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                   if x.startswith("step_") and not x.endswith(".tmp"))
+    assert len(steps) == ds.cfg.keep_checkpoints
+    wals = sorted(x for x in os.listdir(d) if x.startswith("wal_"))
+    # WALs are kept only for retained checkpoints
+    assert wals == [f"wal_{s:08d}.log" for s in steps]
+
+
+def test_quarantined_batches_never_enter_wal(tmp_path):
+    """Only COMMITS are durably logged: a validation-rejected batch leaves
+    the WAL untouched, so replay never sees poison."""
+    ds = _stack(tmp_path, checkpoint_every=100, replicated=False)
+    rng = np.random.default_rng(8)
+    ds.submit(_batch(ds.session, rng))
+    bad = GraphUpdate.add_edges([ds.session.n + 5], [0])
+    tx = ds.submit(bad)
+    assert tx.quarantined
+    records, _, _ = read_wal(wal_path(str(tmp_path / "dr"),
+                                      ds.anchor_step))
+    assert len(records) == 1

@@ -479,6 +479,83 @@ def test_full_seeded_fault_suite_every_fault_recovered():
     assert len({f.kind for f in inj.log}) >= 4
 
 
+# ------------------------------------------------- heal() while degraded
+
+
+def test_heal_while_degraded_with_deployed_shards_exits_on_clean_audit():
+    """ISSUE 7 satellite: heal() invoked while the session is in degraded
+    mode WITH a deployed shard set — corruption is rolled back, lost
+    shards are re-synced, and degraded mode clears precisely because the
+    final audit passed."""
+    sess = _session(escalate_cut_ratio=1.0001)   # hair-trigger guard
+    dep = ShardDeployment(sess, halo=1)
+    rs = ResilientSession(
+        sess, deployment=dep,
+        cfg=ResilientConfig(max_consecutive_escalations=2,
+                            audit_cadence=100),
+    )
+    rng = np.random.default_rng(20)
+    for _ in range(5):
+        rs.submit(_batch(sess, rng, size=120))
+    assert rs.degraded and sess.suppress_escalation
+    inj = FaultInjector(seed=21)
+    inj.corrupt_labels(sess)
+    inj.lose_shard(dep, block=0)
+    rep = rs.heal()
+    assert rep.ok, rep.failures
+    assert not rs.degraded and not sess.suppress_escalation
+    assert not dep.stale
+    assert all(s is not None for s in dep.shards)
+    assert "shards:reassembly_checksum" in rep.checked
+    # the healed session keeps serving transactionally
+    assert rs.submit(_batch(sess, rng)).committed
+
+
+def test_heal_while_degraded_catches_up_stale_shards():
+    """A stale shard set (failed migration) rode into degraded mode: heal
+    must catch the set up and PROVE shard health — the final audit checks
+    content, it doesn't skip-as-stale."""
+    sess = _session(escalate_cut_ratio=1.0001)
+    dep = ShardDeployment(sess, halo=1)
+    rs = ResilientSession(
+        sess, deployment=dep,
+        cfg=ResilientConfig(max_consecutive_escalations=2,
+                            audit_cadence=100),
+    )
+    rng = np.random.default_rng(22)
+    inj = FaultInjector(seed=23)
+    for _ in range(5):
+        rs.submit(_batch(sess, rng, size=120))
+    assert rs.degraded
+    inj.fail_next_extract(dep)
+    tx = rs.submit(_batch(sess, rng))
+    assert tx.committed and tx.migration_failed and dep.stale
+    rep = rs.heal()
+    assert rep.ok, rep.failures
+    assert not dep.stale
+    assert not rs.degraded
+    assert "shards:reassembly_checksum" in rep.checked
+    assert "shards:skipped_stale" not in rep.checked
+
+
+def test_heal_unhealable_corruption_stays_degraded():
+    """The negative half of the contract: with no clean version to roll
+    back to, heal reports failure and degraded mode (and its escalation
+    suppression) must NOT clear — a dirty bill of health never re-arms
+    escalation."""
+    sess = _session()
+    dep = ShardDeployment(sess, halo=1)
+    rs = ResilientSession(
+        sess, deployment=dep, cfg=ResilientConfig(audit_cadence=100)
+    )
+    rs.degraded = True
+    sess.suppress_escalation = True
+    FaultInjector(seed=24).corrupt_base_csr(sess.store)
+    rep = rs.heal()                 # empty ring: nothing rolls it back
+    assert not rep.ok
+    assert rs.degraded and sess.suppress_escalation
+
+
 # ----------------------------------------------------- escalation satellite
 
 

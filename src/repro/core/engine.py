@@ -647,6 +647,7 @@ class LPEngine:
         balance_rounds: int = 3,
         seed: int = 0,
         hop_degree_cap: Optional[int] = None,
+        adjacency: Optional[Tuple[jax.Array, ...]] = None,
     ) -> Tuple[jax.Array, int, float, np.ndarray]:
         """Incremental size-constrained repair after a graph mutation.
 
@@ -671,6 +672,17 @@ class LPEngine:
         ``None`` or a non-positive value disables the cap (bit-identical
         to the uncapped expansion).
 
+        ``adjacency`` (the ISSUE-8 overlay-aware path) substitutes device
+        ``(indptr, src, dst, ew)`` arrays — e.g. a
+        :meth:`~repro.dynamic.store.DynamicGraphStore.view` of base CSR +
+        uncompacted overlay — for ``g``'s own arcs in every arc consumer
+        (region expansion, pack gather, gain rounds, the guard's cuts).
+        ``g`` still supplies the node set, node weights, and cache
+        identity, which must describe the SAME node set as the adjacency;
+        because all those consumers are insensitive to within-row arc
+        order and to inert padding, repairing on a view is bit-identical
+        to compacting first (regression-tested in tests/test_throughput).
+
         Every kernel is shape-bucketed with traced live counts, so a steady
         update stream compiles once per bucket (``repair_compiles ==
         repair_bucket_count``).  Returns ``(arena labels, region size, cut,
@@ -691,37 +703,48 @@ class LPEngine:
         self.stats.repair_calls += 1
         n = g.n
         ar = self._arena(g)
+        if adjacency is not None:
+            ip, a_src, a_dst, a_ew = adjacency[:4]
+        else:
+            ip = self._indptr_dev(g)
+            a_src, a_dst, a_ew = ar.src, ar.dst, ar.ew
+
+        def cut_now(labels_: jax.Array) -> float:
+            if adjacency is None:
+                return self.cut(g, labels_)
+            diff = labels_[a_src] != labels_[a_dst]
+            return float(jnp.sum(jnp.where(diff, a_ew, 0.0)) / 2.0)
+
         lab = self.to_arena(labels, n, fill=k)
         t_ids = np.unique(np.asarray(touched, dtype=np.int64))
         t_ids = t_ids[(t_ids >= 0) & (t_ids < n)].astype(np.int32)
         if t_ids.size == 0:
-            return lab, 0, self.cut(g, lab), self.block_weights(g, lab, k)
+            return lab, 0, cut_now(lab), self.block_weights(g, lab, k)
         # ---- h-hop affected region (device frontier expansion) ----
         Tb = _pow2(max(t_ids.size, 8))
         tpad = np.full(Tb, n, np.int32)
         tpad[: t_ids.size] = t_ids
         self.stats.h2d_bytes += tpad.nbytes
-        ip = self._indptr_dev(g)
         # None and <= 0 both disable the cap (the session's "0 = off"
         # convention holds at the engine too — a literal cap of 0 would
         # silently freeze expansion at hop 1)
         cap = (0x7FFFFFFF if hop_degree_cap is None or hop_degree_cap <= 0
                else int(hop_degree_cap))
         self._note_repair_key(
-            ("frontier", Tb, ar.src.shape[0], ip.shape[0], self.A)
+            ("frontier", Tb, a_src.shape[0], ip.shape[0], self.A)
         )
         mask = expand_region_device(
-            jnp.asarray(tpad), ar.src, ar.dst, ip, jnp.int32(n),
+            jnp.asarray(tpad), a_src, a_dst, ip, jnp.int32(n),
             jnp.int32(hops), jnp.int32(cap), A=self.A,
         )
         mask_np = np.asarray(mask[:n])
         self.stats.d2h_bytes += mask_np.nbytes
         region = np.flatnonzero(mask_np)
         if region.size == 0:
-            return lab, 0, self.cut(g, lab), self.block_weights(g, lab, k)
+            return lab, 0, cut_now(lab), self.block_weights(g, lab, k)
         # ---- region pack: host O(region) plan, device O(region m) gather
         order = np.random.default_rng(seed).permutation(region).astype(np.int64)
-        if isinstance(g, GraphDev):
+        if adjacency is not None or isinstance(g, GraphDev):
             # region degrees gathered ON device: every compaction hands
             # repair a fresh handle whose O(n) host degree cache is cold,
             # so g.degrees() here would download the full indptr per update
@@ -747,10 +770,10 @@ class LPEngine:
         nv_d = jnp.asarray(node_valid)
         self.stats.h2d_bytes += nodes.nbytes + node_valid.nbytes
         self._note_repair_key(
-            ("gather", nodes.shape, ip.shape[0], ar.dst.shape[0], Eb)
+            ("gather", nodes.shape, ip.shape[0], a_dst.shape[0], Eb)
         )
         edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
-            nodes_d, nv_d, ip, ar.dst, ar.ew, jnp.int32(n), E=Eb
+            nodes_d, nv_d, ip, a_dst, a_ew, jnp.int32(n), E=Eb
         )
         dp = _DevicePack(
             graph=g, nodes=nodes_d, node_valid=nv_d, edge_dst=edge_dst,
@@ -762,7 +785,7 @@ class LPEngine:
             ar.nw_arena
         )
         bw_old_max = float(jnp.max(bw[:k]))
-        before_cut = self.cut(g, lab)
+        before_cut = cut_now(lab)
         w0 = bw.at[k].set(jnp.inf)
         self._note_repair_key(("sweep", dp.shape, self.A, k + 1, iters))
         out, _, _ = self._sweep(
@@ -775,9 +798,9 @@ class LPEngine:
         for r in range(gain_rounds):
             base_s = hash_base_u32(seed, r, TAG_DYN_GAIN)
             base_g = hash_base_u32(seed, r, TAG_DYN_GAIN_GATE)
-            self._note_repair_key(("gain", self.A, ar.src.shape[0], Kb))
+            self._note_repair_key(("gain", self.A, a_src.shape[0], Kb))
             out = gain_round_device(
-                ar.src, ar.dst, ar.ew, ar.nw_arena, out, mask,
+                a_src, a_dst, a_ew, ar.nw_arena, out, mask,
                 jnp.int32(n), jnp.int32(k), jnp.float32(U),
                 jnp.uint32(base_s), jnp.uint32(base_g), Kb=Kb,
             )
@@ -798,7 +821,7 @@ class LPEngine:
             ar.nw_arena
         )
         bw_new_max = float(jnp.max(bw_new[:k]))
-        after_cut = self.cut(g, out)
+        after_cut = cut_now(out)
         self.stats.d2h_bytes += 16  # the guard's two cut + two bw scalars
         ok_cut = (
             after_cut <= before_cut

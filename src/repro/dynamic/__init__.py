@@ -14,16 +14,23 @@ Three layers (ISSUE 4):
   loop: batched update requests in, repaired device-resident labels out,
   with a cut/imbalance quality guard that escalates to a full multilevel
   ``partition()`` when local repair can no longer hold quality.
+* :mod:`repro.dynamic.group` — :class:`SessionGroup`, the multi-tenant
+  throughput layer (ISSUE 8): vmapped repair over a bucketed batch of
+  independent sessions, serving a merged update stream with per-tenant
+  solo bit-parity.
 """
 
+from .group import GroupStats, SessionGroup
 from .session import PartitionSession, SessionConfig, UpdateResult
 from .store import DynamicGraphStore, GraphUpdate, UpdateValidationError
 
 __all__ = [
     "DynamicGraphStore",
     "GraphUpdate",
+    "GroupStats",
     "PartitionSession",
     "SessionConfig",
+    "SessionGroup",
     "UpdateResult",
     "UpdateValidationError",
 ]

@@ -1,0 +1,442 @@
+"""Multi-tenant throughput mode (dynamic subsystem, layer 4 — ISSUE 8).
+
+One serving process rarely hosts ONE graph: the north-star workload is many
+independent (graph, partition) sessions — tenants — each absorbing its own
+update stream.  Serving them one ``session.update`` at a time leaves the
+device idle between small repair kernels.  :class:`SessionGroup` batches
+the repair across tenants instead: every per-tenant repair kernel (frontier
+expansion, region-pack gather, the chunked LP sweep, gain and balance
+rounds, the guard's cut/weight reductions) is ``vmap``-ped over a tenant
+axis — the same population-axis trick ``evolve_device`` plays — so a
+bucket of compatible tenants costs ONE executable dispatch per kernel
+instead of T.
+
+Bucketing: tenants batch together when their compiled shapes agree —
+``(arena A, arc bucket Mb, indptr bucket, k, pack geometry, repair
+config)``.  Within a bucket, per-step quantities that differ (live counts
+n/m, region sizes, chunk counts, seeds, L_max) ride as traced per-lane
+scalars, and host-planned layouts are padded to shared pow2 buckets
+(touched Tb, chunks Cb, edge capacity Eb).  All padding is label-inert —
+padded touched slots carry the sentinel ``n``, padded chunks are never
+visited by the sweep's traced chunk loop, padded edges are invalid — so
+every lane's labels are **bit-identical to a solo** ``session.update`` of
+the same stream (regression-tested), and one executable per bucket serves
+the whole group (``group_compiles == group_bucket_count``).
+
+Updates that change the node set (adds or removals), net no-ops, and
+post-repair escalations fall back to the solo path per tenant — the group
+only accelerates the steady edge-churn regime, which is where throughput
+lives.  The merged update stream API (:meth:`SessionGroup.update_many`)
+accepts an interleaved ``(tenant, update)`` stream and coalesces multiple
+updates per tenant into one batch per step (:meth:`GraphUpdate.merged`).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import _pow2
+from ..core.label_propagation import _lp_sweep, hash_base_u32
+from ..graph.packing import gather_pack_device, plan_region_pack
+from .repair import (
+    TAG_DYN_GAIN,
+    TAG_DYN_GAIN_GATE,
+    balance_rounds_device,
+    expand_region_device,
+    gain_round_device,
+)
+from .session import PartitionSession, UpdateResult
+from .store import GraphUpdate
+
+__all__ = ["SessionGroup", "GroupStats"]
+
+
+# ---------------------------------------------------------------- kernels
+#
+# Each group kernel is jit(vmap(solo kernel)): the solo kernel's traced
+# scalars become (T,) per-lane arrays, shared statics stay static, and
+# values identical across lanes (hops, k, the restrict dummy) ride as
+# unbatched closure captures.  Compilation caches on the batched shapes,
+# so a steady group stream compiles once per bucket.
+
+@functools.partial(jax.jit, static_argnames=("A",))
+def _group_expand(touched, src, dst, indptr, n, hops, cap, *, A: int):
+    return jax.vmap(
+        lambda t, s, d, i, nn, cc: expand_region_device(
+            t, s, d, i, nn, hops, cc, A=A
+        )
+    )(touched, src, dst, indptr, n, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("E",))
+def _group_gather(nodes, nv, indptr, indices, ew, n, *, E: int):
+    return jax.vmap(
+        lambda a, b, c, d, e, f: gather_pack_device(a, b, c, d, e, f, E=E)
+    )(nodes, nv, indptr, indices, ew, n)
+
+
+@functools.partial(jax.jit, static_argnames=("Kb",))
+def _group_bw(nwa, lab, *, Kb: int):
+    return jax.vmap(
+        lambda nw, l: jnp.zeros((Kb,), jnp.float32)
+        .at[jnp.minimum(l, Kb - 1)].add(nw)
+    )(nwa, lab)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def _group_sweep(nodes, nv, ed, ew_, es, ev, lab, w0, nwa, U, seed, k,
+                 nchunks, *, iters: int):
+    restrict = jnp.zeros(1, jnp.int32)
+
+    def one(a, b, c, d, e, f, l, w, nw, u, s, nc):
+        out, _, _ = _lp_sweep(
+            a, b, c, d, e, f, l, w, nw, restrict, u, s, k, nc,
+            iters=iters, refine_mode=True, use_restrict=False,
+            permute_chunks=True,
+        )
+        return out
+
+    return jax.vmap(one)(nodes, nv, ed, ew_, es, ev, lab, w0, nwa, U, seed,
+                         nchunks)
+
+
+@functools.partial(jax.jit, static_argnames=("Kb",))
+def _group_gain(src, dst, ew, nwa, lab, region, n, k, U, bs, bg, *, Kb: int):
+    return jax.vmap(
+        lambda s, d, e, w, l, r, nn, u, a, b: gain_round_device(
+            s, d, e, w, l, r, nn, k, u, a, b, Kb=Kb
+        )
+    )(src, dst, ew, nwa, lab, region, n, U, bs, bg)
+
+
+@functools.partial(jax.jit, static_argnames=("Kb", "rounds"))
+def _group_balance(nwa, lab, region, n, k, U, seed, *, Kb: int, rounds: int):
+    return jax.vmap(
+        lambda w, l, r, nn, u, s: balance_rounds_device(
+            w, l, r, nn, k, u, s, Kb=Kb, rounds=rounds
+        )
+    )(nwa, lab, region, n, U, seed)
+
+
+@functools.partial(jax.jit, static_argnames=("Kb",))
+def _group_score(src, dst, ew, nwa, lab_in, lab_out, *, Kb: int):
+    def one(s, d, e, nw, li, lo):
+        cut_i = jnp.sum(jnp.where(li[s] != li[d], e, 0.0)) / 2.0
+        cut_o = jnp.sum(jnp.where(lo[s] != lo[d], e, 0.0)) / 2.0
+        bw_o = jnp.zeros((Kb,), jnp.float32).at[
+            jnp.minimum(lo, Kb - 1)
+        ].add(nw)
+        ews = jnp.sum(e) / 2.0
+        return cut_i, cut_o, bw_o, ews
+
+    return jax.vmap(one)(src, dst, ew, nwa, lab_in, lab_out)
+
+
+@jax.jit
+def _group_select(ok, out, lab):
+    return jnp.where(ok[:, None], out, lab)
+
+
+@dataclass
+class GroupStats:
+    """Counters surfaced through ``SessionGroup.stats()``."""
+
+    group_steps: int = 0            # update_many calls that dispatched a group
+    lanes_repaired: int = 0         # tenant-updates served by vmapped repair
+    solo_fallbacks: int = 0         # tenant-updates served by session.update
+    noops: int = 0                  # net no-op tenant-updates
+    coalesced: int = 0              # extra updates merged into a tenant batch
+    group_compiles: int = 0         # distinct group-kernel shape buckets
+    group_buckets: set = field(default_factory=set)
+
+    @property
+    def group_bucket_count(self) -> int:
+        return len(self.group_buckets)
+
+
+class SessionGroup:
+    """Serve a fleet of :class:`PartitionSession` tenants with vmapped
+    repair.  Tenants keep their full solo identity (store, engine, labels,
+    trajectory, escalation guard) — the group only batches the device work
+    of compatible tenants, so any tenant can leave the group and continue
+    solo bit-identically at any step."""
+
+    def __init__(self, sessions: Mapping[str, PartitionSession]):
+        if not sessions:
+            raise ValueError("SessionGroup needs at least one session")
+        self.sessions: Dict[str, PartitionSession] = dict(sessions)
+        self.stats = GroupStats()
+        self._bucket_E: Dict[tuple, int] = {}   # sticky shared edge buckets
+
+    def _note(self, key) -> None:
+        if key not in self.stats.group_buckets:
+            self.stats.group_buckets.add(key)
+            self.stats.group_compiles += 1
+
+    # ------------------------------------------------------------- public
+
+    def update_many(
+        self, updates: Iterable[Tuple[str, GraphUpdate]]
+    ) -> Dict[str, UpdateResult]:
+        """Absorb one merged update stream: coalesce per tenant, batch the
+        eligible lanes into vmapped repair buckets, fall back to solo
+        ``session.update`` for the rest (node adds, no-ops that aren't,
+        anything the group cannot batch).  Returns the newest
+        :class:`UpdateResult` per updated tenant; per-lane ``seconds`` is
+        the group step's wall time amortized over its lanes (the per-update
+        cost a throughput consumer sees).
+
+        Every update is validated up front, before ANY tenant's state
+        moves — a bad batch aborts the whole call with all sessions
+        bit-identical to entry (the solo path's atomicity, lifted to the
+        group)."""
+        # ---- coalesce the interleaved stream: one batch per tenant ----
+        per: Dict[str, GraphUpdate] = {}
+        order: List[str] = []
+        for name, upd in updates:
+            if name not in self.sessions:
+                raise KeyError(f"unknown tenant {name!r}")
+            if name in per:
+                per[name] = per[name].merged(upd)
+                self.stats.coalesced += 1
+            else:
+                per[name] = upd
+                order.append(name)
+        for name in order:
+            per[name].validate(self.sessions[name].store.n)
+        results: Dict[str, UpdateResult] = {}
+        lanes = []      # eligible: (sess, upd, net_u, net_v)
+        for name in order:
+            sess, upd = self.sessions[name], per[name]
+            net_u, net_v, _ = upd.net_arcs(
+                max(sess.store.n + upd.num_new_nodes, 1)
+            )
+            if net_u.size == 0 and upd.num_new_nodes == 0:
+                results[name] = sess.update(upd)     # solo no-op (cheap)
+                self.stats.noops += 1
+            elif upd.num_new_nodes:
+                results[name] = sess.update(upd)     # node churn: solo
+                self.stats.solo_fallbacks += 1
+            else:
+                lanes.append((name, sess, upd, net_u, net_v))
+        if not lanes:
+            return results
+        t0 = time.time()
+        # ---- apply + compact per lane, bucket by compiled shapes ----
+        buckets: Dict[tuple, list] = {}
+        for name, sess, upd, net_u, net_v in lanes:
+            sess._step += 1
+            sess.store.apply(upd)
+            g = sess.store.graph()
+            sess._maybe_rebuild_engine()
+            if id(g) != sess._base_id:
+                sess.engine.evict(keep=(g,))
+                sess._base_id = id(g)
+            eng, cfg = sess.engine, sess.cfg
+            gkey = (
+                eng.A, g.indices.shape[0], g.indptr.shape[0], sess.k,
+                eng.N, eng._e_request, eng.pack_block, cfg.hops,
+                cfg.repair_iters, cfg.gain_rounds, cfg.balance_rounds,
+            )
+            buckets.setdefault(gkey, []).append(
+                (name, sess, g, net_u, net_v)
+            )
+        for gkey, members in buckets.items():
+            self._dispatch_bucket(gkey, members, results)
+        elapsed = time.time() - t0
+        nl = max(len(lanes), 1)
+        for name, *_ in lanes:
+            results[name].seconds = elapsed / nl
+        self.stats.group_steps += 1
+        return results
+
+    # ------------------------------------------------------------ internals
+
+    def _dispatch_bucket(self, gkey, members, results) -> None:
+        (A, Mb, ipb, k, Npack, e_req, pblock, hops, iters, gain_rounds,
+         balance_rounds) = gkey
+        T = len(members)
+        Kb = k + 1
+        # ---- per-lane host planning (mirrors LPEngine.repair 1:1) ----
+        seeds, caps, ns, Us = [], [], [], []
+        tpads, labs, nwas, srcs, dsts, ews, ips = [], [], [], [], [], [], []
+        t_sizes = []
+        for name, sess, g, net_u, net_v in members:
+            ar = sess.engine._arena(g)
+            seeds.append(
+                (sess.cfg.seed * 0x9E3779B1 + sess._step) & 0x7FFFFFFF
+            )
+            hc = sess._hop_cap()
+            # same conversion LPEngine.repair applies: None / <= 0 = uncapped
+            caps.append(0x7FFFFFFF if hc is None or hc <= 0 else int(hc))
+            ns.append(g.n)
+            Us.append(sess._lmax())
+            touched = np.concatenate([net_u, net_v])
+            t_ids = np.unique(touched.astype(np.int64))
+            t_ids = t_ids[(t_ids >= 0) & (t_ids < g.n)].astype(np.int32)
+            t_sizes.append(max(t_ids.size, 8))
+            tpads.append(t_ids)
+            labs.append(sess.labels)
+            nwas.append(ar.nw_arena)
+            srcs.append(ar.src)
+            dsts.append(ar.dst)
+            ews.append(ar.ew)
+            ips.append(g.indptr)
+        Tb = _pow2(max(t_sizes))
+        tp = np.empty((T, Tb), np.int32)
+        for i, t_ids in enumerate(tpads):
+            tp[i] = ns[i]
+            tp[i, : t_ids.size] = t_ids
+        n_d = jnp.asarray(np.asarray(ns, np.int32))
+        cap_d = jnp.asarray(np.asarray(caps, np.int32))
+        seed_d = jnp.asarray(np.asarray(seeds, np.int32))
+        U_d = jnp.asarray(np.asarray(Us, np.float32))
+        src_s = jnp.stack(srcs)
+        dst_s = jnp.stack(dsts)
+        ew_s = jnp.stack(ews)
+        ip_s = jnp.stack(ips)
+        lab_s = jnp.stack(labs)
+        nwa_s = jnp.stack(nwas)
+        self._note(("gexpand", T, Tb, Mb, ipb, A))
+        masks = _group_expand(
+            jnp.asarray(tp), src_s, dst_s, ip_s, n_d, jnp.int32(hops),
+            cap_d, A=A,
+        )
+        masks_np = np.asarray(masks)
+        # ---- region pack per lane, padded to shared (Cb, Npack, Eb) ----
+        plans = []
+        E_need = 0
+        C_need = 1
+        for i, (name, sess, g, _, _) in enumerate(members):
+            region = np.flatnonzero(masks_np[i, : ns[i]])
+            order = np.random.default_rng(seeds[i]).permutation(
+                region
+            ).astype(np.int64)
+            oi = jnp.asarray(order.astype(np.int32))
+            deg_r = np.asarray(ip_s[i][oi + 1] - ip_s[i][oi]).astype(np.int64)
+            nodes, node_valid, C, N, E = plan_region_pack(
+                deg_r, order, ns[i], max_nodes=Npack, max_edges=e_req,
+                block=pblock,
+            )
+            plans.append((nodes, node_valid, C, N, region.size))
+            E_need = max(E_need, E)
+            C_need = max(C_need, C)
+        Cb = _pow2(C_need)
+        ekey = gkey
+        Eb = max(self._bucket_E.get(ekey, 0), -(-E_need // 512) * 512)
+        self._bucket_E[ekey] = Eb
+        nodes_b = np.empty((T, Cb, Npack), np.int32)
+        nv_b = np.zeros((T, Cb, Npack), bool)
+        nchunks = np.empty(T, np.int32)
+        for i, (nodes, node_valid, C, N, _) in enumerate(plans):
+            nodes_b[i] = ns[i]
+            nodes_b[i, :C, :N] = nodes
+            nv_b[i, :C, :N] = node_valid
+            nchunks[i] = C
+        nodes_d = jnp.asarray(nodes_b)
+        nv_d = jnp.asarray(nv_b)
+        nc_d = jnp.asarray(nchunks)
+        self._note(("ggather", T, Cb, Npack, ipb, Mb, Eb))
+        ed, ew_p, es, ev = _group_gather(
+            nodes_d, nv_d, ip_s, dst_s, ew_s, n_d, E=Eb
+        )
+        # ---- sweep + gain + balance, all lanes at once ----
+        bw0 = _group_bw(nwa_s, lab_s, Kb=Kb)
+        w0 = bw0.at[:, Kb - 1].set(jnp.inf)
+        self._note(("gsweep", T, Cb, Npack, Eb, A, Kb, iters))
+        out = _group_sweep(
+            nodes_d, nv_d, ed, ew_p, es, ev, lab_s, w0, nwa_s, U_d,
+            seed_d, jnp.int32(k), nc_d, iters=iters,
+        )
+        for r in range(gain_rounds):
+            bs = jnp.asarray(np.asarray(
+                [hash_base_u32(s, r, TAG_DYN_GAIN) for s in seeds],
+                np.uint32,
+            ))
+            bg = jnp.asarray(np.asarray(
+                [hash_base_u32(s, r, TAG_DYN_GAIN_GATE) for s in seeds],
+                np.uint32,
+            ))
+            self._note(("ggain", T, A, Mb, Kb))
+            out = _group_gain(
+                src_s, dst_s, ew_s, nwa_s, out, masks, n_d, jnp.int32(k),
+                U_d, bs, bg, Kb=Kb,
+            )
+        if balance_rounds:
+            self._note(("gbal", T, A, Kb, balance_rounds))
+            out = _group_balance(
+                nwa_s, out, masks, n_d, jnp.int32(k),
+                U_d, jnp.asarray(np.asarray(seeds, np.int32) & 0x7FFFFFFF),
+                Kb=Kb, rounds=balance_rounds,
+            )
+        # ---- guard per lane (the solo guard, batched) ----
+        self._note(("gscore", T, Mb, A, Kb))
+        cut_i, cut_o, bw_o, ews = _group_score(
+            src_s, dst_s, ew_s, nwa_s, lab_s, out, Kb=Kb
+        )
+        cut_i = np.asarray(cut_i, np.float64)
+        cut_o = np.asarray(cut_o, np.float64)
+        bw0_np = np.asarray(bw0, np.float64)
+        bw_o_np = np.asarray(bw_o, np.float64)
+        ews = np.asarray(ews, np.float64)
+        ok = np.empty(T, bool)
+        for i, (name, sess, g, _, _) in enumerate(members):
+            U = Us[i]
+            bw_old_max = bw0_np[i, :k].max()
+            bw_new_max = bw_o_np[i, :k].max()
+            ok_cut = (
+                cut_o[i] <= cut_i[i]
+                and bw_new_max <= max(bw_old_max, U + 1e-6)
+            )
+            ok[i] = ok_cut or (bw_old_max > U >= bw_new_max)
+        final = _group_select(jnp.asarray(ok), out, lab_s)
+        # ---- write back + trajectory + escalation per lane ----
+        for i, (name, sess, g, _, _) in enumerate(members):
+            sess.labels = final[i]
+            self.stats.lanes_repaired += 1
+            cut = float(cut_o[i] if ok[i] else cut_i[i])
+            bw = (bw_o_np if ok[i] else bw0_np)[i, :sess.k]
+            W = max(sess.store.total_node_weight, 1e-9)
+            imb = float(bw.max() * sess.k / W - 1.0)
+            feas = bool(bw.max() <= Us[i] + 1e-6)
+            scaled_ref = sess._cut_ref * (
+                max(ews[i], 1e-9) / sess._ew_ref
+            )
+            wanted = (not feas) or (
+                cut > sess.cfg.escalate_cut_ratio * max(scaled_ref, 1.0)
+            )
+            escalated = wanted and not sess.suppress_escalation
+            stale = wanted and sess.suppress_escalation
+            if stale:
+                sess.suppressed_escalations += 1
+            if escalated:
+                sess._escalate(seeds[i])
+                cut, imb, feas = sess._score(sess.store.base)
+            res = UpdateResult(
+                step=sess._step, n=sess.store.n, m=sess.store.m, cut=cut,
+                imbalance=imb, feasible=feas,
+                region_size=int(plans[i][4]),
+                escalated=escalated, stale=stale,
+            )
+            sess.trajectory.append(res)
+            results[name] = res
+
+    def stats_dict(self) -> dict:
+        return dict(
+            tenants=len(self.sessions),
+            group_steps=self.stats.group_steps,
+            lanes_repaired=self.stats.lanes_repaired,
+            solo_fallbacks=self.stats.solo_fallbacks,
+            noops=self.stats.noops,
+            coalesced=self.stats.coalesced,
+            group_compiles=self.stats.group_compiles,
+            group_bucket_count=self.stats.group_bucket_count,
+        )

@@ -51,6 +51,8 @@ __all__ = [
     "StoreStats",
     "UpdateValidationError",
     "merge_overlay_device",
+    "overlay_view_device",
+    "vacuum_device",
 ]
 
 
@@ -307,13 +309,29 @@ class StoreStats:
     edges_added: int = 0
     edges_removed: int = 0
     nodes_added: int = 0
+    nodes_removed: int = 0
     compact_calls: int = 0
     compact_compiles: int = 0       # distinct (Mb, Rb, Nb) merge buckets
     compact_buckets: set = field(default_factory=set)
+    compact_deferred: int = 0       # compactions dispatched asynchronously
+    view_calls: int = 0             # overlay-view builds (skipped compactions)
+    view_compiles: int = 0          # distinct (Mb, Rb, Nb) view buckets
+    view_buckets: set = field(default_factory=set)
+    vacuum_calls: int = 0
+    vacuum_compiles: int = 0        # distinct (Mb, Nb) relabel buckets
+    vacuum_buckets: set = field(default_factory=set)
 
     @property
     def compact_bucket_count(self) -> int:
         return len(self.compact_buckets)
+
+    @property
+    def view_bucket_count(self) -> int:
+        return len(self.view_buckets)
+
+    @property
+    def vacuum_bucket_count(self) -> int:
+        return len(self.vacuum_buckets)
 
 
 def _merge_body(src, dst, ew, ou, ov, ow, nw, n, m, r):
@@ -409,6 +427,174 @@ as deletion.
 """
 
 
+def _view_body(indptr, src, dst, ew, ou, ov, ow, n, m, r):
+    """Overlay-aware CSR *view*: the merged adjacency without the merge sort.
+
+    Instead of re-sorting all ``m + r`` arcs (``_merge_body``), the overlay
+    is deduplicated alone (an O(r log r) sort), each net delta is matched
+    into its base CSR row by vectorized binary search (rows are v-sorted by
+    the canonical compaction order), matched weights are patched in place,
+    dead arcs (merged weight <= 0) are compacted out by a rank scatter, and
+    genuinely new arcs are inserted at the tail of their source row.  Total
+    device work is O(m) elementwise/cumsum/scatter + O(r log r) — no
+    O((m + r) log (m + r)) key sort on the hot path.
+
+    The emitted view has exact merged row degrees and the exact merged arc
+    multiset per node; only the within-row arc order differs from the
+    canonical CSR (surviving base arcs stay v-sorted, new arcs append
+    v-sorted after them).  Every downstream repair kernel is insensitive to
+    within-row order — the sweep re-sorts by (slot, candidate label), gain
+    rounds and cuts are scatter/reduce sums over integral f32 weights
+    (exact in any order) — so repairing on the view is bit-identical to
+    repairing on the compacted CSR (regression-tested).
+    """
+    Mb = src.shape[0]
+    Rb = ou.shape[0]
+    Nb = indptr.shape[0] - 1
+    Mv = Mb + Rb
+    iota_r = jnp.arange(Rb, dtype=jnp.int32)
+    iota_m = jnp.arange(Mb, dtype=jnp.int32)
+    valid_o = iota_r < r
+    # ---- dedup the overlay: net signed delta per distinct (u, v) ----
+    big = jnp.int32(2**31 - 1)
+    key = jnp.where(valid_o, ou * jnp.int32(Nb) + ov, big)
+    ks = jnp.sort(key)
+    oks = ks < big
+    first = jnp.concatenate([oks[:1], oks[1:] & (ks[1:] != ks[:-1])])
+    run = (jnp.cumsum(first) - 1).astype(jnp.int32)
+    pos = jnp.minimum(jnp.searchsorted(ks, key), Rb - 1)
+    run_of = jnp.where(valid_o, run[pos], Rb)
+    nrun = jnp.sum(first).astype(jnp.int32)
+    dw = jnp.zeros((Rb,), jnp.float32).at[run_of].add(
+        jnp.where(valid_o, ow, 0.0), mode="drop"
+    )
+    firstpos = jnp.sort(jnp.where(first, iota_r, jnp.int32(Rb)))
+    fp = jnp.minimum(firstpos, Rb - 1)
+    uk = ks[fp]
+    run_live = iota_r < nrun
+    du = jnp.where(run_live, (uk // jnp.int32(Nb)).astype(jnp.int32), 0)
+    dv = jnp.where(run_live, (uk % jnp.int32(Nb)).astype(jnp.int32), 0)
+    # ---- match each net delta into its base row (vectorized bisect) ----
+    lo = indptr[du]
+    row_end = indptr[du + 1]
+
+    def bisect(_, lh):
+        lo, hi = lh
+        mid = ((lo + hi) >> 1).astype(jnp.int32)
+        ltv = dst[jnp.clip(mid, 0, Mb - 1)] < dv
+        cont = lo < hi
+        lo2 = jnp.where(cont & ltv, mid + 1, lo)
+        hi2 = jnp.where(cont & ~ltv, mid, hi)
+        return lo2, hi2
+
+    lo, _ = jax.lax.fori_loop(0, 32, bisect, (lo, row_end))
+    found = run_live & (lo < row_end) \
+        & (dst[jnp.clip(lo, 0, Mb - 1)] == dv)
+    # ---- patch matched weights; identical saturating drop semantics to
+    # the merge (a merged weight <= 0 removes the arc) ----
+    idx = jnp.where(found, lo, jnp.int32(Mb))
+    ew_eff = jnp.concatenate(
+        [ew, jnp.zeros((1,), jnp.float32)]
+    ).at[idx].add(jnp.where(found, dw, 0.0))[:Mb]
+    arc_live = (iota_m < m) & (ew_eff > 0.0)
+    dead = (iota_m < m) & ~arc_live
+    src_s = jnp.where(iota_m < m, src, 0)
+    dst_s = jnp.where(iota_m < m, dst, 0)
+    dead_cnt = jnp.zeros((Nb,), jnp.int32).at[src_s].add(
+        dead.astype(jnp.int32), mode="drop"
+    )
+    is_new = run_live & ~found & (dw > 0.0)
+    new_cnt = jnp.zeros((Nb,), jnp.int32).at[du].add(
+        is_new.astype(jnp.int32), mode="drop"
+    )
+    # ---- merged row pointers: survivors first, new arcs at the tail ----
+    deg_base = (indptr[1:] - indptr[:-1]).astype(jnp.int32)
+    deg_live = deg_base - dead_cnt
+    cum_view = jnp.cumsum(deg_live + new_cnt).astype(jnp.int32)
+    zero1 = jnp.zeros((1,), jnp.int32)
+    indptr_v = jnp.concatenate([zero1, cum_view])
+    live_before = jnp.concatenate(
+        [zero1, jnp.cumsum(deg_live).astype(jnp.int32)]
+    )[:-1]
+    new_before = jnp.concatenate(
+        [zero1, jnp.cumsum(new_cnt).astype(jnp.int32)]
+    )[:-1]
+    gr = jnp.cumsum(arc_live.astype(jnp.int32)) - 1
+    pos_base = indptr_v[src_s] + (gr - live_before[src_s])
+    gn = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    pos_new = indptr_v[du] + deg_live[du] + (gn - new_before[du])
+    tb = jnp.where(arc_live, pos_base, jnp.int32(Mv))
+    tn = jnp.where(is_new, pos_new, jnp.int32(Mv))
+    # padding arcs stay (0, 0, 0.0) — the arc-array inertness invariant the
+    # expansion / gain / cut kernels already rely on for base padding
+    src_v = jnp.zeros((Mv,), jnp.int32) \
+        .at[tb].set(src_s, mode="drop").at[tn].set(du, mode="drop")
+    dst_v = jnp.zeros((Mv,), jnp.int32) \
+        .at[tb].set(dst_s, mode="drop").at[tn].set(dv, mode="drop")
+    ew_v = jnp.zeros((Mv,), jnp.float32) \
+        .at[tb].set(jnp.where(arc_live, ew_eff, 0.0), mode="drop") \
+        .at[tn].set(jnp.where(is_new, dw, 0.0), mode="drop")
+    return indptr_v, src_v, dst_v, ew_v, cum_view[-1]
+
+
+overlay_view_device = jax.jit(_view_body)
+overlay_view_device.__doc__ = """Build the merged-adjacency view of (base CSR + COO overlay) on device.
+
+Args:
+  indptr:       (Nb + 1,) int32 base row pointers (rows >= n hold m).
+  src, dst, ew: (Mb,) base arcs; entries >= ``m`` are inert (0, 0, 0).
+  ou, ov, ow:   (Rb,) overlay arc deltas (symmetric, signed, integral f32);
+    entries >= ``r`` are inert padding.
+  n, m, r:      traced live counts — one executable per ``(Mb, Rb, Nb)``.
+
+Returns ``(indptr_v, src_v, dst_v, ew_v, m_view)``: a per-row-contiguous
+CSR over ``Mb + Rb`` arc slots whose rows, degrees, and weighted arc
+multisets equal the compacted merge's exactly (within-row order differs;
+downstream kernels are order-insensitive).  Requires ``Nb * Nb < 2**31``
+(int32 fused keys; bigger node buckets take the compaction path).
+"""
+
+
+def _vacuum_body(src, dst, ew, newid, keep, nw, m):
+    """Relabel-on-compact: rewrite arcs through ``newid`` and drop
+    tombstoned rows.  ``newid`` must be monotone on kept ids (cumsum of
+    ``keep``), so within-row v-order and global (u, v) order survive the
+    remap — the canonical-CSR invariant the view's binary search needs."""
+    Mb = src.shape[0]
+    Nb = newid.shape[0]
+    iota_m = jnp.arange(Mb, dtype=jnp.int32)
+    arc_ok = iota_m < m
+    src_r = jnp.where(arc_ok, newid[jnp.where(arc_ok, src, 0)], 0)
+    dst_r = jnp.where(arc_ok, newid[jnp.where(arc_ok, dst, 0)], 0)
+    ew_r = jnp.where(arc_ok, ew, 0.0)
+    cu = jnp.where(arc_ok, src_r, jnp.int32(Nb))
+    indptr_r = jnp.searchsorted(
+        cu, jnp.arange(Nb + 1, dtype=jnp.int32)
+    ).astype(jnp.int32)
+    nw_r = jnp.zeros((Nb,), jnp.float32).at[
+        jnp.where(keep, newid, jnp.int32(Nb))
+    ].add(jnp.where(keep, nw, 0.0), mode="drop")
+    return indptr_r, src_r, dst_r, ew_r, nw_r
+
+
+vacuum_device = jax.jit(_vacuum_body)
+vacuum_device.__doc__ = """Compact tombstoned nodes out of a CSR on device.
+
+Args:
+  src, dst, ew: the base CSR's arc arrays (no arc may touch a tombstoned
+    node — the store enforces isolation before marking).
+  newid: (Nb,) int32 old -> new id map (``cumsum(keep) - 1``, clipped 0).
+  keep:  (Nb,) bool — False for tombstoned rows.
+  nw:    (Nb,) f32 node weights (old id space).
+  m:     traced live arc count of the INPUT graph.
+
+Returns ``(indptr, src, dst, ew, nw)`` in the new id space: removed nodes
+leave the CSR entirely (rows dropped, ids re-packed contiguously), arcs and
+weights are preserved bit-for-bit under the monotone remap (arc count and
+within-row order are unchanged, so the output reuses the input buckets).
+"""
+
+
 class DynamicGraphStore:
     """Device-resident base CSR + bounded COO delta overlay.
 
@@ -449,6 +635,9 @@ class DynamicGraphStore:
         self._ov: List[np.ndarray] = []
         self._ow: List[np.ndarray] = []
         self._olen = 0
+        self._pending: Optional[dict] = None    # in-flight deferred merge
+        self._tomb: Optional[np.ndarray] = None  # (n,) bool tombstone column
+        self.last_vacuum_map: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------- properties
 
@@ -465,6 +654,16 @@ class DynamicGraphStore:
     @property
     def dirty(self) -> bool:
         return self._olen > 0
+
+    @property
+    def compact_pending(self) -> bool:
+        """A deferred compaction has been dispatched but not finalized."""
+        return self._pending is not None
+
+    @property
+    def pending_removals(self) -> int:
+        """Tombstoned nodes awaiting the relabel-on-compact vacuum."""
+        return 0 if self._tomb is None else int(self._tomb.sum())
 
     @property
     def total_node_weight(self) -> float:
@@ -512,18 +711,9 @@ class DynamicGraphStore:
 
     # ------------------------------------------------------------- compaction
 
-    def compact(self) -> GraphDev:
-        """Merge the overlay into a fresh base CSR (no-op when clean).
-
-        One bucketed device executable (:func:`merge_overlay_device`); only
-        the ``(m_new, nw_max, ew_max)`` scalars sync to host.  The previous
-        base handle is dropped — callers caching device state against the
-        old handle's identity must evict (the session does)."""
-        if not self.dirty and self.n == self.base.n:
-            return self.base
-        self.stats.compact_calls += 1
-        r = self._olen
-        Rb = pow2(max(r, 8))
+    def _pack_overlay(self, Rb: int) -> tuple:
+        """Concatenate the overlay chunk lists into Rb-padded COO arrays
+        (shared by the merge dispatch and the view build)."""
         ou = np.zeros(Rb, np.int32)
         ov = np.zeros(Rb, np.int32)
         ow = np.zeros(Rb, np.float32)
@@ -533,6 +723,19 @@ class DynamicGraphStore:
             ov[o : o + cu.size] = cv
             ow[o : o + cu.size] = cw
             o += cu.size
+        return ou, ov, ow
+
+    def _dispatch_merge(self) -> None:
+        """Dispatch the overlay merge executable WITHOUT blocking on its
+        result.  The merge's outputs (and the consumed overlay prefix's
+        bookkeeping) park in ``_pending`` until :meth:`_finalize_pending`
+        downloads the three result scalars and swaps the base — JAX async
+        dispatch lets the caller overlap that device work with the next
+        batch's repair."""
+        self.stats.compact_calls += 1
+        r = self._olen
+        Rb = pow2(max(r, 8))
+        ou, ov, ow = self._pack_overlay(Rb)
         Nb = pow2(max(self.n, 8))
         # node weights re-upload only after node churn (edge-only streams —
         # the common case — reuse the resident array across compactions)
@@ -549,12 +752,33 @@ class DynamicGraphStore:
             self.stats.compact_compiles += 1
         # base node bucket may be smaller than Nb after node adds; the merge
         # only reads arc arrays + the new nw, so no base re-pad is needed
-        indptr, src_c, dst_c, ew_c, m_new, nwmax, ewmax = merge_overlay_device(
+        res = merge_overlay_device(
             self.base.src, self.base.indices, self.base.ew,
             jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
             self._nw_dev,
             jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
         )
+        self._pending = dict(
+            res=res, r=r, nchunks=len(self._ou), n=self.n,
+            nw_dev=self._nw_dev,
+        )
+
+    def _finalize_pending(self) -> bool:
+        """Block on a dispatched merge and install its result as the base.
+
+        Returns False (discarding the pending result) when the node set
+        changed since dispatch — the merge ran against a stale ``nw`` — so
+        the caller re-compacts synchronously.  Overlay chunks consumed by
+        the dispatch are dropped only here, which is what keeps snapshots
+        and views taken while the merge was in flight consistent: they see
+        (old base + full overlay), an equivalent graph."""
+        p = self._pending
+        self._pending = None
+        if p is None:
+            return False
+        if p["n"] != self.n or p["nw_dev"] is not self._nw_dev:
+            return False
+        indptr, src_c, dst_c, ew_c, m_new, nwmax, ewmax = p["res"]
         m_new, nwmax, ewmax = jax.device_get((m_new, nwmax, ewmax))
         m_new = int(m_new)
         self._on_d2h(12)
@@ -586,16 +810,97 @@ class DynamicGraphStore:
             on_materialize=self._on_d2h,
         )
         self._base_host = None
-        self._ou, self._ov, self._ow = [], [], []
-        self._olen = 0
+        self._ou = self._ou[p["nchunks"]:]
+        self._ov = self._ov[p["nchunks"]:]
+        self._ow = self._ow[p["nchunks"]:]
+        self._olen -= p["r"]
+        return True
+
+    def compact(self, deferred: bool = False) -> GraphDev:
+        """Merge the overlay into a fresh base CSR (no-op when clean).
+
+        One bucketed device executable (:func:`merge_overlay_device`); only
+        the ``(m_new, nw_max, ew_max)`` scalars sync to host.  The previous
+        base handle is dropped — callers caching device state against the
+        old handle's identity must evict (the session does).
+
+        ``deferred=True`` dispatches the merge and returns immediately with
+        the OLD base still installed (the overlay stays queued, so views and
+        snapshots remain correct); the swap happens at the next
+        ``compact()``/``graph()`` call, by which time the device has
+        finished the merge in the background.  Deferral requires a stable
+        node set — node adds force the synchronous path."""
+        if self._pending is not None and self._finalize_pending():
+            if not self.dirty and self.n == self.base.n:
+                return self.base
+        if not self.dirty and self.n == self.base.n:
+            return self.base
+        if deferred and self.n == self.base.n and self.dirty:
+            self._dispatch_merge()
+            self.stats.compact_deferred += 1
+            return self.base
+        self._dispatch_merge()
+        self._finalize_pending()
         return self.base
 
+    # ------------------------------------------------------------ overlay view
+
+    def can_view(self) -> bool:
+        """True when :meth:`view` can serve the current state: pending arc
+        deltas only — a stable node set (no adds since the last compaction,
+        no tombstones awaiting vacuum) and a node bucket small enough for
+        the view kernel's fused int32 keys."""
+        Nb = self.base.indptr.shape[0] - 1
+        return (
+            self.dirty
+            and self.n == self.base.n
+            and self.pending_removals == 0
+            and Nb * Nb < 2**31
+        )
+
+    def overlay_fraction(self) -> float:
+        """Pending overlay arcs as a fraction of the base arc count — the
+        quantity the session's ``compact_fraction`` policy thresholds on."""
+        return self._olen / max(self.base.m, 1)
+
+    def view(self) -> tuple:
+        """Merged-adjacency device view of (base + overlay) WITHOUT
+        compacting: ``(indptr, src, dst, ew, m_view)`` over ``Mb + Rb`` arc
+        slots (see :func:`overlay_view_device`).  O(m) elementwise device
+        work instead of the merge's O((m + r) log (m + r)) sort, and the
+        base handle (with every cache keyed on its identity) survives.
+        Requires :meth:`can_view`."""
+        if not self.can_view():
+            raise ValueError("store state not viewable (see can_view)")
+        self.stats.view_calls += 1
+        r = self._olen
+        Rb = pow2(max(r, 8))
+        ou, ov, ow = self._pack_overlay(Rb)
+        Mb = self.base.indices.shape[0]
+        Nb = self.base.indptr.shape[0] - 1
+        vkey = (Mb, Rb, Nb)
+        if vkey not in self.stats.view_buckets:
+            self.stats.view_buckets.add(vkey)
+            self.stats.view_compiles += 1
+        self._on_h2d(ou.nbytes + ov.nbytes + ow.nbytes)
+        indptr_v, src_v, dst_v, ew_v, m_view = overlay_view_device(
+            self.base.indptr, self.base.src, self.base.indices, self.base.ew,
+            jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
+            jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
+        )
+        return indptr_v, src_v, dst_v, ew_v, m_view
+
     def graph(self) -> GraphDev:
-        """The up-to-date device graph: compacts first when the overlay has
-        pending arcs OR nodes were added since the last compaction (node
-        adds leave the overlay clean but the base's node set stale)."""
-        if self.dirty or self.n != self.base.n:
-            return self.compact()
+        """The up-to-date device graph: finalizes any in-flight deferred
+        merge, compacts when the overlay has pending arcs OR nodes were
+        added since the last compaction (node adds leave the overlay clean
+        but the base's node set stale), then vacuums pending tombstones
+        (relabel-on-compact; consult ``last_vacuum_map`` for the id
+        remap)."""
+        if self.dirty or self.n != self.base.n or self._pending is not None:
+            self.compact()
+        if self.pending_removals:
+            self.vacuum()
         return self.base
 
     def csr_host(self) -> GraphNP:
@@ -605,6 +910,96 @@ class DynamicGraphStore:
         if self._base_host is None:
             self._base_host = g.to_host()
         return self._base_host
+
+    # ------------------------------------------------------------- tombstones
+
+    def remove_nodes(self, ids) -> None:
+        """Tombstone nodes for removal.  Only *isolated* nodes may be
+        removed (disconnect them first with ``remove_edges``); the ids
+        leave the CSR — and the id space re-packs contiguously — at the
+        next vacuum (:meth:`graph` triggers one automatically)."""
+        ids = np.unique(np.asarray(ids, dtype=np.int64))
+        if ids.size == 0:
+            return
+        if ids.min() < 0 or ids.max() >= self.n:
+            raise UpdateValidationError(
+                "endpoint_out_of_range", f"node id outside [0, {self.n})"
+            )
+        # degrees must be judged on the MERGED graph: compact pending arc
+        # deltas first so an edge removed in this same stream counts
+        if self.dirty or self.n != self.base.n or self._pending is not None:
+            self.compact()
+        ii = jnp.asarray(ids.astype(np.int32))
+        self._on_h2d(ids.size * 4)
+        deg = np.asarray(
+            jax.device_get(self.base.indptr[ii + 1] - self.base.indptr[ii])
+        ).astype(np.int64)
+        self._on_d2h(deg.nbytes // 2)
+        if np.any(deg > 0):
+            bad = ids[deg > 0][0]
+            raise UpdateValidationError(
+                "node_not_isolated",
+                f"node {bad} still has degree {int(deg[deg > 0][0])}",
+            )
+        if self._tomb is None:
+            self._tomb = np.zeros(self.n, dtype=bool)
+        if np.any(self._tomb[ids]):
+            raise UpdateValidationError(
+                "node_already_removed", "duplicate tombstone"
+            )
+        self._tomb[ids] = True
+        self.stats.nodes_removed += ids.size
+
+    def vacuum(self) -> Optional[np.ndarray]:
+        """Relabel-on-compact: physically drop tombstoned rows from the
+        base CSR on device and re-pack node ids contiguously.
+
+        Returns the old -> new id map ((old_n,) int64, -1 for removed
+        nodes; also stashed as ``last_vacuum_map``), or None when no
+        tombstones are pending.  Arc data survives bit-for-bit under the
+        monotone remap; buckets are reused (no re-bucket churn), so the
+        only host sync is the map itself."""
+        if self.pending_removals == 0:
+            return None
+        if self.dirty or self.n != self.base.n or self._pending is not None:
+            self.compact()
+        self.stats.vacuum_calls += 1
+        n_old = self.n
+        tomb = self._tomb
+        keep_h = ~tomb
+        newid_h = np.cumsum(keep_h).astype(np.int32) - 1
+        mapping = np.where(keep_h, newid_h.astype(np.int64), -1)
+        n_new = int(keep_h.sum())
+        Mb = self.base.indices.shape[0]
+        Nb = self.base.indptr.shape[0] - 1
+        vkey = (Mb, Nb)
+        if vkey not in self.stats.vacuum_buckets:
+            self.stats.vacuum_buckets.add(vkey)
+            self.stats.vacuum_compiles += 1
+        newid = np.zeros(Nb, np.int32)
+        newid[:n_old] = np.maximum(newid_h, 0)
+        keep = np.zeros(Nb, bool)
+        keep[:n_old] = keep_h
+        self._on_h2d(newid.nbytes + keep.nbytes)
+        indptr_r, src_r, dst_r, ew_r, nw_r = vacuum_device(
+            self.base.src, self.base.indices, self.base.ew,
+            jnp.asarray(newid), jnp.asarray(keep), self.base.nw,
+            jnp.int32(self.base.m),
+        )
+        self._nw = self._nw[keep_h]
+        self._nw_dev = nw_r
+        self.base = GraphDev(
+            indptr=indptr_r, indices=dst_r, ew=ew_r, nw=nw_r, src=src_r,
+            n=n_new, m=self.base.m,
+            nw_max=float(self._nw.max()) if n_new else 0.0,
+            ew_max=self.base.ew_max, ew_integral=True,
+            on_materialize=self._on_d2h,
+        )
+        self.n = n_new
+        self._tomb = None
+        self._base_host = None
+        self.last_vacuum_map = mapping
+        return mapping
 
     # ------------------------------------------------------- snapshot support
 
@@ -627,11 +1022,16 @@ class DynamicGraphStore:
             ov=list(self._ov),
             ow=list(self._ow),
             olen=self._olen,
+            tomb=None if self._tomb is None else self._tomb.copy(),
         )
 
     def restore_state(self, st: dict) -> None:
         """Rebind graph state to a :meth:`snapshot_state` capture — restores
-        node set, base CSR handle, and the pending overlay bit-identically."""
+        node set, base CSR handle, and the pending overlay bit-identically.
+        An in-flight deferred merge is discarded: its consumed-prefix
+        bookkeeping refers to the pre-restore chunk lists, and a later
+        compaction of the restored overlay reproduces the same graph."""
+        self._pending = None
         self.n = st["n"]
         self.base = st["base"]
         self._nw = st["nw"]
@@ -641,3 +1041,5 @@ class DynamicGraphStore:
         self._ov = list(st["ov"])
         self._ow = list(st["ow"])
         self._olen = st["olen"]
+        tomb = st.get("tomb")
+        self._tomb = None if tomb is None else tomb.copy()

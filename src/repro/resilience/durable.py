@@ -27,8 +27,11 @@ die with the host.  This module makes the serving state durable:
   seed derives from the step counter, and the WAL's suppress flags replay
   degraded-mode decisions faithfully.
 
-RPO/RTO: committed batches are never lost (RPO 0 — the WAL append is
-fsynced inside the commit path); recovery time is one checkpoint load plus
+RPO/RTO: at the default ``wal_group_commit_n = 1`` committed batches are
+never lost (RPO 0 — the WAL append is fsynced inside the commit path);
+group commit (``wal_group_commit_n > 1``) coalesces fsyncs over a bounded
+commit window, trading RPO <= ``wal_group_commit_n - 1`` batches for the
+per-commit fsync latency.  Recovery time is one checkpoint load plus
 the replay of at most ``checkpoint_every`` batches (RTO bounded by the
 cadence knob), instead of a full re-partition.  A torn WAL tail (the
 record being written when the host died) is detected by the crc framing,
@@ -144,23 +147,72 @@ def read_wal(path: str) -> Tuple[List[WalRecord], int, Optional[str]]:
 
 
 class WriteAheadLog:
-    """Append-only fsynced log of committed update batches."""
+    """Append-only fsynced log of committed update batches.
 
-    def __init__(self, path: str, fsync: bool = True, fresh: bool = False):
+    **Group commit** (ISSUE 8): with ``group_n > 1``, appends buffer in
+    memory and the physical write + flush + fsync happens once per batch —
+    when ``group_n`` records have accumulated, or when the oldest buffered
+    record has waited ``group_timeout`` seconds (checked at append time),
+    or on :meth:`flush`/:meth:`close`.  One fsync then covers the whole
+    window, amortizing the dominant cost of durable logging (BENCH_PR7
+    measured 14.4% overhead at fsync-per-record).  The trade is explicit:
+    a crash loses at most the ``group_n - 1`` records still buffered
+    (RPO <= group_n - 1 commits instead of 0).  Buffered records are
+    written in append order in a single contiguous write, so the on-disk
+    prefix property read_wal() depends on is preserved — a torn batch
+    tail drops only the *newest* records, never reorders them.
+
+    ``group_n = 1`` (the default) is the historical fsync-per-append
+    behavior, bit-for-bit.
+    """
+
+    def __init__(self, path: str, fsync: bool = True, fresh: bool = False,
+                 group_n: int = 1, group_timeout: float = 0.0):
         self.path = path
         self.fsync = fsync
+        self.group_n = max(int(group_n), 1)
+        self.group_timeout = float(group_timeout)
         self._f = open(path, "wb" if fresh else "ab")
+        self._buf: List[bytes] = []
+        self._buf_t0 = 0.0
         self.records_appended = 0
+        self.flushes = 0            # physical write+fsync batches
+
+    @property
+    def buffered(self) -> int:
+        """Records appended but not yet durable (lost if the host dies)."""
+        return len(self._buf)
 
     def append(self, rec: WalRecord) -> None:
-        self._f.write(_pack_record(rec))
+        if not self._buf:
+            self._buf_t0 = time.monotonic()
+        self._buf.append(_pack_record(rec))
+        self.records_appended += 1
+        if len(self._buf) >= self.group_n or (
+            self.group_timeout > 0.0
+            and time.monotonic() - self._buf_t0 >= self.group_timeout
+        ):
+            self.flush()
+
+    def flush(self) -> None:
+        """Make every buffered record durable (one write, one fsync)."""
+        if not self._buf:
+            return
+        payload = b"".join(self._buf)
+        # records are handed to the OS exactly once: a failed fsync leaves
+        # their durability unknown (the caller sees the exception), but a
+        # retry must never re-write them — duplicate records would corrupt
+        # the replay stream, which is worse than an honest unknown tail
+        self._buf = []
+        self._f.write(payload)
         self._f.flush()
         if self.fsync:
             os.fsync(self._f.fileno())
-        self.records_appended += 1
+        self.flushes += 1
 
     def close(self) -> None:
         if not self._f.closed:
+            self.flush()
             self._f.close()
 
 
@@ -188,6 +240,15 @@ class DurableConfig:
     keep_checkpoints: int = 3       # retained restore points
     wal_fsync: bool = True          # fsync per commit (RPO 0); False trades
                                     # the last few batches for latency
+    # WAL group commit (ISSUE 8): coalesce fsyncs over a commit window of
+    # up to this many records / this many seconds since the first buffered
+    # record (timeout 0 = count-only window).  1 = fsync per commit (RPO
+    # 0, the historical behavior); n > 1 bounds loss at n - 1 committed
+    # batches if the host dies with the window open (checkpoint() and
+    # heal() close the WAL first, so rotation/fork points are always
+    # durable).
+    wal_group_commit_n: int = 1
+    wal_group_commit_timeout: float = 0.0
 
 
 def _json_safe(x):
@@ -236,12 +297,17 @@ class DurableSession:
             # resuming after restore(): the anchor checkpoint + WAL already
             # exist on disk; keep appending to the (truncated-clean) WAL
             self._anchor_step = int(_resume_step)
-            self._wal = WriteAheadLog(
-                wal_path(cfg.directory, self._anchor_step),
-                fsync=cfg.wal_fsync, fresh=False,
-            )
+            self._wal = self._open_wal(self._anchor_step, fresh=False)
 
     # ------------------------------------------------------------- internals
+
+    def _open_wal(self, step: int, fresh: bool) -> WriteAheadLog:
+        return WriteAheadLog(
+            wal_path(self.cfg.directory, step),
+            fsync=self.cfg.wal_fsync, fresh=fresh,
+            group_n=self.cfg.wal_group_commit_n,
+            group_timeout=self.cfg.wal_group_commit_timeout,
+        )
 
     def _on_commit(self, tx: TxResult, upd: GraphUpdate, sup: bool) -> None:
         self._wal.append(WalRecord(
@@ -349,10 +415,7 @@ class DurableSession:
         if getattr(self, "_wal", None) is not None:
             self._wal.close()
         self._anchor_step = step
-        self._wal = WriteAheadLog(
-            wal_path(self.cfg.directory, step),
-            fsync=self.cfg.wal_fsync, fresh=True,
-        )
+        self._wal = self._open_wal(step, fresh=True)
         self._commits_since_ckpt = 0
         self.checkpoints_written += 1
         self.last_checkpoint_seconds = time.time() - t0
@@ -412,10 +475,7 @@ class DurableSession:
             fsync=self.cfg.wal_fsync,
         )
         self._anchor_step = anchor
-        self._wal = WriteAheadLog(
-            wal_path(self.cfg.directory, anchor),
-            fsync=self.cfg.wal_fsync, fresh=False,
-        )
+        self._wal = self._open_wal(anchor, fresh=False)
 
     def close(self) -> None:
         self._wal.close()
@@ -427,6 +487,8 @@ class DurableSession:
             dr_checkpoints_written=self.checkpoints_written,
             dr_failed_checkpoints=self.failed_checkpoints,
             dr_wal_records=self._wal.records_appended,
+            dr_wal_flushes=self._wal.flushes,
+            dr_wal_buffered=self._wal.buffered,
             dr_commits_since_checkpoint=self._commits_since_ckpt,
         )
         return d

@@ -53,12 +53,18 @@ at laptop scale, preserving the paper's *relative* claims:
                          fresh-process restore+WAL-replay (RTO) vs a full
                          re-partition, and replica failover latency vs
                          synchronous shard re-extraction
+  obs_overhead        -> PR 9: observability cost — tracing-disabled
+                         instrumentation overhead on the dynamic_hot
+                         steady state (< 2% acceptance), tracing-enabled
+                         cost, and the no-op span fast path in ns
 
 Output: ``name,us_per_call,derived`` CSV lines (+ commentary rows).
 With ``--json PATH``, tables additionally emit machine-readable rows
 ``{name, us_per_call, derived}`` merged into PATH (existing content from
 earlier invocations is preserved), seeding the perf trajectory for later
-PRs.
+PRs — plus, per table, an observability bundle under ``<stem>_obs/``:
+a Perfetto-loadable Chrome trace and a metrics snapshot (JSON +
+Prometheus text) over the serving stacks the bench registered.
 
 ``--smoke`` shrinks ``dynamic_hot`` to a < 30 s variant (smaller graph,
 fewer timed batches, 2 tenants) so the default test suite can exercise
@@ -75,6 +81,32 @@ import time
 import numpy as np
 
 SMOKE = False   # set by --smoke: sub-30s dynamic_hot for the test suite
+
+# Serving objects registered by benches for the per-table SLO export
+# (ISSUE 9): main() renders each entry's stats() + metric registries into
+# <obs_dir>/<table>.metrics.json / .prom next to the trace file.
+_OBS_STACKS = []
+
+
+def obs_register(obj) -> None:
+    """Snapshot a bench's serving object (session / deployment / durable
+    stack) for SLO export.  Called near the end of a bench, so stats()
+    reflects the steady state the table reports."""
+    stats = {}
+    for getter in ("stats", "stats_dict"):
+        fn = getattr(obj, getter, None)
+        if callable(fn):
+            try:
+                stats = dict(fn())
+                break
+            except TypeError:
+                continue
+    regs = []
+    for cand in (getattr(obj, "metrics", None),
+                 getattr(getattr(obj, "stats", None), "registry", None)):
+        if cand is not None and not any(cand is r for r in regs):
+            regs.append(cand)
+    _OBS_STACKS.append((stats, regs))
 
 
 def _latency_pcts(seconds) -> dict:
@@ -745,6 +777,30 @@ def evo_hot():
     return rows
 
 
+def _churn_stream(g, sess, nb, rng):
+    """~nb random adds + nb removals of surviving original edges per batch
+    (the PR 4 churn model, parameterized — shared by dynamic_hot and
+    obs_overhead so both time the same steady state)."""
+    from repro.dynamic import GraphUpdate
+
+    src0 = g.arc_sources()
+    # canonical (src < dst) arcs only: each edge sampled once
+    removed = src0 >= g.indices
+
+    def one_batch():
+        au = rng.integers(0, sess.n, nb)
+        av = (au + 1 + rng.integers(0, sess.n - 1, nb)) % sess.n
+        cand = rng.permutation(np.flatnonzero(~removed))[:nb]
+        removed[cand] = True
+        ru, rv = src0[cand], g.indices[cand]
+        return sess.update(
+            GraphUpdate.add_edges(au, av).merged(
+                GraphUpdate.remove_edges(ru, rv))
+        )
+
+    return one_batch
+
+
 def dynamic_hot():
     """PR 4 + PR 8: streaming-update serving — repair vs full re-partition,
     and the ISSUE-8 throughput mode.
@@ -784,24 +840,7 @@ def dynamic_hot():
     warm, timed = (1, 2) if SMOKE else (2, 8)
 
     def make_stream(sess, nb, rng):
-        """~nb random adds + nb removals of surviving original edges per
-        batch (the PR 4 churn model, parameterized)."""
-        src0 = g.arc_sources()
-        # canonical (src < dst) arcs only: each edge sampled once
-        removed = src0 >= g.indices
-
-        def one_batch():
-            au = rng.integers(0, sess.n, nb)
-            av = (au + 1 + rng.integers(0, sess.n - 1, nb)) % sess.n
-            cand = rng.permutation(np.flatnonzero(~removed))[:nb]
-            removed[cand] = True
-            ru, rv = src0[cand], g.indices[cand]
-            return sess.update(
-                GraphUpdate.add_edges(au, av).merged(
-                    GraphUpdate.remove_edges(ru, rv))
-            )
-
-        return one_batch
+        return _churn_stream(g, sess, nb, rng)
 
     nb = max(g.m // 2 // 200, 64)           # ~0.5% of edges added + removed
     # ---- PR 4 baseline: default config (compact every step) ----
@@ -887,6 +926,7 @@ def dynamic_hot():
             h2d_bytes=st["h2d_bytes"], d2h_bytes=st["d2h_bytes"],
         ),
     ))
+    obs_register(sess)
     del sess
 
     # ---- PR 8 throughput preset: view repair + deferred compaction ----
@@ -980,6 +1020,7 @@ def dynamic_hot():
             ),
         ),
     ))
+    obs_register(sess_t)
     del sess_t
 
     # ---- PR 8 multi-tenant: vmapped SessionGroup vs solo serving ----
@@ -1059,6 +1100,7 @@ def dynamic_hot():
             ),
         ),
     ))
+    obs_register(group)
     return rows
 
 
@@ -1195,6 +1237,7 @@ def deploy_hot():
         full[-1].ew.block_until_ready()
         t_full.append(time.time() - t0)
     st = dep.stats()
+    obs_register(dep)
     us_mig = min(t_mig) * 1e6
     us_full = min(t_full) * 1e6
     speedup = us_full / max(us_mig, 1)
@@ -1329,6 +1372,7 @@ def resilience_hot():
     us_heal = t_heal * 1e6
     us_full = min(t_full) * 1e6
     st = rs.stats()
+    obs_register(rs)
     print("metric,value")
     print(f"graph,ba-16384 k={k} audit_cadence={cadence}")
     print(f"batch_edges_added,{nb}")
@@ -1551,6 +1595,7 @@ def resilience_dr():
         os.path.getsize(os.path.join(workdir, f)) for f in os.listdir(workdir)
         if f.startswith("wal_")
     )
+    obs_register(ds)
     _shutil.rmtree(workdir, ignore_errors=True)
 
     print("metric,value")
@@ -1620,6 +1665,99 @@ def resilience_dr():
     return rows
 
 
+def obs_overhead():
+    """PR 9 acceptance: tracing-disabled instrumentation overhead on the
+    dynamic_hot steady state must be < 2%.
+
+    The spans stay in the code in production; what must be provably cheap
+    is the *disabled* fast path (one global load + a None/flag check
+    returning a shared no-op).  Three measurements on the dynamic_hot
+    baseline session + churn stream:
+
+      * us/update with the tracer DISABLED (the production default);
+      * us/update with tracing ENABLED (span records + forced device
+        syncs at span close — the debugging mode, expected slower);
+      * the disabled ``span()`` path microbenched (ns/call) x the span
+        count one traced update emits — the provable per-update cost of
+        leaving the instrumentation in, independent of wall-clock noise.
+    """
+    from repro.dynamic import PartitionSession, SessionConfig
+    from repro.graph import barabasi_albert
+    from repro.obs import Tracer, set_tracer, span
+
+    N = 1024 if SMOKE else 16384
+    g = barabasi_albert(N, 6, seed=3)
+    k = 4
+    warm, timed = (1, 2) if SMOKE else (2, 8)
+    sess = PartitionSession(g, SessionConfig(k=k, seed=0))
+    nb = max(g.m // 2 // 200, 64)
+    one_batch = _churn_stream(g, sess, nb, np.random.default_rng(11))
+
+    prev = set_tracer(None)                 # tracing hard-off
+    try:
+        for _ in range(warm):
+            one_batch()
+        t_off = [one_batch().seconds for _ in range(timed)]
+        tracer = Tracer(enabled=True)
+        set_tracer(tracer)
+        one_batch()                         # sync boundaries now in play
+        tracer.clear()
+        spans_per_update = 0
+        t_on = []
+        for i in range(timed):
+            t_on.append(one_batch().seconds)
+            if i == 0:
+                spans_per_update = len(tracer.events)
+        set_tracer(None)
+        # disabled fast path: ns per `with span(...)` round trip
+        n_loop = 200_000
+        t0 = time.perf_counter()
+        for _ in range(n_loop):
+            with span("obs.noop"):
+                pass
+        ns_per_span = (time.perf_counter() - t0) / n_loop * 1e9
+    finally:
+        set_tracer(prev)
+
+    us_off = min(t_off) * 1e6
+    us_on = min(t_on) * 1e6
+    # the provable bound: every span the traced update emitted costs only
+    # the no-op round trip when tracing is off
+    overhead_us = spans_per_update * ns_per_span / 1e3
+    overhead_pct = 100.0 * overhead_us / max(us_off, 1)
+    on_cost_pct = 100.0 * (us_on - us_off) / max(us_off, 1)
+    print("metric,value")
+    print(f"graph,ba-{N} k={k}")
+    print(f"us_per_update_tracing_off,{us_off:.0f}")
+    print(f"us_per_update_tracing_on,{us_on:.0f}  # + sync boundaries")
+    print(f"tracing_on_cost_pct,{on_cost_pct:.1f}")
+    print(f"spans_per_update,{spans_per_update}")
+    print(f"disabled_span_ns,{ns_per_span:.0f}")
+    print(f"tracing_off_overhead_us_per_update,{overhead_us:.2f}")
+    print(f"tracing_off_overhead_pct,{overhead_pct:.4f}"
+          f"  # acceptance: < 2")
+    assert overhead_pct < 2.0, (
+        f"tracing-disabled overhead {overhead_pct:.3f}% >= 2%"
+    )
+    obs_register(sess)
+    return [dict(
+        name="obs_overhead",
+        us_per_call=us_off,
+        derived=dict(
+            graph=f"ba-{N}", n=g.n, m=g.m, k=k,
+            batch_edges=int(nb), repeats=timed,
+            us_per_update_tracing_off=us_off,
+            us_per_update_tracing_on=us_on,
+            tracing_on_cost_pct=float(on_cost_pct),
+            spans_per_update=int(spans_per_update),
+            disabled_span_ns=float(ns_per_span),
+            tracing_off_overhead_us=float(overhead_us),
+            tracing_off_overhead_pct=float(overhead_pct),
+            acceptance_lt_2pct=bool(overhead_pct < 2.0),
+        ),
+    )]
+
+
 TABLES = {
     "table2_quality": table2_quality,
     "table3_k32": table3_k32,
@@ -1638,6 +1776,7 @@ TABLES = {
     "deploy_hot": deploy_hot,
     "resilience_hot": resilience_hot,
     "resilience_dr": resilience_dr,
+    "obs_overhead": obs_overhead,
 }
 
 
@@ -1664,18 +1803,50 @@ def main() -> None:
     if json_path and os.path.exists(json_path):
         with open(json_path) as f:
             merged = json.load(f)
+    # with --json, every table also emits an observability bundle next to
+    # the results file (ISSUE 9): <stem>_obs/<table>.trace.json (Chrome
+    # trace events, loadable in Perfetto) + <table>.metrics.json/.prom
+    # (SLO snapshot over whatever serving stacks the bench registered)
+    obs_dir = None
+    if json_path:
+        from repro.obs import Tracer, set_tracer, write_slo
+        obs_dir = os.path.splitext(json_path)[0] + "_obs"
+        os.makedirs(obs_dir, exist_ok=True)
     results = {}
     for name, fn in TABLES.items():
         if only and name != only:
             continue
         print(f"\n==== {name} ====")
+        _OBS_STACKS.clear()
+        tracer = prev_tracer = None
+        if obs_dir is not None and name != "obs_overhead":
+            # obs_overhead manages its own tracer: it times the off state
+            tracer = Tracer(enabled=True)
+            prev_tracer = set_tracer(tracer)
         t0 = time.time()
-        rows = fn()
+        try:
+            rows = fn()
+        finally:
+            if tracer is not None:
+                set_tracer(prev_tracer)
         elapsed = time.time() - t0
         print(f"# [{name} done in {elapsed:.0f}s]")
         if rows is None:  # print-only tables still get a summary row
             rows = [dict(name=name, us_per_call=elapsed * 1e6, derived={})]
         results[name] = rows
+        if obs_dir is not None:
+            if tracer is not None:
+                tracer.export_chrome(
+                    os.path.join(obs_dir, f"{name}.trace.json"))
+            stats, regs = {}, []
+            for s, rr in _OBS_STACKS:
+                stats.update(s)
+                for r in rr:
+                    if not any(r is q for q in regs):
+                        regs.append(r)
+            write_slo(os.path.join(obs_dir, name), stats, regs)
+            print(f"# obs bundle: {obs_dir}/{name}.{{trace.json,"
+                  f"metrics.json,prom}}")
     if json_path:
         merged.update(results)
         tmp = json_path + ".tmp"

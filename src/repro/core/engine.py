@@ -67,6 +67,9 @@ from ..graph.packing import (
     plan_ell_rows,
     plan_region_pack,
 )
+from ..obs import MetricsRegistry, RegistryBackedStats
+from ..obs import span as _obs_span
+from ..obs import watchdog as _obs_watchdog
 from .contraction import CoarseMap, contract_device, packed_key_wbits
 from .label_propagation import _lp_sweep, make_order
 
@@ -116,34 +119,43 @@ class _DeviceEll:
     nb: int                 # node bucket: pow2(n + 1) <= arena size
 
 
-@dataclass
-class EngineStats:
-    """Counters surfaced through ``PartitionReport.engine_stats``."""
+class EngineStats(RegistryBackedStats):
+    """Counters surfaced through ``PartitionReport.engine_stats``.
 
-    sweep_calls: int = 0
-    sweep_compiles: int = 0         # distinct (bucket, statics) combinations
-    pack_builds: int = 0
-    pack_hits: int = 0
-    dense_rounds: int = 0
-    dense_compiles: int = 0         # distinct dense-round bucket shapes
-    evo_calls: int = 0              # batched-evolution executable dispatches
-    evo_compiles: int = 0           # distinct evo (phase, bucket) shapes
-    contract_calls: int = 0
-    contract_compiles: int = 0      # distinct (Nb, Mb) contraction buckets
-    gather_builds: int = 0          # device pack gathers (GraphDev levels)
-    gather_compiles: int = 0        # distinct gather shape combinations
-    repair_calls: int = 0           # incremental-repair dispatches (dynamic)
-    repair_compiles: int = 0        # distinct repair-kernel shape buckets
-    audit_calls: int = 0            # invariant-audit dispatches (resilience)
-    audit_compiles: int = 0         # distinct audit-kernel shape buckets
-    h2d_bytes: int = 0              # host->device uploads the engine issued
-    d2h_bytes: int = 0              # device->host downloads (scalars + lazy
-                                    # materializations of GraphDev/CoarseMap)
-    buckets: set = field(default_factory=set)   # distinct (C, N, E, A, W)
-    contract_buckets: set = field(default_factory=set)  # distinct (Nb, Mb)
-    evo_buckets: set = field(default_factory=set)  # distinct evo shape keys
-    repair_buckets: set = field(default_factory=set)  # distinct repair shapes
-    audit_buckets: set = field(default_factory=set)  # distinct audit shapes
+    Counter fields live in a :class:`~repro.obs.MetricsRegistry` (one per
+    serving stack — the dynamic session threads its registry in so
+    engine + store + session share one snapshot/reset/export path);
+    bucket-key sets stay real sets (tests unpack them).
+    """
+
+    _COUNTER_FIELDS = (
+        "sweep_calls",
+        "sweep_compiles",       # distinct (bucket, statics) combinations
+        "pack_builds",
+        "pack_hits",
+        "dense_rounds",
+        "dense_compiles",       # distinct dense-round bucket shapes
+        "evo_calls",            # batched-evolution executable dispatches
+        "evo_compiles",         # distinct evo (phase, bucket) shapes
+        "contract_calls",
+        "contract_compiles",    # distinct (Nb, Mb) contraction buckets
+        "gather_builds",        # device pack gathers (GraphDev levels)
+        "gather_compiles",      # distinct gather shape combinations
+        "repair_calls",         # incremental-repair dispatches (dynamic)
+        "repair_compiles",      # distinct repair-kernel shape buckets
+        "audit_calls",          # invariant-audit dispatches (resilience)
+        "audit_compiles",       # distinct audit-kernel shape buckets
+        "h2d_bytes",            # host->device uploads the engine issued
+        "d2h_bytes",            # device->host downloads (scalars + lazy
+                                # materializations of GraphDev/CoarseMap)
+    )
+    _SET_FIELDS = (
+        "buckets",              # distinct (C, N, E, A, W)
+        "contract_buckets",     # distinct (Nb, Mb)
+        "evo_buckets",          # distinct evo shape keys
+        "repair_buckets",       # distinct repair shapes
+        "audit_buckets",        # distinct audit shapes
+    )
 
     @property
     def bucket_count(self) -> int:
@@ -172,6 +184,7 @@ class EngineStats:
         if key not in self.audit_buckets:
             self.audit_buckets.add(key)
             self.audit_compiles += 1
+            _obs_watchdog().note("engine.audit", key)
 
 
 class LPEngine:
@@ -186,6 +199,7 @@ class LPEngine:
         use_pallas: bool = True,
         interpret: Optional[bool] = None,
         pack_block: int = 8,
+        registry: Optional[MetricsRegistry] = None,
     ):
         n0, m0 = g0.n, g0.m
         # Small packing mini-blocks keep the max block-degree-sum (which
@@ -213,7 +227,7 @@ class LPEngine:
         self.interpret = (
             (jax.default_backend() != "tpu") if interpret is None else bool(interpret)
         )
-        self.stats = EngineStats()
+        self.stats = EngineStats(registry)
         self._packs: Dict[Tuple[int, str], _DevicePack] = {}
         self._arenas: Dict[int, _Arena] = {}
         self._ells: Dict[int, _DeviceEll] = {}
@@ -281,6 +295,12 @@ class LPEngine:
             self.stats.pack_hits += 1
             return hit
         self.stats.pack_builds += 1
+        with _obs_span(
+            "vcycle.pack", cat="vcycle", mode=mode, n=int(g.n), host=True
+        ):
+            return self._pack_host_build(g, key, mode)
+
+    def _pack_host_build(self, g: AnyGraph, key, mode: str) -> _DevicePack:
         order = make_order(g, mode, self.seed)
         pack = pack_chunks(
             g, order, max_nodes=self.N,
@@ -368,9 +388,14 @@ class LPEngine:
         if gkey not in self._gather_keys:
             self._gather_keys.add(gkey)
             self.stats.gather_compiles += 1
-        edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
-            nodes_d, nv_d, g.indptr, g.indices, g.ew, jnp.int32(g.n), E=Eb
-        )
+            _obs_watchdog().note("engine.gather", gkey)
+        with _obs_span(
+            "vcycle.pack", cat="vcycle", chunks=int(C), edge_bucket=int(Eb)
+        ) as sp:
+            edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
+                nodes_d, nv_d, g.indptr, g.indices, g.ew, jnp.int32(g.n), E=Eb
+            )
+            sp.sync_on(edge_valid)
         dp = _DevicePack(
             graph=g,
             nodes=nodes_d,
@@ -417,6 +442,7 @@ class LPEngine:
             if gkey not in self._gather_keys:
                 self._gather_keys.add(gkey)
                 self.stats.gather_compiles += 1
+                _obs_watchdog().note("engine.gather", gkey)
             dst_d, w_d = gather_ell_device(
                 rf_d, re_d, g.indices, g.ew, jnp.int32(g.n)
             )
@@ -499,6 +525,7 @@ class LPEngine:
         if ckey not in self._compile_keys:
             self._compile_keys.add(ckey)
             self.stats.sweep_compiles += 1
+            _obs_watchdog().note("engine.sweep", ckey)
         return _lp_sweep(
             dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w, dp.edge_src_slot,
             dp.edge_valid,
@@ -536,11 +563,17 @@ class LPEngine:
             r[: g.n] = restrict
             r_dev = jnp.asarray(r)
             self.stats.h2d_bytes += r.nbytes
-        labels, _, _ = self._sweep(
-            dp, self._iota, ar.cluster_w, ar.nw_arena, r_dev, U, seed, g.n,
-            iters=iters, refine_mode=False,
-            use_restrict=restrict is not None, permute_chunks=False,
-        )
+        with _obs_span(
+            "vcycle.sweep", cat="vcycle", mode="cluster", n=int(g.n),
+            iters=int(iters),
+        ) as sp:
+            labels, _, _ = self._sweep(
+                dp, self._iota, ar.cluster_w, ar.nw_arena, r_dev, U, seed,
+                g.n,
+                iters=iters, refine_mode=False,
+                use_restrict=restrict is not None, permute_chunks=False,
+            )
+            sp.sync_on(labels)
         self._drop_single_use(g, "degree")
         return labels[: g.n]
 
@@ -565,11 +598,17 @@ class LPEngine:
             ar.nw_arena
         )
         w0 = bw.at[k].set(jnp.inf)
-        lab_out, _, _ = self._sweep(
-            dp, lab, w0, ar.nw_arena, jnp.zeros(1, jnp.int32), U, seed, k,
-            iters=iters, refine_mode=True,
-            use_restrict=False, permute_chunks=True,
-        )
+        with _obs_span(
+            "vcycle.sweep", cat="vcycle", mode="refine", n=int(g.n),
+            iters=int(iters),
+        ) as sp:
+            lab_out, _, _ = self._sweep(
+                dp, lab, w0, ar.nw_arena, jnp.zeros(1, jnp.int32), U, seed,
+                k,
+                iters=iters, refine_mode=True,
+                use_restrict=False, permute_chunks=True,
+            )
+            sp.sync_on(lab_out)
         self._drop_single_use(g, "random")
         return lab_out
 
@@ -597,17 +636,23 @@ class LPEngine:
         if dkey not in self._dense_keys:
             self._dense_keys.add(dkey)
             self.stats.dense_compiles += 1
-        for r in range(iters):
-            lab = dense_round_device(
-                de.dst, de.w, de.row_node, lab, nw_nb,
-                jnp.float32(U),
-                jnp.int32((seed + 0x9E37 * r) & 0x7FFFFFFF),
-                jnp.float32(move_fraction),
-                jnp.int32(g.n),
-                k=k,
-                use_pallas=self.use_pallas, interpret=self.interpret,
-            )
-            self.stats.dense_rounds += 1
+            _obs_watchdog().note("engine.dense", dkey)
+        with _obs_span(
+            "vcycle.sweep", cat="vcycle", mode="dense", n=int(g.n),
+            iters=int(iters),
+        ) as sp:
+            for r in range(iters):
+                lab = dense_round_device(
+                    de.dst, de.w, de.row_node, lab, nw_nb,
+                    jnp.float32(U),
+                    jnp.int32((seed + 0x9E37 * r) & 0x7FFFFFFF),
+                    jnp.float32(move_fraction),
+                    jnp.int32(g.n),
+                    k=k,
+                    use_pallas=self.use_pallas, interpret=self.interpret,
+                )
+                self.stats.dense_rounds += 1
+            sp.sync_on(lab)
         if id(g) != self._g0_id:
             self._ells.pop(id(g), None)
         return self.to_arena(lab, g.n, fill=k)
@@ -632,6 +677,7 @@ class LPEngine:
         if key not in self.stats.repair_buckets:
             self.stats.repair_buckets.add(key)
             self.stats.repair_compiles += 1
+            _obs_watchdog().note("engine.repair", key)
 
     def repair(
         self,
@@ -733,11 +779,13 @@ class LPEngine:
         self._note_repair_key(
             ("frontier", Tb, a_src.shape[0], ip.shape[0], self.A)
         )
-        mask = expand_region_device(
-            jnp.asarray(tpad), a_src, a_dst, ip, jnp.int32(n),
-            jnp.int32(hops), jnp.int32(cap), A=self.A,
-        )
-        mask_np = np.asarray(mask[:n])
+        with _obs_span("repair.expand", cat="repair",
+                       touched=int(t_ids.size), hops=int(hops)):
+            mask = expand_region_device(
+                jnp.asarray(tpad), a_src, a_dst, ip, jnp.int32(n),
+                jnp.int32(hops), jnp.int32(cap), A=self.A,
+            )
+            mask_np = np.asarray(mask[:n])
         self.stats.d2h_bytes += mask_np.nbytes
         region = np.flatnonzero(mask_np)
         if region.size == 0:
@@ -772,9 +820,12 @@ class LPEngine:
         self._note_repair_key(
             ("gather", nodes.shape, ip.shape[0], a_dst.shape[0], Eb)
         )
-        edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
-            nodes_d, nv_d, ip, a_dst, a_ew, jnp.int32(n), E=Eb
-        )
+        with _obs_span("repair.gather", cat="repair",
+                       region=int(region.size)) as sp:
+            edge_dst, edge_w, edge_slot, edge_valid = gather_pack_device(
+                nodes_d, nv_d, ip, a_dst, a_ew, jnp.int32(n), E=Eb
+            )
+            sp.sync_on(edge_valid)
         dp = _DevicePack(
             graph=g, nodes=nodes_d, node_valid=nv_d, edge_dst=edge_dst,
             edge_w=edge_w, edge_src_slot=edge_slot, edge_valid=edge_valid,
@@ -788,29 +839,37 @@ class LPEngine:
         before_cut = cut_now(lab)
         w0 = bw.at[k].set(jnp.inf)
         self._note_repair_key(("sweep", dp.shape, self.A, k + 1, iters))
-        out, _, _ = self._sweep(
-            dp, lab, w0, ar.nw_arena, jnp.zeros(1, jnp.int32), U, seed, k,
-            iters=iters, refine_mode=True, use_restrict=False,
-            permute_chunks=True,
-        )
+        with _obs_span("repair.sweep", cat="repair", iters=int(iters)) as sp:
+            out, _, _ = self._sweep(
+                dp, lab, w0, ar.nw_arena, jnp.zeros(1, jnp.int32), U, seed, k,
+                iters=iters, refine_mode=True, use_restrict=False,
+                permute_chunks=True,
+            )
+            sp.sync_on(out)
         # ---- region-masked gain + balance rounds ----
         Kb = k + 1
-        for r in range(gain_rounds):
-            base_s = hash_base_u32(seed, r, TAG_DYN_GAIN)
-            base_g = hash_base_u32(seed, r, TAG_DYN_GAIN_GATE)
-            self._note_repair_key(("gain", self.A, a_src.shape[0], Kb))
-            out = gain_round_device(
-                a_src, a_dst, a_ew, ar.nw_arena, out, mask,
-                jnp.int32(n), jnp.int32(k), jnp.float32(U),
-                jnp.uint32(base_s), jnp.uint32(base_g), Kb=Kb,
-            )
+        with _obs_span("repair.gain", cat="repair",
+                       rounds=int(gain_rounds)) as sp:
+            for r in range(gain_rounds):
+                base_s = hash_base_u32(seed, r, TAG_DYN_GAIN)
+                base_g = hash_base_u32(seed, r, TAG_DYN_GAIN_GATE)
+                self._note_repair_key(("gain", self.A, a_src.shape[0], Kb))
+                out = gain_round_device(
+                    a_src, a_dst, a_ew, ar.nw_arena, out, mask,
+                    jnp.int32(n), jnp.int32(k), jnp.float32(U),
+                    jnp.uint32(base_s), jnp.uint32(base_g), Kb=Kb,
+                )
+            sp.sync_on(out)
         if balance_rounds:
             self._note_repair_key(("balance", self.A, Kb, balance_rounds))
-            out = balance_rounds_device(
-                ar.nw_arena, out, mask, jnp.int32(n), jnp.int32(k),
-                jnp.float32(U), jnp.int32(seed & 0x7FFFFFFF),
-                Kb=Kb, rounds=balance_rounds,
-            )
+            with _obs_span("repair.balance", cat="repair",
+                           rounds=int(balance_rounds)) as sp:
+                out = balance_rounds_device(
+                    ar.nw_arena, out, mask, jnp.int32(n), jnp.int32(k),
+                    jnp.float32(U), jnp.int32(seed & 0x7FFFFFFF),
+                    Kb=Kb, rounds=balance_rounds,
+                )
+                sp.sync_on(out)
         # ---- guard (the uncoarsening monotonicity guard's twin, plus a
         # feasibility clause): keep the repaired labels only if the cut did
         # not worsen AND the balance bound did not degrade, or if they
@@ -934,6 +993,7 @@ class LPEngine:
         if skey not in self.stats.evo_buckets:
             self.stats.evo_buckets.add(skey)
             self.stats.evo_compiles += 1
+            _obs_watchdog().note("engine.evo", skey)
         from .evolutionary import grow_rounds_bound
 
         labs, keys = evo_seed_step(
@@ -960,6 +1020,7 @@ class LPEngine:
                 if gkey not in self.stats.evo_buckets:
                     self.stats.evo_buckets.add(gkey)
                     self.stats.evo_compiles += 1
+                    _obs_watchdog().note("engine.evo", gkey)
                 labs, keys = evo_generation_step(
                     dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w,
                     dp.edge_src_slot, dp.edge_valid,
@@ -1023,6 +1084,7 @@ class LPEngine:
             if stat_key not in self.stats.evo_buckets:
                 self.stats.evo_buckets.add(stat_key)
                 self.stats.evo_compiles += 1
+                _obs_watchdog().note("engine.evo", stat_key)
             labs_d, keys_d = step(
                 dp.nodes, dp.node_valid, dp.edge_dst, dp.edge_w,
                 dp.edge_src_slot, dp.edge_valid,
@@ -1130,12 +1192,18 @@ class LPEngine:
         if ckey not in self.stats.contract_buckets:
             self.stats.contract_buckets.add(ckey)
             self.stats.contract_compiles += 1
-        (C, n_c, nw_c, indptr_c, src_c, dst_c, ew_c, m_c, nwmax,
-         ewmax) = contract_device(
-            src, dst, ew, nw, lab, jnp.int32(n), jnp.int32(m), wbits=wbits
-        )
-        # the only host sync of the level: all four scalars in one transfer
-        n_c, m_c, nwmax, ewmax = jax.device_get((n_c, m_c, nwmax, ewmax))
+            _obs_watchdog().note("engine.contract", ckey)
+        with _obs_span(
+            "vcycle.contract", cat="vcycle", n=int(n), m=int(m),
+        ):
+            (C, n_c, nw_c, indptr_c, src_c, dst_c, ew_c, m_c, nwmax,
+             ewmax) = contract_device(
+                src, dst, ew, nw, lab, jnp.int32(n), jnp.int32(m),
+                wbits=wbits,
+            )
+            # the only host sync of the level: all four scalars in one
+            # transfer (it also bounds the span — no extra block needed)
+            n_c, m_c, nwmax, ewmax = jax.device_get((n_c, m_c, nwmax, ewmax))
         n_c, m_c, nwmax, ewmax = int(n_c), int(m_c), float(nwmax), float(ewmax)
         self.stats.d2h_bytes += 16
         Ncb = _pow2(max(n_c, 8))

@@ -33,6 +33,7 @@ import numpy as np
 
 from ..graph.csr import GraphDev, GraphNP
 from ..graph.packing import chunk_geometry
+from ..obs import span as _obs_span
 from .contraction import CoarseMap, contract, project_labels
 from .engine import LPEngine
 from .evolutionary import EvoConfig, evolve
@@ -229,7 +230,13 @@ def _uncoarsen(g, hierarchy, lab, k, L, cfg, rng, eng):
             and not _use_numpy(gg_f, cfg)
         )
         if eng_level:
-            lab_dev = eng.project(lab_dev if lab_dev is not None else lab, C, fill=k)
+            with _obs_span(
+                "vcycle.project", cat="vcycle", n=int(gg_f.n)
+            ) as sp:
+                lab_dev = eng.project(
+                    lab_dev if lab_dev is not None else lab, C, fill=k
+                )
+                sp.sync_on(lab_dev)
             lab = None
             before = eng.cut(gg_f, lab_dev)
             if cfg.refine_engine == "dense" and gg_f.n >= cfg.dense_min_n:

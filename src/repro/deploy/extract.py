@@ -58,6 +58,8 @@ from jax import lax
 
 from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2, to_device_csr
 from ..graph.packing import gather_pack_device
+from ..obs import RegistryBackedStats
+from ..obs import watchdog as _obs_watchdog
 
 __all__ = [
     "BlockShard",
@@ -306,16 +308,17 @@ class BlockShard:
 # --------------------------------------------------------------------------
 
 
-@dataclass
-class DeployStats:
-    """Counters surfaced through ``ShardDeployment.stats()``."""
+class DeployStats(RegistryBackedStats):
+    """Counters surfaced through ``ShardDeployment.stats()``:
+    ``extract_calls`` (per-shard extraction dispatches), ``mask_calls``,
+    ``deploy_compiles`` (distinct deploy kernel shape buckets), and the
+    transfer byte counters."""
 
-    extract_calls: int = 0          # per-shard extraction dispatches
-    mask_calls: int = 0
-    deploy_compiles: int = 0        # distinct deploy kernel shape buckets
-    deploy_buckets: set = field(default_factory=set)
-    h2d_bytes: int = 0
-    d2h_bytes: int = 0
+    _COUNTER_FIELDS = (
+        "extract_calls", "mask_calls", "deploy_compiles",
+        "h2d_bytes", "d2h_bytes",
+    )
+    _SET_FIELDS = ("deploy_buckets",)
 
     @property
     def deploy_bucket_count(self) -> int:
@@ -354,6 +357,7 @@ class BlockExtractor:
         if key not in self.stats.deploy_buckets:
             self.stats.deploy_buckets.add(key)
             self.stats.deploy_compiles += 1
+            _obs_watchdog().note("deploy.extract", key)
 
     def _as_dev(self, g: AnyGraph) -> GraphDev:
         if isinstance(g, GraphDev):

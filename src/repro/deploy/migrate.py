@@ -40,8 +40,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from ..dynamic.session import PartitionSession, UpdateResult
+from ..dynamic.session import PartitionSession, UpdateResult, _reg_counter
 from ..dynamic.store import GraphUpdate
+from ..obs import span as _obs_span
 from .extract import BlockExtractor, BlockShard, assemble_schedule
 
 __all__ = ["MigrationDelta", "ShardDeployment"]
@@ -78,11 +79,21 @@ class ShardDeployment:
     labels — the invariant the parity tests pin after every batch.
     """
 
+    # deployment counters live in the session's registry (one stack, one
+    # reset/snapshot/export path); the extractor keeps its own registry —
+    # its h2d/d2h byte counters must not merge with the engine's
+    migrate_calls = _reg_counter("migrate_calls")
+    full_rebuilds = _reg_counter("full_rebuilds")
+    blocks_patched_total = _reg_counter("blocks_patched_total")
+    failed_migrations = _reg_counter("failed_migrations")
+    shard_recoveries = _reg_counter("shard_recoveries")
+
     def __init__(self, session: PartitionSession, halo: int = 1,
                  escalate_fraction: float = 0.5):
         if halo < 1:
             raise ValueError("halo depth must be >= 1")
         self.session = session
+        self.metrics = session.metrics
         self.halo = int(halo)
         self.k = session.k
         self.escalate_fraction = float(escalate_fraction)
@@ -140,6 +151,16 @@ class ShardDeployment:
     def migrate(self, upd: Optional[GraphUpdate],
                 res: Optional[UpdateResult] = None) -> MigrationDelta:
         """Patch the shard set to the session's current graph + labels."""
+        with _obs_span("deploy.migrate", cat="deploy") as sp:
+            delta = self._migrate_impl(upd, res)
+            sp.set(
+                blocks=int(delta.blocks_patched.size),
+                full_rebuild=delta.full_rebuild, failed=delta.failed,
+            )
+        return delta
+
+    def _migrate_impl(self, upd: Optional[GraphUpdate],
+                      res: Optional[UpdateResult]) -> MigrationDelta:
         t0 = time.time()
         self.migrate_calls += 1
         sess = self.session

@@ -41,8 +41,9 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from ..dynamic.session import PartitionSession, UpdateResult
+from ..dynamic.session import PartitionSession, UpdateResult, _reg_counter
 from ..dynamic.store import GraphUpdate
+from ..obs import span as _obs_span
 from ..resilience.audit import _shard_owned_chk
 from .extract import BlockShard, assemble_schedule
 from .migrate import MigrationDelta, ShardDeployment
@@ -64,6 +65,11 @@ class ReplicatedDeployment(ShardDeployment):
     with checksum-verified reads.
     """
 
+    failovers = _reg_counter("failovers")
+    failover_misses = _reg_counter("failover_misses")
+    replica_refreshes = _reg_counter("replica_refreshes")
+    reads = _reg_counter("replica_reads")
+
     def __init__(self, session: PartitionSession, halo: int = 1,
                  escalate_fraction: float = 0.5, replicas: int = 2):
         if replicas < 1:
@@ -71,6 +77,8 @@ class ReplicatedDeployment(ShardDeployment):
         self.replicas = int(replicas)
         # initialized before super(): super().__init__ extracts the first
         # shard set and our migrate() override fires during later calls
+        # (metrics too — the registry-backed counters write through it)
+        self.metrics = session.metrics
         self._standbys: List[List[BlockShard]] = []
         self._expected_chk: List[int] = []
         self.recovery_pending: Set[int] = set()
@@ -147,24 +155,32 @@ class ReplicatedDeployment(ShardDeployment):
     def failover(self, b: int) -> BlockShard:
         """Promote an audited standby over a lost/corrupt primary."""
         t0 = time.time()
-        while self._standbys[b]:
-            cand = self._standbys[b].pop(0)
-            if self.verify_shard(b, cand):
-                self.shards[b] = cand
-                # a standby captured before later migrations carries a
-                # stale slot ordering; content is pristine (checksummed),
-                # the schedule is host-cheap to re-couple globally
-                assemble_schedule(self.shards)
-                self._refresh_member_rows([b], self.session.n)
-                self.recovery_pending.add(b)
-                self.failovers += 1
-                self.last_failover_seconds = time.time() - t0
-                return self.shards[b]
-        # every copy gone: recover synchronously (the read still succeeds)
-        self.failover_misses += 1
-        shard = self.recover_block(b)
-        self.last_failover_seconds = time.time() - t0
-        return shard
+        with _obs_span("deploy.failover", cat="deploy", block=int(b)) as sp:
+            while self._standbys[b]:
+                cand = self._standbys[b].pop(0)
+                if self.verify_shard(b, cand):
+                    self.shards[b] = cand
+                    # a standby captured before later migrations carries a
+                    # stale slot ordering; content is pristine (checksummed),
+                    # the schedule is host-cheap to re-couple globally
+                    assemble_schedule(self.shards)
+                    self._refresh_member_rows([b], self.session.n)
+                    self.recovery_pending.add(b)
+                    self.failovers += 1
+                    self.last_failover_seconds = time.time() - t0
+                    self.metrics.observe(
+                        "failover_seconds", self.last_failover_seconds
+                    )
+                    return self.shards[b]
+            # every copy gone: recover synchronously (read still succeeds)
+            sp.set(miss=True)
+            self.failover_misses += 1
+            shard = self.recover_block(b)
+            self.last_failover_seconds = time.time() - t0
+            self.metrics.observe(
+                "failover_seconds", self.last_failover_seconds
+            )
+            return shard
 
     def run_recovery(self) -> List[int]:
         """Drain the background-recovery queue: re-extract every block that
@@ -199,5 +215,6 @@ class ReplicatedDeployment(ShardDeployment):
             replica_refreshes=self.replica_refreshes,
             replica_reads=self.reads,
             recovery_pending=len(self.recovery_pending),
+            last_failover_seconds=self.last_failover_seconds,
         )
         return d

@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import functools
 import time
-from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Mapping, Tuple
 
 import numpy as np
@@ -46,6 +45,9 @@ import jax.numpy as jnp
 from ..core.engine import _pow2
 from ..core.label_propagation import _lp_sweep, hash_base_u32
 from ..graph.packing import gather_pack_device, plan_region_pack
+from ..obs import RegistryBackedStats
+from ..obs import span as _obs_span
+from ..obs import watchdog as _obs_watchdog
 from .repair import (
     TAG_DYN_GAIN,
     TAG_DYN_GAIN_GATE,
@@ -145,17 +147,19 @@ def _group_select(ok, out, lab):
     return jnp.where(ok[:, None], out, lab)
 
 
-@dataclass
-class GroupStats:
-    """Counters surfaced through ``SessionGroup.stats()``."""
+class GroupStats(RegistryBackedStats):
+    """Counters surfaced through ``SessionGroup.stats()``: ``group_steps``
+    (update_many calls that dispatched a group), ``lanes_repaired``
+    (tenant-updates served by vmapped repair), ``solo_fallbacks``
+    (served by session.update), ``noops``, ``coalesced`` (extra updates
+    merged into a tenant batch), ``group_compiles`` (distinct group-kernel
+    shape buckets)."""
 
-    group_steps: int = 0            # update_many calls that dispatched a group
-    lanes_repaired: int = 0         # tenant-updates served by vmapped repair
-    solo_fallbacks: int = 0         # tenant-updates served by session.update
-    noops: int = 0                  # net no-op tenant-updates
-    coalesced: int = 0              # extra updates merged into a tenant batch
-    group_compiles: int = 0         # distinct group-kernel shape buckets
-    group_buckets: set = field(default_factory=set)
+    _COUNTER_FIELDS = (
+        "group_steps", "lanes_repaired", "solo_fallbacks", "noops",
+        "coalesced", "group_compiles",
+    )
+    _SET_FIELDS = ("group_buckets",)
 
     @property
     def group_bucket_count(self) -> int:
@@ -180,6 +184,7 @@ class SessionGroup:
         if key not in self.stats.group_buckets:
             self.stats.group_buckets.add(key)
             self.stats.group_compiles += 1
+            _obs_watchdog().note("group.repair", key)
 
     # ------------------------------------------------------------- public
 
@@ -250,7 +255,11 @@ class SessionGroup:
                 (name, sess, g, net_u, net_v)
             )
         for gkey, members in buckets.items():
-            self._dispatch_bucket(gkey, members, results)
+            with _obs_span(
+                "group.lane", cat="group", lanes=len(members),
+                tenants=",".join(m[0] for m in members),
+            ):
+                self._dispatch_bucket(gkey, members, results)
         elapsed = time.time() - t0
         nl = max(len(lanes), 1)
         for name, *_ in lanes:
@@ -425,7 +434,9 @@ class SessionGroup:
                 imbalance=imb, feasible=feas,
                 region_size=int(plans[i][4]),
                 escalated=escalated, stale=stale,
+                t_mono=time.monotonic(),
             )
+            sess.updates_applied += 1
             sess.trajectory.append(res)
             results[name] = res
 

@@ -29,8 +29,8 @@ step counter, all tie-breaks are stateless hashes.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -40,6 +40,8 @@ from ..core.engine import LPEngine
 from ..core.metrics import lmax
 from ..core.multilevel import PartitionerConfig, partition
 from ..graph.csr import GraphNP
+from ..obs import MetricsRegistry
+from ..obs import span as _obs_span
 from .store import DynamicGraphStore, GraphUpdate
 
 __all__ = ["PartitionSession", "SessionConfig", "UpdateResult"]
@@ -128,22 +130,54 @@ class UpdateResult:
     seconds: float = 0.0
     h2d_bytes: int = 0          # engine-accounted transfer deltas of the step
     d2h_bytes: int = 0
+    t_mono: float = 0.0         # monotonic clock at step END (ordering /
+                                # latency joins across restarts use deltas)
+    span_ms: Dict[str, float] = field(default_factory=dict)
+                                # per-phase wall-ms breakdown (validate /
+                                # store / compact / repair / score / ...)
+
+
+def _reg_counter(name: str):
+    """Session counter stored in the stack's :class:`MetricsRegistry` —
+    the attribute surface (``sess.escalations += 1``) is unchanged, but
+    reset/snapshot/export all go through the one registry path."""
+
+    def _get(self):
+        return self.metrics.get(name)
+
+    def _set(self, value):
+        self.metrics.set_counter(name, value)
+
+    return property(_get, _set, doc=f"registry-backed counter {name!r}")
 
 
 class PartitionSession:
     """Device-resident graph + partition absorbing a stream of updates."""
 
+    escalations = _reg_counter("escalations")
+    engine_rebuilds = _reg_counter("engine_rebuilds")
+    escalate_h2d_saved = _reg_counter("escalate_h2d_saved")
+    suppressed_escalations = _reg_counter("suppressed_escalations")
+    updates_applied = _reg_counter("updates_applied")
+    view_hits = _reg_counter("view_hits")
+
     def __init__(self, g: GraphNP, cfg: SessionConfig):
         self.cfg = cfg
         self.k = cfg.k
+        # one registry per serving stack: engine + store + session counters
+        # share it, so a single snapshot()/reset()/Prometheus export covers
+        # the whole stack (and tenant stacks never share counters)
+        self.metrics = MetricsRegistry("session")
         t0 = time.time()
         rep = partition(g, cfg.make_partition_cfg(cfg.seed))
         self.engine = LPEngine(
-            g, target_chunks=cfg.target_chunks, seed=cfg.seed
+            g, target_chunks=cfg.target_chunks, seed=cfg.seed,
+            registry=self.metrics,
         )
         self.store = DynamicGraphStore(
             g, overlay_cap=cfg.overlay_cap,
             on_h2d=self._note_h2d, on_d2h=self._note_d2h,
+            registry=self.metrics,
         )
         self._base_id = id(self.store.base)
         self.labels = self.engine.to_arena(rep.labels, g.n, fill=self.k)
@@ -151,6 +185,8 @@ class PartitionSession:
         self.engine_rebuilds = 0
         self.escalate_h2d_saved = 0
         self.suppressed_escalations = 0
+        self.updates_applied = 0
+        self.view_hits = 0
         # degraded mode (set by the resilience watchdog): quality-guard
         # escalations are skipped and the step is flagged ``stale`` instead
         self.suppress_escalation = False
@@ -186,12 +222,15 @@ class PartitionSession:
         self = cls.__new__(cls)
         self.cfg = cfg
         self.k = cfg.k
+        self.metrics = MetricsRegistry("session")
         self.engine = LPEngine(
-            g, target_chunks=cfg.target_chunks, seed=cfg.seed
+            g, target_chunks=cfg.target_chunks, seed=cfg.seed,
+            registry=self.metrics,
         )
         self.store = DynamicGraphStore(
             g, overlay_cap=cfg.overlay_cap,
             on_h2d=self._note_h2d, on_d2h=self._note_d2h,
+            registry=self.metrics,
         )
         self._base_id = id(self.store.base)
         self.labels = self.engine.to_arena(
@@ -201,6 +240,8 @@ class PartitionSession:
         self.engine_rebuilds = 0
         self.escalate_h2d_saved = 0
         self.suppressed_escalations = 0
+        self.updates_applied = 0
+        self.view_hits = 0
         self.suppress_escalation = bool(suppress_escalation)
         self._step = int(step)
         self._cut_ref = float(cut_ref)
@@ -341,8 +382,32 @@ class PartitionSession:
         session and store bit-identical — replaying the stream after a
         rejection produces the same labels as if the bad batch never
         arrived."""
+        with _obs_span(
+            "session.update", cat="session", step=self._step + 1
+        ) as sp:
+            res = self._update_impl(upd)
+            sp.set(
+                noop=res.noop, escalated=res.escalated,
+                used_view=res.used_view, region=res.region_size,
+            )
+        self.metrics.observe("update_seconds", res.seconds)
+        return res
+
+    def _update_impl(self, upd: GraphUpdate) -> UpdateResult:
         t0 = time.time()
+        sp_ms: Dict[str, float] = {}
+        t_last = time.perf_counter()
+
+        def lap(phase: str) -> None:
+            # always-on phase clock (plain perf_counter reads — the < 2%
+            # tracing-off overhead budget covers it); feeds span_ms
+            nonlocal t_last
+            now = time.perf_counter()
+            sp_ms[phase] = sp_ms.get(phase, 0.0) + (now - t_last) * 1e3
+            t_last = now
+
         upd.validate(self.store.n)
+        lap("validate")
         self._step += 1
         step = self._step
         st = self.engine.stats
@@ -357,11 +422,13 @@ class PartitionSession:
                 step=step, n=self.store.n, m=self.store.m, cut=last.cut,
                 imbalance=last.imbalance, feasible=last.feasible, noop=True,
                 seconds=time.time() - t0,
+                t_mono=time.monotonic(), span_ms=sp_ms,
             )
             self.trajectory.append(res)
             return res
         first_new = self.store.n
         self.store.apply(upd)
+        lap("store")
         # ---- compaction policy (ISSUE 8): below the threshold, repair on
         # the base + overlay view and skip the merge sort entirely; past
         # it, compact — synchronously, or (defer_compaction) dispatch the
@@ -386,12 +453,14 @@ class PartitionSession:
         else:                           # keyed on it) survives the step
             g = self.store.graph()      # compacts the overlay
             adjacency = None
+        lap("compact")
         self._maybe_rebuild_engine()
         if id(g) != self._base_id:
             # fresh base handle: drop device caches keyed on the old one
             self.engine.evict(keep=(g,))
             self._base_id = id(g)
         self._assign_new_nodes(g, first_new)
+        lap("rebuild")
         touched = np.concatenate([
             net_u, net_v,
             np.arange(first_new, self.store.n, dtype=np.int64),
@@ -405,6 +474,7 @@ class PartitionSession:
             hop_degree_cap=self._hop_cap(),
             adjacency=None if adjacency is None else adjacency[:4],
         )
+        lap("repair")
         # the repair guard already evaluated the returned labels — score
         # the step from its cut/block-weight results, no re-reduction
         W = max(self.store.total_node_weight, 1e-9)
@@ -425,6 +495,7 @@ class PartitionSession:
         )
         escalated = wanted and not self.suppress_escalation
         stale = wanted and self.suppress_escalation
+        lap("score")
         if stale:
             self.suppressed_escalations += 1
         if escalated:
@@ -432,12 +503,17 @@ class PartitionSession:
             # escalation compacted the store — rescore on the fresh base
             cut, imb, feas = self._score(self.store.base)
             m_now = self.store.m
+            lap("escalate")
+        self.updates_applied += 1
+        if use_view:
+            self.view_hits += 1
         res = UpdateResult(
             step=step, n=self.store.n, m=m_now, cut=cut,
             imbalance=imb, feasible=feas, region_size=int(rsize),
             escalated=escalated, stale=stale, used_view=use_view,
             compact_deferred=deferred, seconds=time.time() - t0,
             h2d_bytes=st.h2d_bytes - h2d0, d2h_bytes=st.d2h_bytes - d2h0,
+            t_mono=time.monotonic(), span_ms=sp_ms,
         )
         self.trajectory.append(res)
         return res
@@ -492,7 +568,10 @@ class PartitionSession:
             imbalance=imb, feasible=feas, escalated=escalated, stale=stale,
             seconds=time.time() - t0,
             h2d_bytes=st.h2d_bytes - h2d0, d2h_bytes=st.d2h_bytes - d2h0,
+            t_mono=time.monotonic(),
         )
+        self.updates_applied += 1
+        self.metrics.observe("update_seconds", res.seconds)
         self.trajectory.append(res)
         return res
 
@@ -501,6 +580,8 @@ class PartitionSession:
         d = self.engine.stats_dict()
         d.update(
             updates=self._step,
+            updates_applied=self.updates_applied,
+            view_hits=self.view_hits,
             escalations=self.escalations,
             escalate_h2d_saved=self.escalate_h2d_saved,
             suppressed_escalations=self.suppressed_escalations,

@@ -44,6 +44,9 @@ import jax
 import jax.numpy as jnp
 
 from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2, to_device_csr
+from ..obs import MetricsRegistry, RegistryBackedStats
+from ..obs import span as _obs_span
+from ..obs import watchdog as _obs_watchdog
 
 __all__ = [
     "DynamicGraphStore",
@@ -301,25 +304,24 @@ class GraphUpdate:
         return (first[live] // n, first[live] % n, net[live])
 
 
-@dataclass
-class StoreStats:
-    """Counters surfaced through ``PartitionSession.stats()``."""
+class StoreStats(RegistryBackedStats):
+    """Counters surfaced through ``PartitionSession.stats()``.
 
-    update_batches: int = 0
-    edges_added: int = 0
-    edges_removed: int = 0
-    nodes_added: int = 0
-    nodes_removed: int = 0
-    compact_calls: int = 0
-    compact_compiles: int = 0       # distinct (Mb, Rb, Nb) merge buckets
-    compact_buckets: set = field(default_factory=set)
-    compact_deferred: int = 0       # compactions dispatched asynchronously
-    view_calls: int = 0             # overlay-view builds (skipped compactions)
-    view_compiles: int = 0          # distinct (Mb, Rb, Nb) view buckets
-    view_buckets: set = field(default_factory=set)
-    vacuum_calls: int = 0
-    vacuum_compiles: int = 0        # distinct (Mb, Nb) relabel buckets
-    vacuum_buckets: set = field(default_factory=set)
+    Counter fields live in a :class:`~repro.obs.MetricsRegistry` (attribute
+    access reads/writes through); bucket-key sets stay plain sets — tests
+    unpack them.  ``compact_compiles`` counts distinct (Mb, Rb, Nb) merge
+    buckets, ``view_compiles`` the view buckets, ``vacuum_compiles`` the
+    (Mb, Nb) relabel buckets; ``compact_deferred`` counts compactions
+    dispatched asynchronously."""
+
+    _COUNTER_FIELDS = (
+        "update_batches", "edges_added", "edges_removed",
+        "nodes_added", "nodes_removed",
+        "compact_calls", "compact_compiles", "compact_deferred",
+        "view_calls", "view_compiles",
+        "vacuum_calls", "vacuum_compiles",
+    )
+    _SET_FIELDS = ("compact_buckets", "view_buckets", "vacuum_buckets")
 
     @property
     def compact_bucket_count(self) -> int:
@@ -615,6 +617,7 @@ class DynamicGraphStore:
         overlay_cap: int = 1 << 16,
         on_h2d: Optional[Callable[[int], None]] = None,
         on_d2h: Optional[Callable[[int], None]] = None,
+        registry: Optional[MetricsRegistry] = None,
     ):
         if g.m and not bool(np.all(g.ew == np.round(g.ew))):
             raise ValueError("dynamic store requires integral edge weights")
@@ -623,7 +626,7 @@ class DynamicGraphStore:
         self._on_h2d = on_h2d or (lambda b: None)
         self._on_d2h = on_d2h or (lambda b: None)
         self.overlay_cap = int(overlay_cap)
-        self.stats = StoreStats()
+        self.stats = StoreStats(registry)
         self.n = g.n
         self._nw = g.nw.astype(np.float64).copy()   # host mirror, authoritative
         self.base: GraphDev = to_device_csr(
@@ -750,14 +753,21 @@ class DynamicGraphStore:
         if ckey not in self.stats.compact_buckets:
             self.stats.compact_buckets.add(ckey)
             self.stats.compact_compiles += 1
+            _obs_watchdog().note("store.compact", ckey)
         # base node bucket may be smaller than Nb after node adds; the merge
         # only reads arc arrays + the new nw, so no base re-pad is needed
-        res = merge_overlay_device(
-            self.base.src, self.base.indices, self.base.ew,
-            jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
-            self._nw_dev,
-            jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
-        )
+        with _obs_span(
+            "store.compact", cat="store", overlay=int(r), m=int(self.base.m)
+        ):
+            # deliberately NO sync_on: the merge's async dispatch (deferred
+            # compaction overlaps the next batch's repair) must survive
+            # tracing — the span covers dispatch, not device completion
+            res = merge_overlay_device(
+                self.base.src, self.base.indices, self.base.ew,
+                jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
+                self._nw_dev,
+                jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
+            )
         self._pending = dict(
             res=res, r=r, nchunks=len(self._ou), n=self.n,
             nw_dev=self._nw_dev,
@@ -882,12 +892,18 @@ class DynamicGraphStore:
         if vkey not in self.stats.view_buckets:
             self.stats.view_buckets.add(vkey)
             self.stats.view_compiles += 1
+            _obs_watchdog().note("store.view", vkey)
         self._on_h2d(ou.nbytes + ov.nbytes + ow.nbytes)
-        indptr_v, src_v, dst_v, ew_v, m_view = overlay_view_device(
-            self.base.indptr, self.base.src, self.base.indices, self.base.ew,
-            jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
-            jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
-        )
+        with _obs_span(
+            "store.view", cat="store", overlay=int(r), m=int(self.base.m)
+        ) as sp:
+            indptr_v, src_v, dst_v, ew_v, m_view = overlay_view_device(
+                self.base.indptr, self.base.src, self.base.indices,
+                self.base.ew,
+                jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
+                jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
+            )
+            sp.sync_on(m_view)
         return indptr_v, src_v, dst_v, ew_v, m_view
 
     def graph(self) -> GraphDev:
@@ -976,16 +992,21 @@ class DynamicGraphStore:
         if vkey not in self.stats.vacuum_buckets:
             self.stats.vacuum_buckets.add(vkey)
             self.stats.vacuum_compiles += 1
+            _obs_watchdog().note("store.vacuum", vkey)
         newid = np.zeros(Nb, np.int32)
         newid[:n_old] = np.maximum(newid_h, 0)
         keep = np.zeros(Nb, bool)
         keep[:n_old] = keep_h
         self._on_h2d(newid.nbytes + keep.nbytes)
-        indptr_r, src_r, dst_r, ew_r, nw_r = vacuum_device(
-            self.base.src, self.base.indices, self.base.ew,
-            jnp.asarray(newid), jnp.asarray(keep), self.base.nw,
-            jnp.int32(self.base.m),
-        )
+        with _obs_span(
+            "store.vacuum", cat="store", removed=int(n_old - n_new)
+        ) as sp:
+            indptr_r, src_r, dst_r, ew_r, nw_r = vacuum_device(
+                self.base.src, self.base.indices, self.base.ew,
+                jnp.asarray(newid), jnp.asarray(keep), self.base.nw,
+                jnp.int32(self.base.m),
+            )
+            sp.sync_on(nw_r)
         self._nw = self._nw[keep_h]
         self._nw_dev = nw_r
         self.base = GraphDev(

@@ -1,0 +1,31 @@
+"""Unified observability layer (PR 9).
+
+Four pieces, one import surface:
+
+* :class:`MetricsRegistry` / :class:`RegistryBackedStats` — the single
+  counter/gauge/histogram store behind every subsystem's stats object;
+* :func:`span` / :class:`Tracer` — nested spans with device-sync close,
+  Chrome-trace export (Perfetto), near-zero overhead when disabled;
+* :func:`watchdog` / :class:`CompileWatchdog` — runtime guard promoting
+  the "compiles == buckets" test idiom (strict + seal modes);
+* :func:`write_slo` — Prometheus text + JSON snapshot of the serving
+  SLO metrics.
+
+See docs/OBSERVABILITY.md for the span taxonomy and metric catalog.
+"""
+
+from .registry import MetricsRegistry, RegistryBackedStats
+from .trace import Span, Tracer, get_tracer, set_tracer, span
+from .watchdog import (
+    KERNEL_FAMILIES, KNOWN_JIT_SITES, CompileRecord, CompileWatchdog,
+    WatchdogError, watchdog,
+)
+from .export import slo_snapshot, to_prometheus, write_slo
+
+__all__ = [
+    "MetricsRegistry", "RegistryBackedStats",
+    "Span", "Tracer", "get_tracer", "set_tracer", "span",
+    "CompileRecord", "CompileWatchdog", "WatchdogError", "watchdog",
+    "KERNEL_FAMILIES", "KNOWN_JIT_SITES",
+    "slo_snapshot", "to_prometheus", "write_slo",
+]

@@ -1,0 +1,112 @@
+"""Static registration check: every ``jax.jit`` / ``pallas_call`` callsite
+under ``src/repro`` must be registered in ``KNOWN_JIT_SITES``.
+
+Run by the tier-1 suite (tests/test_obs.py) so a new kernel cannot land
+without either wiring its compile accounting into the watchdog or
+explicitly exempting it with a reason.  Detection is syntactic over the
+AST: any occurrence of the attribute/name ``jit`` on a ``jax`` object or
+``pallas_call`` — as a decorator, a ``functools.partial(jax.jit, ...)``
+argument, or an inline call — is mapped to its *site name*: the
+decorated/enclosing function, or the assignment target for module-level
+``name = jax.jit(fn)`` bindings.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Tuple
+
+__all__ = ["find_jit_sites", "check_registration"]
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    """``jax.jit`` (or ``*.jit`` on a jax-ish module) / ``pallas_call``."""
+    if isinstance(node, ast.Attribute):
+        if node.attr == "pallas_call":
+            return True
+        if node.attr == "jit":
+            v = node.value
+            return isinstance(v, ast.Name) and v.id in ("jax", "pjit")
+    if isinstance(node, ast.Name):
+        return node.id == "pallas_call"
+    return False
+
+
+class _SiteVisitor(ast.NodeVisitor):
+    def __init__(self):
+        self.sites: List[Tuple[int, str]] = []   # (lineno, site name)
+        self._stack: List[str] = []
+        self._assign: List[str] = []
+
+    def _site_name(self, lineno: int) -> str:
+        if self._stack:
+            return self._stack[0]       # outermost def owns the site
+        if self._assign:
+            return self._assign[-1]
+        return f"line{lineno}"
+
+    def visit_FunctionDef(self, node):
+        # decorators evaluate in the enclosing scope, the body inside
+        for dec in node.decorator_list:
+            for sub in ast.walk(dec):
+                if _is_jit_ref(sub):
+                    name = self._stack[0] if self._stack else node.name
+                    self.sites.append((node.lineno, name))
+                    break
+            else:
+                continue
+            break
+        self._stack.append(node.name)
+        for stmt in node.body:
+            self.visit(stmt)
+        self._stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        for stmt in node.body:
+            self.visit(stmt)
+
+    def visit_Assign(self, node):
+        tgt = node.targets[0]
+        if isinstance(tgt, ast.Name):
+            self._assign.append(tgt.id)
+            self.generic_visit(node.value)
+            self._assign.pop()
+        else:
+            self.generic_visit(node.value)
+
+    def generic_visit(self, node):
+        if _is_jit_ref(node):
+            self.sites.append((node.lineno, self._site_name(node.lineno)))
+            return   # don't double-count jax.jit's own sub-nodes
+        super().generic_visit(node)
+
+
+def find_jit_sites(root: str) -> List[str]:
+    """All ``<relpath>::<site>`` strings under ``root`` (a src/repro dir)."""
+    found = set()
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path) as f:
+                try:
+                    tree = ast.parse(f.read())
+                except SyntaxError:
+                    continue
+            v = _SiteVisitor()
+            v.visit(tree)
+            for _lineno, name in v.sites:
+                found.add(f"{rel}::{name}")
+    return sorted(found)
+
+
+def check_registration(root: str) -> List[str]:
+    """Return the list of UNREGISTERED sites (empty == check passes)."""
+    from .watchdog import KNOWN_JIT_SITES
+
+    return [s for s in find_jit_sites(root) if s not in KNOWN_JIT_SITES]

@@ -1,0 +1,165 @@
+"""Span tracer with Chrome-trace-event export (Perfetto-loadable).
+
+Spans are nested wall-clock intervals with an explicit device-sync
+boundary: a span that wraps device work registers its output arrays via
+``sp.sync_on(...)`` and the *close* calls ``jax.block_until_ready`` — but
+only when tracing is enabled.  With tracing off, ``span()`` returns a
+cached singleton no-op whose enter/exit do nothing (one module-global
+load + a ``None`` check on the hot path), so the serving loop's labels
+AND its timing are unchanged — the ``obs_overhead`` benchmark row pins
+this at < 2% on ``dynamic_hot`` steady state.
+
+Usage::
+
+    from repro.obs import span, set_tracer, Tracer
+
+    set_tracer(Tracer())            # enable (None disables again)
+    with span("repair.sweep", cat="repair", region=int(nr)) as sp:
+        out = _lp_sweep(...)
+        sp.sync_on(out)             # close blocks until device-done
+    get_tracer().export_chrome("trace.json")   # load in ui.perfetto.dev
+
+Span taxonomy (docs/OBSERVABILITY.md has the catalog): ``vcycle.*``
+(pack/sweep/contract/project), ``repair.*`` (expand/gather/sweep/gain/
+balance), ``store.*`` (compact/view/vacuum), ``group.lane``,
+``deploy.migrate``, ``resilience.audit``, ``resilience.snapshot``,
+``wal.fsync``, ``checkpoint.write``, ``session.update``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import List, Optional
+
+__all__ = ["Tracer", "Span", "span", "get_tracer", "set_tracer"]
+
+
+class _NoopSpan:
+    """The disabled path: every method is a no-op, one shared instance."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def sync_on(self, *arrays):
+        pass
+
+    def set(self, **args):
+        pass
+
+
+_NOOP = _NoopSpan()
+
+
+class Span:
+    __slots__ = ("tracer", "name", "cat", "args", "_sync", "t0", "tid")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args: dict):
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self._sync = None
+        self.t0 = 0.0
+        self.tid = 0
+
+    def __enter__(self):
+        self.tid = threading.get_ident() & 0xFFFF
+        self.t0 = time.perf_counter()
+        return self
+
+    def sync_on(self, *arrays):
+        """Arrays whose device completion bounds this span (closed-over by
+        ``__exit__``; the block happens only because tracing is on)."""
+        self._sync = arrays
+
+    def set(self, **args):
+        self.args.update(args)
+
+    def __exit__(self, *exc):
+        if self._sync is not None:
+            import jax
+
+            try:
+                jax.block_until_ready(self._sync)
+            except Exception:
+                pass   # tracing must never turn a serving error into another
+        t1 = time.perf_counter()
+        self.tracer._record(self, t1)
+        return False
+
+
+class Tracer:
+    """Collects complete ("ph": "X") Chrome trace events, microsecond ts."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.events: List[dict] = []
+        self._origin = time.perf_counter()
+        self._lock = threading.Lock()
+
+    def span(self, name: str, cat: str = "", **args):
+        if not self.enabled:
+            return _NOOP
+        return Span(self, name, cat, args)
+
+    def _record(self, sp: Span, t1: float) -> None:
+        ev = dict(
+            name=sp.name, cat=sp.cat or sp.name.split(".")[0], ph="X",
+            ts=(sp.t0 - self._origin) * 1e6, dur=(t1 - sp.t0) * 1e6,
+            pid=os.getpid(), tid=sp.tid,
+        )
+        if sp.args:
+            ev["args"] = sp.args
+        with self._lock:
+            self.events.append(ev)
+
+    def clear(self) -> None:
+        with self._lock:
+            self.events.clear()
+
+    def export_chrome(self, path: str) -> str:
+        """Write ``{"traceEvents": [...]}`` — drag into ui.perfetto.dev."""
+        with self._lock:
+            doc = dict(
+                traceEvents=list(self.events),
+                displayTimeUnit="ms",
+            )
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, path)
+        return path
+
+
+_tracer: Optional[Tracer] = None
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _tracer
+
+
+def set_tracer(tracer: Optional[Tracer]) -> Optional[Tracer]:
+    """Install (or with ``None`` remove) the process-global tracer."""
+    global _tracer
+    prev, _tracer = _tracer, tracer
+    return prev
+
+
+def span(name: str, cat: str = "", **args):
+    """The instrumentation entry point every subsystem calls.
+
+    Disabled fast path: one global load, one ``None`` test, return the
+    shared no-op singleton — no allocation, no branching at close.
+    """
+    t = _tracer
+    if t is None or not t.enabled:
+        return _NOOP
+    return Span(t, name, cat, args)

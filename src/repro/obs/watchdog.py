@@ -1,0 +1,258 @@
+"""Compile/retrace watchdog: the "compiles == buckets" idiom as a runtime
+guard.
+
+Every bucketed jit cache in the repo already does manual compile
+accounting (``if key not in bucket_set: add; *_compiles += 1``) and the
+test suite regression-pins ``compiles == bucket_count`` per kernel
+family.  The watchdog promotes that idiom to runtime:
+
+* each accounting site *also* calls ``watchdog().note(family, key)`` the
+  moment a **new** bucket key is seen — i.e. exactly when XLA will
+  compile a fresh executable;
+* every compile is recorded as a :class:`CompileRecord` ``(kernel,
+  bucket key, wall ms)``; wall time comes from ``jax.monitoring``'s
+  compile-duration events when the API exists (attributed to the most
+  recent note — best-effort, the events are not kernel-tagged), else 0;
+* **strict mode** (``set_strict(True)`` or env ``REPRO_OBS_STRICT=1``)
+  raises :class:`WatchdogError` on a note for a kernel family outside
+  the declared set — an instrumented callsite someone forgot to
+  register;
+* ``seal()`` freezes the current bucket sets: any later note with a new
+  key raises — the production guard against shape-bucket leaks
+  (a serving loop that starts retracing per batch instead of reusing
+  its buckets).  ``unseal()`` lifts it (e.g. around a planned engine
+  rebuild that legitimately opens new buckets).
+
+``KNOWN_JIT_SITES`` is the registration manifest the tier-1 static check
+walks against: every ``jax.jit`` / ``pallas_call`` callsite under
+``src/repro`` must appear here, mapped to its watchdog kernel family (or
+an ``exempt:`` reason for host-launch scaffolding outside the bucketed
+serving stack).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+__all__ = [
+    "CompileRecord", "CompileWatchdog", "WatchdogError", "watchdog",
+    "KERNEL_FAMILIES", "KNOWN_JIT_SITES",
+]
+
+
+class WatchdogError(RuntimeError):
+    """An undeclared kernel family (strict) or a post-seal new bucket."""
+
+
+# Every kernel family the instrumented accounting sites note.  Declared
+# up front so strict mode can run from process start.
+KERNEL_FAMILIES: Tuple[str, ...] = (
+    "engine.sweep",          # _lp_sweep (bucket, statics) combinations
+    "engine.dense",          # dense_round_device shape buckets
+    "engine.gather",         # gather_pack_device / gather_ell_device
+    "engine.contract",       # contract_device (Nb, Mb, wbits)
+    "engine.evo",            # evo_seed_step / evo_generation_step
+    "engine.repair",         # repair expand/gather/sweep/gain/balance
+    "engine.audit",          # resilience audit kernels (incl. shard chk)
+    "store.compact",         # merge_overlay_device buckets
+    "store.view",            # overlay_view_device buckets
+    "store.vacuum",          # vacuum_device buckets
+    "group.repair",          # the vmapped group lane kernels
+    "deploy.extract",        # _shard_masks / _shard_extract buckets
+)
+
+
+# Static-check manifest: "<path relative to src/repro>::<site name>" ->
+# watchdog family, or "exempt:<reason>".  The tier-1 AST walk
+# (repro.obs.static_check) fails on any callsite missing from this dict.
+KNOWN_JIT_SITES: Dict[str, str] = {
+    "core/label_propagation.py::_lp_sweep": "engine.sweep",
+    "core/contraction.py::contract_device": "engine.contract",
+    "core/evo_device.py::evo_seed_step": "engine.evo",
+    "core/evo_device.py::evo_generation_step": "engine.evo",
+    "core/evo_device.py::make_generation_sharded": "engine.evo",
+    "graph/packing.py::gather_pack_device": "engine.gather",
+    "graph/packing.py::gather_ell_device": "engine.gather",
+    "kernels/lp_score/lp_score.py::lp_score_rows": "engine.sweep",
+    "kernels/lp_score/ops.py::_node_scores_impl": "engine.sweep",
+    "kernels/lp_score/ops.py::dense_round_device": "engine.dense",
+    "kernels/lp_score/ops.py::dense_round_device_batched": "engine.evo",
+    "dynamic/repair.py::expand_region_device": "engine.repair",
+    "dynamic/repair.py::gain_round_device": "engine.repair",
+    "dynamic/repair.py::balance_rounds_device": "engine.repair",
+    "dynamic/store.py::merge_overlay_device": "store.compact",
+    "dynamic/store.py::overlay_view_device": "store.view",
+    "dynamic/store.py::vacuum_device": "store.vacuum",
+    "dynamic/group.py::_group_expand": "group.repair",
+    "dynamic/group.py::_group_gather": "group.repair",
+    "dynamic/group.py::_group_bw": "group.repair",
+    "dynamic/group.py::_group_sweep": "group.repair",
+    "dynamic/group.py::_group_gain": "group.repair",
+    "dynamic/group.py::_group_balance": "group.repair",
+    "dynamic/group.py::_group_score": "group.repair",
+    "dynamic/group.py::_group_select": "group.repair",
+    "deploy/extract.py::_shard_masks": "deploy.extract",
+    "deploy/extract.py::_shard_extract": "deploy.extract",
+    "resilience/audit.py::_csr_audit": "engine.audit",
+    "resilience/audit.py::_labels_audit": "engine.audit",
+    "resilience/audit.py::_shard_owned_chk": "engine.audit",
+    "resilience/audit.py::_ghost_owner_audit": "engine.audit",
+    # distributed path: one executable per (mesh, spec) pair, keyed by the
+    # plan cache rather than shape buckets — noted at plan build time
+    "core/distributed_lp.py::_run_distributed": "exempt:plan-cache keyed, "
+    "one executable per ShardPlan (see build_plan's plan cache)",
+    "core/distributed_lp.py::contract_distributed": "exempt:plan-cache "
+    "keyed, one executable per ShardPlan",
+    # host-launch scaffolding: whole-program jits outside the bucketed
+    # serving stack (no shape polymorphism — exactly one trace each)
+    "launch/steps.py::compile_train_step": "exempt:launch scaffolding",
+    "launch/steps.py::compile_prefill": "exempt:launch scaffolding",
+    "launch/steps.py::compile_decode": "exempt:launch scaffolding",
+    "launch/steps.py::make_prefill": "exempt:launch scaffolding",
+    "launch/steps.py::make_decode_step": "exempt:launch scaffolding",
+    "launch/serve.py::main": "exempt:launch scaffolding",
+    "launch/train.py::main": "exempt:launch scaffolding",
+    "launch/dryrun_paper.py::main": "exempt:launch scaffolding",
+}
+
+
+@dataclass
+class CompileRecord:
+    kernel: str
+    key: object
+    seq: int
+    t_mono: float
+    wall_ms: float = 0.0
+
+
+@dataclass
+class CompileWatchdog:
+    strict: bool = False
+    sealed: bool = False
+    records: List[CompileRecord] = field(default_factory=list)
+    unattributed_compiles: int = 0
+    _declared: Dict[str, Set] = field(default_factory=dict)
+    _last: Optional[CompileRecord] = None
+
+    def __post_init__(self):
+        for fam in KERNEL_FAMILIES:
+            self._declared[fam] = set()
+        self._install_listener()
+
+    # ------------------------------------------------------------- wall ms
+
+    def _install_listener(self) -> None:
+        """Best-effort hookup of jax's compile-duration telemetry: each
+        backend-compile event's wall time is attributed to the most recent
+        noted bucket (the note happens immediately before dispatch)."""
+        try:
+            from jax import monitoring
+
+            monitoring.register_event_duration_secs_listener(self._on_event)
+        except Exception:
+            pass
+
+    def _on_event(self, name: str, secs: float, **kw) -> None:
+        if "compil" not in name:
+            return
+        last = self._last
+        if last is not None and time.monotonic() - last.t_mono < 300.0:
+            last.wall_ms += secs * 1e3
+        else:
+            self.unattributed_compiles += 1
+
+    # ----------------------------------------------------------------- api
+
+    def declare(self, kernel: str) -> None:
+        self._declared.setdefault(kernel, set())
+
+    def set_strict(self, flag: bool = True) -> None:
+        self.strict = bool(flag)
+
+    def seal(self) -> None:
+        """Freeze the bucket sets: any later new-bucket note raises."""
+        self.sealed = True
+
+    def unseal(self) -> None:
+        self.sealed = False
+
+    def note(self, kernel: str, key) -> bool:
+        """Record a dispatch-shape key; returns True iff the key is new
+        (== one fresh XLA compile).  Called by the accounting sites only
+        when *their* per-object set missed, so the per-call overhead on
+        warm paths is a dict lookup they already paid."""
+        buckets = self._declared.get(kernel)
+        if buckets is None:
+            if self.strict:
+                raise WatchdogError(
+                    f"compile noted for undeclared kernel family {kernel!r} "
+                    f"(key={key!r}); declare it in "
+                    f"repro.obs.watchdog.KERNEL_FAMILIES"
+                )
+            buckets = self._declared[kernel] = set()
+        if key in buckets:
+            return False
+        if self.sealed:
+            raise WatchdogError(
+                f"recompile outside the sealed bucket set: kernel "
+                f"{kernel!r}, new key {key!r} (declared "
+                f"{len(buckets)} buckets)"
+            )
+        buckets.add(key)
+        rec = CompileRecord(
+            kernel=kernel, key=key, seq=len(self.records),
+            t_mono=time.monotonic(),
+        )
+        self.records.append(rec)
+        self._last = rec
+        return True
+
+    # ----------------------------------------------------------- reporting
+
+    def compile_count(self, kernel: Optional[str] = None) -> int:
+        if kernel is None:
+            return len(self.records)
+        return sum(1 for r in self.records if r.kernel == kernel)
+
+    def bucket_count(self, kernel: Optional[str] = None) -> int:
+        if kernel is None:
+            return sum(len(s) for s in self._declared.values())
+        return len(self._declared.get(kernel, ()))
+
+    def snapshot(self) -> dict:
+        per = {
+            fam: dict(buckets=len(keys),
+                      compiles=self.compile_count(fam),
+                      wall_ms=sum(r.wall_ms for r in self.records
+                                  if r.kernel == fam))
+            for fam, keys in sorted(self._declared.items())
+        }
+        return dict(
+            strict=self.strict, sealed=self.sealed,
+            total_compiles=len(self.records),
+            unattributed_compiles=self.unattributed_compiles,
+            kernels=per,
+        )
+
+    def reset(self) -> None:
+        self.records.clear()
+        self._last = None
+        self.unattributed_compiles = 0
+        for s in self._declared.values():
+            s.clear()
+
+
+_watchdog: Optional[CompileWatchdog] = None
+
+
+def watchdog() -> CompileWatchdog:
+    """The process-global watchdog (jit caches are process-global too)."""
+    global _watchdog
+    if _watchdog is None:
+        _watchdog = CompileWatchdog(
+            strict=os.environ.get("REPRO_OBS_STRICT", "") not in ("", "0")
+        )
+    return _watchdog

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.metrics import lmax
+from ..obs import span as _obs_span
 
 __all__ = ["AuditReport", "InvariantAuditor"]
 
@@ -278,12 +279,16 @@ class InvariantAuditor:
         t0 = time.time()
         sess = self.session
         rep = AuditReport(step=sess._step, ok=True)
-        # audits run against the compacted base (the served graph); a dirty
-        # overlay is pending-but-valid state, not an invariant violation
-        sess.store.graph()
-        base_chk = self._audit_graph(rep)
-        self._audit_partition(rep)
-        self._audit_shards(rep, base_chk)
+        with _obs_span(
+            "resilience.audit", cat="resilience", step=sess._step
+        ) as sp:
+            # audits run against the compacted base (the served graph); a
+            # dirty overlay is pending-but-valid state, not a violation
+            sess.store.graph()
+            base_chk = self._audit_graph(rep)
+            self._audit_partition(rep)
+            self._audit_shards(rep, base_chk)
+            sp.set(ok=rep.ok)
         rep.seconds = time.time() - t0
         self.audits += 1
         if not rep.ok:

@@ -57,6 +57,7 @@ from .. import ckpt
 from ..dynamic.session import PartitionSession, SessionConfig, UpdateResult
 from ..dynamic.store import GraphUpdate, UpdateValidationError
 from ..graph.csr import GraphNP
+from ..obs import MetricsRegistry, span as _obs_span
 from .transact import ResilientConfig, ResilientSession, TxResult
 
 __all__ = [
@@ -167,11 +168,16 @@ class WriteAheadLog:
     """
 
     def __init__(self, path: str, fsync: bool = True, fresh: bool = False,
-                 group_n: int = 1, group_timeout: float = 0.0):
+                 group_n: int = 1, group_timeout: float = 0.0,
+                 registry: Optional[MetricsRegistry] = None):
         self.path = path
         self.fsync = fsync
         self.group_n = max(int(group_n), 1)
         self.group_timeout = float(group_timeout)
+        # fsync-latency histogram sink; the per-WAL counters below stay
+        # plain ints (a WAL rotates per checkpoint — merging rotations
+        # into one registry counter would misreport the current log)
+        self.metrics = registry
         self._f = open(path, "wb" if fresh else "ab")
         self._buf: List[bytes] = []
         self._buf_t0 = 0.0
@@ -203,11 +209,19 @@ class WriteAheadLog:
         # their durability unknown (the caller sees the exception), but a
         # retry must never re-write them — duplicate records would corrupt
         # the replay stream, which is worse than an honest unknown tail
+        n_rec = len(self._buf)
         self._buf = []
-        self._f.write(payload)
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
+        t0 = time.perf_counter()
+        with _obs_span("wal.fsync", cat="resilience",
+                       records=n_rec, bytes=len(payload)):
+            self._f.write(payload)
+            self._f.flush()
+            if self.fsync:
+                os.fsync(self._f.fileno())
+        if self.metrics is not None:
+            self.metrics.observe(
+                "wal_fsync_seconds", time.perf_counter() - t0
+            )
         self.flushes += 1
 
     def close(self) -> None:
@@ -283,10 +297,14 @@ class DurableSession:
         self.rs = rs
         self.cfg = cfg
         os.makedirs(cfg.directory, exist_ok=True)
+        # share the serving stack's registry (WAL fsync + checkpoint
+        # latency histograms land next to the session's update metrics)
+        self.metrics = rs.session.metrics
         self.checkpoints_written = 0
         self.failed_checkpoints = 0
         self.last_checkpoint_error: Optional[BaseException] = None
         self.last_checkpoint_seconds = 0.0
+        self.last_restore_seconds = 0.0
         self._commits_since_ckpt = 0
         rs.on_commit = self._on_commit
         if _resume_step is None:
@@ -307,6 +325,7 @@ class DurableSession:
             fsync=self.cfg.wal_fsync, fresh=fresh,
             group_n=self.cfg.wal_group_commit_n,
             group_timeout=self.cfg.wal_group_commit_timeout,
+            registry=self.metrics,
         )
 
     def _on_commit(self, tx: TxResult, upd: GraphUpdate, sup: bool) -> None:
@@ -404,14 +423,17 @@ class DurableSession:
         attempt."""
         t0 = time.time()
         step = self.rs.session._step
-        try:
-            tree, extra = self._capture()
-            ckpt.save(self.cfg.directory, step, tree, extra)
-        except BaseException as e:
-            self.failed_checkpoints += 1
-            self.last_checkpoint_error = e
-            self.last_checkpoint_seconds = time.time() - t0
-            return None
+        with _obs_span("checkpoint.write", cat="resilience",
+                       step=int(step)) as sp:
+            try:
+                tree, extra = self._capture()
+                ckpt.save(self.cfg.directory, step, tree, extra)
+            except BaseException as e:
+                self.failed_checkpoints += 1
+                self.last_checkpoint_error = e
+                self.last_checkpoint_seconds = time.time() - t0
+                sp.set(failed=True)
+                return None
         if getattr(self, "_wal", None) is not None:
             self._wal.close()
         self._anchor_step = step
@@ -419,6 +441,8 @@ class DurableSession:
         self._commits_since_ckpt = 0
         self.checkpoints_written += 1
         self.last_checkpoint_seconds = time.time() - t0
+        self.metrics.observe("checkpoint_seconds",
+                             self.last_checkpoint_seconds)
         self._prune()
         return step
 
@@ -490,6 +514,12 @@ class DurableSession:
             dr_wal_flushes=self._wal.flushes,
             dr_wal_buffered=self._wal.buffered,
             dr_commits_since_checkpoint=self._commits_since_ckpt,
+            # RPO observable: records that exist only in the current WAL —
+            # the replay a restore would need (plus buffered = not yet
+            # durable at all).  RTO observable: measured restore wall time.
+            dr_wal_records_since_checkpoint=self._wal.records_appended,
+            dr_last_checkpoint_seconds=self.last_checkpoint_seconds,
+            dr_last_restore_seconds=self.last_restore_seconds,
         )
         return d
 
@@ -617,4 +647,6 @@ class DurableSession:
             wal_bytes_dropped=int(wal_size - valid_bytes),
             seconds=time.time() - t0,
         )
+        ds.last_restore_seconds = report.seconds
+        ds.metrics.observe("restore_seconds", report.seconds)
         return ds, report

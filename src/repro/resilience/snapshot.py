@@ -25,6 +25,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs import span as _obs_span
+
 __all__ = ["SessionSnapshot", "SnapshotManager", "host_digest"]
 
 
@@ -101,11 +103,15 @@ class SnapshotManager:
     def take(self) -> int:
         """Capture the current session state; returns the new version id."""
         t0 = time.time()
-        snap = SessionSnapshot(
+        with _obs_span(
+            "resilience.snapshot", cat="resilience",
             version=self._next_version,
-            step=self.session._step,
-            state=self.session.snapshot_state(),
-        )
+        ):
+            snap = SessionSnapshot(
+                version=self._next_version,
+                step=self.session._step,
+                state=self.session.snapshot_state(),
+            )
         snap.seconds = time.time() - t0
         self._next_version += 1
         self._snaps.append(snap)

@@ -46,7 +46,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from ..dynamic.session import PartitionSession, UpdateResult
+from ..dynamic.session import PartitionSession, UpdateResult, _reg_counter
 from ..dynamic.store import GraphUpdate, UpdateValidationError
 from .audit import AuditReport, InvariantAuditor
 from .snapshot import SnapshotManager
@@ -98,10 +98,20 @@ class TxResult:
 class ResilientSession:
     """Fault-tolerant wrapper: transactional updates over a live session."""
 
+    # transactional counters ride in the session stack's registry so the
+    # whole stack resets/snapshots/exports through one path
+    committed = _reg_counter("tx_committed")
+    rollbacks = _reg_counter("tx_rollbacks")
+    retries = _reg_counter("tx_retries")
+    duplicates_dropped = _reg_counter("tx_duplicates_dropped")
+    parked_batches = _reg_counter("tx_parked")
+    lost_batches = _reg_counter("tx_lost")
+
     def __init__(self, session: PartitionSession, deployment=None,
                  cfg: Optional[ResilientConfig] = None):
         self.cfg = cfg or ResilientConfig()
         self.session = session
+        self.metrics = session.metrics
         self.deployment = deployment
         self.snapshots = SnapshotManager(session, keep=self.cfg.snapshot_keep)
         self.auditor = InvariantAuditor(

@@ -1,0 +1,191 @@
+"""Benchmark trajectory + continuous perf-regression gate (PR 10).
+
+The repo records one ``BENCH_PR<n>.json`` per PR (the acceptance bundle of
+that PR's benchmark run).  Collectively they are a *performance
+trajectory*: per table, per row, a series of ``us_per_call`` measurements
+across the stack's history.  This module turns that trajectory into a
+regression gate:
+
+* :func:`load_history` — parse every ``BENCH_PR*.json`` in a directory,
+  ordered by PR number (underscore-prefixed keys such as
+  ``_trajectory_delta`` are metadata, not tables, and are skipped);
+* :func:`derive_baselines` — per ``(table, row-name)`` baseline: the
+  *minimum* ``us_per_call`` over the most recent ``window`` recordings
+  (min-of-recent absorbs one-off slow machines; a genuine regression
+  shifts every subsequent recording, so the window eventually tracks it);
+* :func:`check_regression` — compare a fresh results dict against the
+  baselines with a multiplicative ``tolerance``.  CPU-container timings
+  are noisy, so the default tolerance is wide (1.75x): the gate exists to
+  catch *structural* slowdowns (an accidental recompile per update, a
+  device sync in the hot loop, an O(n) host round-trip — all >= 2x), not
+  5% drift.  Rows whose recorded graph/config signature differs from the
+  baseline's (e.g. ``--smoke`` sizes vs full bench sizes) are
+  ``incomparable`` — measured, reported, never gated;
+* :func:`format_report` — the trajectory delta table ``--check-regression``
+  prints and embeds into the results JSON under ``_trajectory_delta``.
+
+Statuses: ``ok`` | ``regression`` | ``improved`` | ``new`` |
+``incomparable``.  The gate fails (exit nonzero) iff any row is
+``regression``.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "DEFAULT_TOLERANCE", "DEFAULT_WINDOW",
+    "load_history", "derive_baselines", "check_regression", "format_report",
+]
+
+DEFAULT_TOLERANCE = 1.75
+DEFAULT_WINDOW = 3
+
+_PR_RE = re.compile(r"BENCH_PR(\d+)\.json$")
+
+
+def _row_signature(row: dict) -> Optional[str]:
+    """Comparability signature of a bench row: same graph + problem size.
+
+    Rows only gate against baselines with an identical signature, so a
+    ``--smoke`` run (ba-1024) never compares against the recorded full-size
+    trajectory (ba-16384) — those pairs are ``incomparable`` by
+    construction, not falsely "improved"."""
+    d = row.get("derived")
+    if not isinstance(d, dict):
+        return None
+    sig = []
+    for key in ("graph", "n", "m", "k", "repeats", "preset"):
+        if key in d:
+            sig.append(f"{key}={d[key]}")
+    return ",".join(sig) if sig else None
+
+
+def load_history(
+    bench_dir: str, pattern: str = "BENCH_PR*.json"
+) -> List[Tuple[int, str, dict]]:
+    """All ``(pr_number, path, data)`` bundles in ``bench_dir``, PR-ordered."""
+    out = []
+    for path in glob.glob(os.path.join(bench_dir, pattern)):
+        m = _PR_RE.search(os.path.basename(path))
+        if not m:
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        if isinstance(data, dict):
+            out.append((int(m.group(1)), path, data))
+    out.sort(key=lambda t: t[0])
+    return out
+
+
+def derive_baselines(
+    history: List[Tuple[int, str, dict]], window: int = DEFAULT_WINDOW
+) -> Dict[Tuple[str, str], dict]:
+    """Per ``(table, row-name)``: min ``us_per_call`` of the last ``window``
+    recordings, plus the full series and the latest row's signature."""
+    series: Dict[Tuple[str, str], List[Tuple[int, float]]] = {}
+    sigs: Dict[Tuple[str, str], Optional[str]] = {}
+    for prn, _path, data in history:
+        for table, rows in data.items():
+            if table.startswith("_") or not isinstance(rows, list):
+                continue
+            for row in rows:
+                if not isinstance(row, dict) or "name" not in row:
+                    continue
+                us = row.get("us_per_call")
+                if not isinstance(us, (int, float)):
+                    continue
+                key = (table, str(row["name"]))
+                series.setdefault(key, []).append((prn, float(us)))
+                sigs[key] = _row_signature(row)   # latest recording wins
+    out = {}
+    for key, vals in series.items():
+        recent = [v for _, v in vals[-max(window, 1):]]
+        out[key] = dict(
+            baseline_us=min(recent),
+            window=len(recent),
+            series=vals,
+            signature=sigs.get(key),
+        )
+    return out
+
+
+def check_regression(
+    results: dict,
+    baselines: Dict[Tuple[str, str], dict],
+    tolerance: float = DEFAULT_TOLERANCE,
+) -> List[dict]:
+    """Trajectory delta of a fresh ``{table: [rows]}`` results dict."""
+    report = []
+    for table in sorted(k for k in results if not k.startswith("_")):
+        rows = results[table]
+        if not isinstance(rows, list):
+            continue
+        for row in rows:
+            if not isinstance(row, dict) or "name" not in row:
+                continue
+            us = row.get("us_per_call")
+            if not isinstance(us, (int, float)):
+                continue
+            key = (table, str(row["name"]))
+            rec = dict(table=table, name=key[1], us_per_call=float(us))
+            base = baselines.get(key)
+            if base is None:
+                rec.update(status="new", baseline_us=None, ratio=None)
+            elif _row_signature(row) != base["signature"]:
+                rec.update(
+                    status="incomparable",
+                    baseline_us=base["baseline_us"], ratio=None,
+                    signature=_row_signature(row),
+                    baseline_signature=base["signature"],
+                )
+            else:
+                b = max(base["baseline_us"], 1e-9)
+                ratio = float(us) / b
+                status = (
+                    "regression" if ratio > tolerance
+                    else "improved" if ratio < 1.0 / tolerance
+                    else "ok"
+                )
+                rec.update(
+                    status=status, baseline_us=base["baseline_us"],
+                    ratio=ratio,
+                )
+            report.append(rec)
+    return report
+
+
+def format_report(
+    report: List[dict], tolerance: float = DEFAULT_TOLERANCE
+) -> str:
+    """Human-readable trajectory delta table."""
+    lines = [
+        f"trajectory delta (tolerance x{tolerance:g}, "
+        f"baseline = min of last {DEFAULT_WINDOW} recordings)",
+        f"{'table':<24} {'row':<28} {'us/call':>12} "
+        f"{'baseline':>12} {'ratio':>7}  status",
+    ]
+    for r in report:
+        base = "-" if r["baseline_us"] is None else f"{r['baseline_us']:.0f}"
+        ratio = "-" if r.get("ratio") is None else f"x{r['ratio']:.2f}"
+        lines.append(
+            f"{r['table']:<24} {r['name']:<28} {r['us_per_call']:>12.0f} "
+            f"{base:>12} {ratio:>7}  {r['status']}"
+        )
+    n_reg = sum(1 for r in report if r["status"] == "regression")
+    lines.append(
+        f"# {len(report)} rows: "
+        + ", ".join(
+            f"{s}={sum(1 for r in report if r['status'] == s)}"
+            for s in ("ok", "improved", "regression", "new", "incomparable")
+        )
+        + ("  -> GATE FAILED" if n_reg else "  -> gate passed")
+    )
+    return "\n".join(lines)

@@ -70,6 +70,7 @@ from ..graph.packing import (
 from ..obs import MetricsRegistry, RegistryBackedStats
 from ..obs import span as _obs_span
 from ..obs import watchdog as _obs_watchdog
+from ..obs.memory import account as _mem_account
 from .contraction import CoarseMap, contract_device, packed_key_wbits
 from .label_propagation import _lp_sweep, make_order
 
@@ -247,7 +248,19 @@ class LPEngine:
     def _iota(self) -> jax.Array:
         if self._iota_cache is None:
             self._iota_cache = jnp.arange(self.A, dtype=jnp.int32)
+            _mem_account("label_arenas", self._iota_cache)
         return self._iota_cache
+
+    @staticmethod
+    def will_fit(n: int, m: int, k: int, cfg=None, *, budget_bytes=None,
+                 workload: str = "partition", safety: float = 1.25) -> dict:
+        """Pre-upload capacity check: closed-form footprint of partitioning
+        (or serving) an (n, m, k) graph vs the device budget — call BEFORE
+        ``to_device_csr`` / ``partition`` (see ``repro.obs.memory``)."""
+        from ..obs.memory import will_fit as _wf
+
+        return _wf(n, m, k, cfg, budget_bytes=budget_bytes,
+                   workload=workload, safety=safety)
 
     # ------------------------------------------------------------------ caches
 
@@ -283,6 +296,10 @@ class LPEngine:
                 ew=jnp.asarray(g.ew, dtype=jnp.float32),
             )
             self.stats.h2d_bytes += self.A * 8 + g.m * 12
+        # GraphDev aliases (src/dst/ew) are already owned by base_csr —
+        # registration is id-idempotent, so no double count
+        _mem_account("label_arenas", ar.nw_arena, ar.cluster_w)
+        _mem_account("base_csr", ar.src, ar.dst, ar.ew)
         self._arenas[id(g)] = ar
         return ar
 
@@ -337,6 +354,8 @@ class LPEngine:
             (padded.nodes, padded.node_valid, padded.edge_dst, padded.edge_w,
              padded.edge_src_slot, padded.edge_valid)
         )
+        _mem_account("chunk_packs", dp.nodes, dp.node_valid, dp.edge_dst,
+                     dp.edge_w, dp.edge_src_slot, dp.edge_valid)
         self._packs[key] = dp
         return dp
 
@@ -407,6 +426,8 @@ class LPEngine:
             num_chunks=C,
             shape=(Cg, self.N, Eb),
         )
+        _mem_account("chunk_packs", dp.nodes, dp.node_valid, dp.edge_dst,
+                     dp.edge_w, dp.edge_src_slot, dp.edge_valid)
         self._packs[key] = dp
         return dp
 
@@ -449,6 +470,7 @@ class LPEngine:
             de = _DeviceEll(
                 graph=g, dst=dst_d, w=w_d, row_node=rn_d, nb=_pow2(g.n + 1)
             )
+            _mem_account("chunk_packs", de.dst, de.w, de.row_node)
             self._ells[id(g)] = de
             return de
         gh = g.to_host() if isinstance(g, GraphDev) else g
@@ -466,6 +488,7 @@ class LPEngine:
             nb=_pow2(g.n + 1),
         )
         self.stats.h2d_bytes += dst.nbytes + w.nbytes + row_node.nbytes
+        _mem_account("chunk_packs", de.dst, de.w, de.row_node)
         self._ells[id(g)] = de
         return de
 
@@ -670,6 +693,7 @@ class LPEngine:
         ip = np.asarray(g.indptr, dtype=np.int32)
         arr = jnp.asarray(ip)
         self.stats.h2d_bytes += ip.nbytes
+        _mem_account("base_csr", arr)
         self._indptrs[id(g)] = arr
         return arr
 
@@ -831,6 +855,8 @@ class LPEngine:
             edge_w=edge_w, edge_src_slot=edge_slot, edge_valid=edge_valid,
             num_chunks=C, shape=(Cb, self.N, Eb),
         )
+        _mem_account("chunk_packs", nodes_d, nv_d, edge_dst, edge_w,
+                     edge_slot, edge_valid, mask)
         # ---- LP sweeps against exact global block weights ----
         bw = jnp.zeros((k + 1,), jnp.float32).at[jnp.minimum(lab, k)].add(
             ar.nw_arena
@@ -901,6 +927,7 @@ class LPEngine:
         deg[: g.n] = g.degrees()
         arr = jnp.asarray(deg)
         self.stats.h2d_bytes += deg.nbytes
+        _mem_account("evo_population", arr)
         self._degs[id(g)] = arr
         return arr
 
@@ -1007,6 +1034,7 @@ class LPEngine:
             jnp.int32(grow_rounds_bound(n, k, g.m)),
             refine_iters=cfg.refine_iters, Kb=Kb,
         )
+        _mem_account("evo_population", labs, keys)
         D = jax.device_count()
         if shard and G > 0 and D > 1 and I % D == 0:
             labs, keys = self._evolve_sharded(
@@ -1031,6 +1059,7 @@ class LPEngine:
                     jnp.int32(dp.num_chunks),
                     refine_iters=cfg.refine_iters, Kb=Kb, Ib=Ib,
                 )
+                _mem_account("evo_population", labs, keys)
         Sb_cur = labs.shape[0]
         valid = jnp.arange(Sb_cur) < I * P
         bkey = jnp.min(jnp.where(valid, keys, 2**31 - 1))
@@ -1079,6 +1108,7 @@ class LPEngine:
         keys_d = jnp.asarray(key_sh)
         self.stats.h2d_bytes += lab_sh.nbytes + key_sh.nbytes
         offs_d = jnp.asarray(offs)
+        _mem_account("evo_population", labs_d, keys_d, offs_d)
         for gen in range(G):
             self.stats.evo_calls += 1
             if stat_key not in self.stats.evo_buckets:
@@ -1157,6 +1187,7 @@ class LPEngine:
         nw = ar.nw_arena[:Nb]
         integral = bool(np.all(g.ew == np.round(g.ew))) if g.m else True
         ew_max = float(g.ew.max()) if g.m else 0.0
+        _mem_account("base_csr", src, dst, ew)
         self._cin[id(g)] = (g, src, dst, ew, nw, integral, ew_max)
         return src, dst, ew, nw, integral, ew_max
 
@@ -1221,6 +1252,7 @@ class LPEngine:
         cmap = CoarseMap(
             dev=C, n_fine=n, n_coarse=n_c, on_materialize=self._note_d2h
         )
+        _mem_account("base_csr", C)
         return coarse, cmap
 
     def project_restrict(self, C: CoarseMap, restrict: jax.Array) -> jax.Array:
@@ -1229,9 +1261,11 @@ class LPEngine:
         Returns an arena-sized int32 array, -1 beyond the coarse n."""
         Nb = C.dev.shape[0]
         idx = jnp.where(self._iota[:Nb] < C.n_fine, C.dev, self.A)
-        return jnp.full((self.A,), -1, jnp.int32).at[idx].set(
+        out = jnp.full((self.A,), -1, jnp.int32).at[idx].set(
             restrict[:Nb].astype(jnp.int32), mode="drop"
         )
+        _mem_account("label_arenas", out)
+        return out
 
     def _note_d2h(self, nbytes: int) -> None:
         self.stats.d2h_bytes += int(nbytes)
@@ -1246,13 +1280,16 @@ class LPEngine:
             lab = labels.astype(jnp.int32)
             if lab.shape[0] == self.A:
                 return lab
-            lab = lab[:n]
-            return jnp.concatenate(
-                [lab, jnp.full((self.A - n,), fill, jnp.int32)]
+            lab = jnp.concatenate(
+                [lab[:n], jnp.full((self.A - n,), fill, jnp.int32)]
             )
+            _mem_account("label_arenas", lab)
+            return lab
         out = np.full(self.A, fill, np.int32)
         out[:n] = np.asarray(labels[:n], dtype=np.int32)
-        return jnp.asarray(out)
+        arr = jnp.asarray(out)
+        _mem_account("label_arenas", arr)
+        return arr
 
     def project(
         self,
@@ -1274,16 +1311,20 @@ class LPEngine:
             fine = jnp.where(
                 self._iota[:Nb] < n_f, base[C.dev], jnp.int32(fill)
             )
-            return jnp.concatenate(
+            out = jnp.concatenate(
                 [fine, jnp.full((self.A - Nb,), fill, jnp.int32)]
             )
+            _mem_account("label_arenas", out)
+            return out
         n_f = C.shape[0]
         C_dev = jnp.asarray(np.asarray(C, dtype=np.int32))
         self.stats.h2d_bytes += n_f * 4
         fine = base[C_dev]
-        return jnp.concatenate(
+        out = jnp.concatenate(
             [fine, jnp.full((self.A - n_f,), fill, jnp.int32)]
         )
+        _mem_account("label_arenas", out)
+        return out
 
     def cut(self, g: AnyGraph, labels: jax.Array) -> float:
         """Edge cut of arena labels, evaluated on device (one scalar sync)."""

@@ -54,7 +54,13 @@ class PartitionerConfig:
     lp_iters_refine: int = 6
     f_social: float = 14.0
     f_mesh: float = 20000.0
-    coarsest_factor: int = 10000    # stop coarsening at coarsest_factor * k
+    # stop coarsening at coarsest_factor * k nodes; 0 = auto-scale to the
+    # input: max(k, min(10000 * k, n // 8)).  The paper's 10000*k constant
+    # targets million-node graphs — as a fixed default it meant any graph
+    # under ~40k nodes (at k=4) never coarsened at all, turning "multilevel"
+    # into flat LP on the bench sizes.  Explicit positive values are
+    # honored verbatim (tests pin small targets with e.g. 256).
+    coarsest_factor: int = 0
     max_levels: int = 64
     shrink_stall: float = 0.95      # stop if n' > stall * n
     seed: int = 0
@@ -289,7 +295,11 @@ def partition(g, cfg: PartitionerConfig) -> PartitionReport:
     gh = g.to_host() if isinstance(g, GraphDev) else g
     L = lmax(gh.total_node_weight, k, cfg.eps)
     gtype = cfg.graph_type if cfg.graph_type != "auto" else _detect_type(gh)
-    coarsest_target = cfg.coarsest_factor * k
+    coarsest_target = (
+        cfg.coarsest_factor * k
+        if cfg.coarsest_factor > 0
+        else max(k, min(10000 * k, gh.n // 8))
+    )
     # One LP engine per run: owns pack/jit caches and device-resident state
     # for every level of every V-cycle (numpy engine needs none).
     eng = (

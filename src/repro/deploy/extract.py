@@ -60,6 +60,7 @@ from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2, to_device_csr
 from ..graph.packing import gather_pack_device
 from ..obs import RegistryBackedStats
 from ..obs import watchdog as _obs_watchdog
+from ..obs.memory import account as _mem_account
 
 __all__ = [
     "BlockShard",
@@ -319,6 +320,11 @@ class DeployStats(RegistryBackedStats):
         "h2d_bytes", "d2h_bytes",
     )
     _SET_FIELDS = ("deploy_buckets",)
+    # registry keys are namespaced (deploy.h2d_bytes) so the extractor can
+    # share the serving stack's registry without colliding with the
+    # engine's transfer counters; attribute access and snapshot() keys stay
+    # unprefixed (the backward-compat shim in RegistryBackedStats)
+    _COUNTER_PREFIX = "deploy."
 
     @property
     def deploy_bucket_count(self) -> int:
@@ -334,8 +340,8 @@ class BlockExtractor:
     once per bucket (``deploy_compiles == deploy_bucket_count``).
     """
 
-    def __init__(self, on_h2d=None, on_d2h=None):
-        self.stats = DeployStats()
+    def __init__(self, on_h2d=None, on_d2h=None, registry=None):
+        self.stats = DeployStats(registry)
         self._on_h2d = on_h2d or (lambda b: None)
         self._on_d2h = on_d2h or (lambda b: None)
         self._o_sticky = 0
@@ -385,7 +391,9 @@ class BlockExtractor:
         out = np.full(Nb, k, np.int32)
         out[: gd.n] = np.asarray(labels[: gd.n], dtype=np.int32)
         self._note_h2d(out.nbytes)
-        return jnp.asarray(out)
+        arr = jnp.asarray(out)
+        _mem_account("label_arenas", arr)
+        return arr
 
     # --------------------------------------------------------------- public
 
@@ -429,6 +437,10 @@ class BlockExtractor:
             jnp.int32(gd.n), jnp.int32(halo),
             jnp.int32(n_own), jnp.int32(n_ghost), jnp.int32(n_rows),
             jnp.int32(m_local), Ob=Ob, Gb=Gb, Eb=Eb,
+        )
+        _mem_account(
+            "block_shards", own_g, ghost_g, ghost_hop, ghost_block,
+            nw_own, ghost_nw, indptr_loc, heads, ew_loc,
         )
         return BlockShard(
             block=block, halo=halo, n_own=n_own, n_ghost=n_ghost,

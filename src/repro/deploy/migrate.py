@@ -80,8 +80,9 @@ class ShardDeployment:
     """
 
     # deployment counters live in the session's registry (one stack, one
-    # reset/snapshot/export path); the extractor keeps its own registry —
-    # its h2d/d2h byte counters must not merge with the engine's
+    # reset/snapshot/export path); the extractor's counters join it under
+    # the "deploy." namespace so its h2d/d2h bytes stay distinct from the
+    # engine's transfer counters
     migrate_calls = _reg_counter("migrate_calls")
     full_rebuilds = _reg_counter("full_rebuilds")
     blocks_patched_total = _reg_counter("blocks_patched_total")
@@ -97,7 +98,7 @@ class ShardDeployment:
         self.halo = int(halo)
         self.k = session.k
         self.escalate_fraction = float(escalate_fraction)
-        self.extractor = BlockExtractor()
+        self.extractor = BlockExtractor(registry=session.metrics)
         self.full_rebuilds = 0
         self.migrate_calls = 0
         self.blocks_patched_total = 0

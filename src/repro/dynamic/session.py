@@ -29,6 +29,7 @@ step counter, all tie-breaks are stateless hashes.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -42,6 +43,7 @@ from ..core.multilevel import PartitionerConfig, partition
 from ..graph.csr import GraphNP
 from ..obs import MetricsRegistry
 from ..obs import span as _obs_span
+from ..obs.memory import account as _mem_account
 from .store import DynamicGraphStore, GraphUpdate
 
 __all__ = ["PartitionSession", "SessionConfig", "UpdateResult"]
@@ -80,6 +82,14 @@ class SessionConfig:
     defer_compaction: bool = False
     target_chunks: int = 64
     seed: int = 0
+    # serving SLO: per-update latency objective + error budget.  The flight
+    # recorder (a ring of the last ``flight_recorder_len`` update latencies)
+    # feeds the ``slo_budget_remaining`` burn-rate gauge: 1.0 = no recent
+    # update breached ``slo_target_seconds``, 0.0 = the window has consumed
+    # ``slo_error_budget`` (fraction of updates allowed over target) or more
+    slo_target_seconds: float = 0.25
+    slo_error_budget: float = 0.1
+    flight_recorder_len: int = 128
     # full-pipeline config for session start + escalations; defaults to the
     # paper's fast preset at this (k, eps)
     partition_cfg: Optional[PartitionerConfig] = None
@@ -190,6 +200,8 @@ class PartitionSession:
         # degraded mode (set by the resilience watchdog): quality-guard
         # escalations are skipped and the step is flagged ``stale`` instead
         self.suppress_escalation = False
+        # flight recorder: (t_mono, seconds) of the most recent updates
+        self.flight = deque(maxlen=max(1, cfg.flight_recorder_len))
         self._step = 0
         self._cut_ref = float(rep.cut)
         self._ew_ref = max(float(g.ew.sum()) / 2.0, 1e-9)
@@ -243,6 +255,7 @@ class PartitionSession:
         self.updates_applied = 0
         self.view_hits = 0
         self.suppress_escalation = bool(suppress_escalation)
+        self.flight = deque(maxlen=max(1, cfg.flight_recorder_len))
         self._step = int(step)
         self._cut_ref = float(cut_ref)
         self._ew_ref = float(ew_ref)
@@ -275,6 +288,20 @@ class PartitionSession:
             return max(64, int(8 * self.store.m / max(self.store.n, 1)))
         return None if c == 0 else int(c)
 
+    def _record_latency(self, res: UpdateResult) -> None:
+        """Push one update latency through the flight recorder and refresh
+        the SLO burn-rate gauge.  ``slo_budget_remaining`` is the unburned
+        fraction of the window's error budget: with budget ``b`` over a
+        window of ``W`` recent updates, up to ``b * W`` of them may exceed
+        ``slo_target_seconds`` before the gauge hits 0."""
+        self.metrics.observe("update_seconds", res.seconds)
+        self.flight.append((res.t_mono, res.seconds))
+        target = self.cfg.slo_target_seconds
+        bad = sum(1 for _, s in self.flight if s > target)
+        allowed = max(self.cfg.slo_error_budget * len(self.flight), 1e-9)
+        remaining = max(0.0, 1.0 - bad / allowed)
+        self.metrics.gauge("slo_budget_remaining", remaining)
+
     def _score(self, g) -> tuple:
         """(cut, imbalance, feasible) of the resident labels on device."""
         cut = self.engine.cut(g, self.labels)
@@ -302,6 +329,7 @@ class PartitionSession:
             asg[i] = b
             bw[b] += nw[v]
         self.labels = self.labels.at[jnp.asarray(ids)].set(jnp.asarray(asg))
+        _mem_account("label_arenas", self.labels)
         self.engine.stats.h2d_bytes += ids.size * 12
 
     def _maybe_rebuild_engine(self) -> None:
@@ -390,7 +418,7 @@ class PartitionSession:
                 noop=res.noop, escalated=res.escalated,
                 used_view=res.used_view, region=res.region_size,
             )
-        self.metrics.observe("update_seconds", res.seconds)
+        self._record_latency(res)
         return res
 
     def _update_impl(self, upd: GraphUpdate) -> UpdateResult:
@@ -571,7 +599,7 @@ class PartitionSession:
             t_mono=time.monotonic(),
         )
         self.updates_applied += 1
-        self.metrics.observe("update_seconds", res.seconds)
+        self._record_latency(res)
         self.trajectory.append(res)
         return res
 
@@ -603,6 +631,9 @@ class PartitionSession:
             edges_removed=self.store.stats.edges_removed,
             nodes_added=self.store.stats.nodes_added,
             nodes_removed=self.store.stats.nodes_removed,
+            slo_budget_remaining=self.metrics.get_gauge(
+                "slo_budget_remaining", 1.0
+            ),
         )
         return d
 

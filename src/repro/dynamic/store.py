@@ -47,6 +47,7 @@ from ..graph.csr import GraphDev, GraphNP, arc_bucket, pow2, to_device_csr
 from ..obs import MetricsRegistry, RegistryBackedStats
 from ..obs import span as _obs_span
 from ..obs import watchdog as _obs_watchdog
+from ..obs.memory import account as _mem_account
 
 __all__ = [
     "DynamicGraphStore",
@@ -746,7 +747,10 @@ class DynamicGraphStore:
             nw = np.zeros(Nb, np.float32)
             nw[: self.n] = self._nw
             self._nw_dev = jnp.asarray(nw)
+            _mem_account("base_csr", self._nw_dev)
             self._on_h2d(nw.nbytes)
+        ou_d, ov_d, ow_d = jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow)
+        _mem_account("overlay_chunks", ou_d, ov_d, ow_d)
         self._on_h2d(ou.nbytes + ov.nbytes + ow.nbytes)
         Mb = self.base.indices.shape[0]
         ckey = (Mb, Rb, Nb)
@@ -764,10 +768,11 @@ class DynamicGraphStore:
             # tracing — the span covers dispatch, not device completion
             res = merge_overlay_device(
                 self.base.src, self.base.indices, self.base.ew,
-                jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
+                ou_d, ov_d, ow_d,
                 self._nw_dev,
                 jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
             )
+            _mem_account("base_csr", *res[:4])  # in-flight merge outputs
         self._pending = dict(
             res=res, r=r, nchunks=len(self._ou), n=self.n,
             nw_dev=self._nw_dev,
@@ -894,16 +899,19 @@ class DynamicGraphStore:
             self.stats.view_compiles += 1
             _obs_watchdog().note("store.view", vkey)
         self._on_h2d(ou.nbytes + ov.nbytes + ow.nbytes)
+        ou_d, ov_d, ow_d = jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow)
+        _mem_account("overlay_chunks", ou_d, ov_d, ow_d)
         with _obs_span(
             "store.view", cat="store", overlay=int(r), m=int(self.base.m)
         ) as sp:
             indptr_v, src_v, dst_v, ew_v, m_view = overlay_view_device(
                 self.base.indptr, self.base.src, self.base.indices,
                 self.base.ew,
-                jnp.asarray(ou), jnp.asarray(ov), jnp.asarray(ow),
+                ou_d, ov_d, ow_d,
                 jnp.int32(self.n), jnp.int32(self.base.m), jnp.int32(r),
             )
             sp.sync_on(m_view)
+        _mem_account("overlay_chunks", indptr_v, src_v, dst_v, ew_v)
         return indptr_v, src_v, dst_v, ew_v, m_view
 
     def graph(self) -> GraphDev:
@@ -998,12 +1006,14 @@ class DynamicGraphStore:
         keep = np.zeros(Nb, bool)
         keep[:n_old] = keep_h
         self._on_h2d(newid.nbytes + keep.nbytes)
+        newid_d, keep_d = jnp.asarray(newid), jnp.asarray(keep)
+        _mem_account("base_csr", newid_d, keep_d)
         with _obs_span(
             "store.vacuum", cat="store", removed=int(n_old - n_new)
         ) as sp:
             indptr_r, src_r, dst_r, ew_r, nw_r = vacuum_device(
                 self.base.src, self.base.indices, self.base.ew,
-                jnp.asarray(newid), jnp.asarray(keep), self.base.nw,
+                newid_d, keep_d, self.base.nw,
                 jnp.int32(self.base.m),
             )
             sp.sync_on(nw_r)

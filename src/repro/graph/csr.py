@@ -33,6 +33,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..obs.memory import account as _mem_account
+
 __all__ = [
     "Graph",
     "GraphDev",
@@ -179,6 +181,10 @@ class GraphDev:
         self.on_materialize = on_materialize
         self._indptr_host: np.ndarray | None = None
         self._host: GraphNP | None = None
+        # every base-CSR level flows through this constructor (upload,
+        # contraction output, store merge/vacuum) — the one accounting
+        # chokepoint for the base_csr family
+        _mem_account("base_csr", indptr, indices, ew, nw, src)
 
     @property
     def n(self) -> int:
@@ -288,7 +294,7 @@ def from_edges(
 
 
 def to_device(g: GraphNP) -> Graph:
-    return Graph(
+    dev = Graph(
         indptr=jnp.asarray(g.indptr, dtype=jnp.int32)
         if g.m < 2**31
         else jnp.asarray(g.indptr),
@@ -296,6 +302,8 @@ def to_device(g: GraphNP) -> Graph:
         ew=jnp.asarray(g.ew, dtype=jnp.float32),
         nw=jnp.asarray(g.nw, dtype=jnp.float32),
     )
+    _mem_account("base_csr", dev.indptr, dev.indices, dev.ew, dev.nw)
+    return dev
 
 
 def to_device_csr(g: GraphNP, on_materialize=None, on_upload=None) -> GraphDev:

@@ -15,6 +15,11 @@ See docs/OBSERVABILITY.md for the span taxonomy and metric catalog.
 """
 
 from .registry import MetricsRegistry, RegistryBackedStats
+from .memory import (
+    ALLOC_CHECK_MODULES, KNOWN_ALLOC_SITES, MEMORY_FAMILIES,
+    DeviceMemoryAccountant, account, accountant, estimate_footprint, pin,
+    set_accounting, will_fit,
+)
 from .trace import Span, Tracer, get_tracer, set_tracer, span
 from .watchdog import (
     KERNEL_FAMILIES, KNOWN_JIT_SITES, CompileRecord, CompileWatchdog,
@@ -27,5 +32,8 @@ __all__ = [
     "Span", "Tracer", "get_tracer", "set_tracer", "span",
     "CompileRecord", "CompileWatchdog", "WatchdogError", "watchdog",
     "KERNEL_FAMILIES", "KNOWN_JIT_SITES",
+    "DeviceMemoryAccountant", "accountant", "set_accounting",
+    "account", "pin", "estimate_footprint", "will_fit",
+    "MEMORY_FAMILIES", "KNOWN_ALLOC_SITES", "ALLOC_CHECK_MODULES",
     "slo_snapshot", "to_prometheus", "write_slo",
 ]

@@ -45,6 +45,10 @@ def _derived_gauges(stats: dict) -> dict:
         out["rpo_records_at_risk"] = stats["dr_wal_records_since_checkpoint"]
     if "dr_last_restore_seconds" in stats:
         out["rto_last_restore_seconds"] = stats["dr_last_restore_seconds"]
+    # burn-rate SLO gauge fed by the session's flight recorder (the ring
+    # buffer of recent per-update latencies): 1.0 = full error budget left
+    if "slo_budget_remaining" in stats:
+        out["slo_budget_remaining"] = stats["slo_budget_remaining"]
     return out
 
 

@@ -209,10 +209,17 @@ class RegistryBackedStats:
     the registry, ``st.buckets.add(key)`` mutates a plain set), so the
     pre-PR-9 tests and the ``carry_from`` stats-object sharing keep
     working verbatim.
+
+    ``_COUNTER_PREFIX`` namespaces the *registry keys* (e.g. the deploy
+    extractor's counters live as ``deploy.h2d_bytes`` so they can share
+    the serving stack's registry without colliding with the engine's
+    ``h2d_bytes``); the attribute surface and ``snapshot()`` keys stay
+    unprefixed — the backward-compat shim.
     """
 
     _COUNTER_FIELDS: Tuple[str, ...] = ()
     _SET_FIELDS: Tuple[str, ...] = ()
+    _COUNTER_PREFIX: str = ""
 
     def __init__(self, registry: Optional[MetricsRegistry] = None):
         object.__setattr__(
@@ -220,34 +227,39 @@ class RegistryBackedStats:
             registry if registry is not None
             else MetricsRegistry(type(self).__name__),
         )
+        p = self._COUNTER_PREFIX
         for f in self._COUNTER_FIELDS:
-            self.registry.counter(f)
+            self.registry.counter(p + f)
         for f in self._SET_FIELDS:
             object.__setattr__(self, f, set())
 
     def __getattr__(self, name):
         # only reached when normal lookup fails: counter fields are never
         # instance attributes, everything else raises as usual
-        if name in type(self)._COUNTER_FIELDS:
-            return self.registry.get(name)
+        cls = type(self)
+        if name in cls._COUNTER_FIELDS:
+            return self.registry.get(cls._COUNTER_PREFIX + name)
         raise AttributeError(
             f"{type(self).__name__!s} has no attribute {name!r}"
         )
 
     def __setattr__(self, name, value):
-        if name in type(self)._COUNTER_FIELDS:
-            self.registry.set_counter(name, value)
+        cls = type(self)
+        if name in cls._COUNTER_FIELDS:
+            self.registry.set_counter(cls._COUNTER_PREFIX + name, value)
         else:
             object.__setattr__(self, name, value)
 
     def reset(self) -> None:
+        p = self._COUNTER_PREFIX
         for f in self._COUNTER_FIELDS:
-            self.registry.set_counter(f, 0)
+            self.registry.set_counter(p + f, 0)
         for f in self._SET_FIELDS:
             getattr(self, f).clear()
 
     def snapshot(self) -> dict:
-        d = {f: self.registry.get(f) for f in self._COUNTER_FIELDS}
+        p = self._COUNTER_PREFIX
+        d = {f: self.registry.get(p + f) for f in self._COUNTER_FIELDS}
         for f in self._SET_FIELDS:
             d[f + "_count"] = len(getattr(self, f))
         return d

@@ -1,23 +1,40 @@
-"""Static registration check: every ``jax.jit`` / ``pallas_call`` callsite
-under ``src/repro`` must be registered in ``KNOWN_JIT_SITES``.
+"""Static registration checks over the ``src/repro`` AST.
 
-Run by the tier-1 suite (tests/test_obs.py) so a new kernel cannot land
-without either wiring its compile accounting into the watchdog or
-explicitly exempting it with a reason.  Detection is syntactic over the
-AST: any occurrence of the attribute/name ``jit`` on a ``jax`` object or
-``pallas_call`` — as a decorator, a ``functools.partial(jax.jit, ...)``
-argument, or an inline call — is mapped to its *site name*: the
-decorated/enclosing function, or the assignment target for module-level
-``name = jax.jit(fn)`` bindings.
+Two manifests, same idiom (syntactic detection -> explicit allow-list with
+reasons, enforced by the tier-1 suite):
+
+* **jit sites** (:func:`find_jit_sites` / :func:`check_registration`) —
+  every ``jax.jit`` / ``pallas_call`` callsite must be registered in
+  ``KNOWN_JIT_SITES``, so a new kernel cannot land without wiring its
+  compile accounting into the watchdog or explicitly exempting it.
+  Detection: any occurrence of the attribute/name ``jit`` on a jax-ish
+  object or ``pallas_call`` — as a decorator, a
+  ``functools.partial(jax.jit, ...)`` argument, or an inline call — mapped
+  to its *site name*: the decorated/enclosing function, or the assignment
+  target for module-level ``name = jax.jit(fn)`` bindings.
+
+* **device-allocation sites** (:func:`find_alloc_sites` /
+  :func:`check_alloc_registration`, PR 10) — every syntactic device
+  allocation (``jnp.asarray/zeros/ones/full/arange/concatenate``,
+  ``jax.device_put``) in *non-traced* code of the memory-accounted modules
+  (:data:`repro.obs.memory.ALLOC_CHECK_MODULES`) must map to a buffer
+  family in ``KNOWN_ALLOC_SITES`` (or carry an ``exempt:`` reason), so a
+  new persistent buffer cannot land unaccounted.  Allocations inside
+  traced code (jit-decorated defs, defs passed to ``jax.jit``) are XLA
+  temporaries managed by the runtime, not Python-side residents, and are
+  skipped.
 """
 
 from __future__ import annotations
 
 import ast
 import os
-from typing import List, Tuple
+from typing import List, Set, Tuple
 
-__all__ = ["find_jit_sites", "check_registration"]
+__all__ = [
+    "find_jit_sites", "check_registration",
+    "find_alloc_sites", "check_alloc_registration",
+]
 
 
 def _is_jit_ref(node: ast.AST) -> bool:
@@ -110,3 +127,110 @@ def check_registration(root: str) -> List[str]:
     from .watchdog import KNOWN_JIT_SITES
 
     return [s for s in find_jit_sites(root) if s not in KNOWN_JIT_SITES]
+
+
+# --------------------------------------------------------------------------
+# device-allocation sites (memory accounting manifest, PR 10)
+# --------------------------------------------------------------------------
+
+#: jnp constructors that materialize a device buffer when called eagerly.
+_ALLOC_ATTRS = (
+    "asarray", "array", "zeros", "ones", "full", "arange", "concatenate",
+)
+
+
+def _is_alloc_ref(node: ast.AST) -> bool:
+    """``jnp.<ctor>`` / ``jax.numpy.<ctor>`` / ``jax.device_put``."""
+    if not isinstance(node, ast.Attribute):
+        return False
+    v = node.value
+    if node.attr == "device_put":
+        return isinstance(v, ast.Name) and v.id == "jax"
+    if node.attr in _ALLOC_ATTRS:
+        if isinstance(v, ast.Name):
+            return v.id == "jnp"
+        if isinstance(v, ast.Attribute):   # jax.numpy.<ctor>
+            return (
+                v.attr == "numpy"
+                and isinstance(v.value, ast.Name)
+                and v.value.id == "jax"
+            )
+    return False
+
+
+def _traced_names(tree: ast.AST) -> Set[str]:
+    """Function names whose bodies run under trace: jit-decorated defs and
+    defs passed (by name) into a ``jax.jit(...)`` call anywhere in the
+    module — covers both ``@jax.jit`` / ``@partial(jax.jit, ...)``
+    decorators and the ``fn = jax.jit(_body)`` binding idiom."""
+    traced: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if any(_is_jit_ref(sub) for sub in ast.walk(dec)):
+                    traced.add(node.name)
+        elif isinstance(node, ast.Call) and _is_jit_ref(node.func):
+            for arg in node.args:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name):
+                        traced.add(sub.id)
+    return traced
+
+
+class _AllocVisitor(ast.NodeVisitor):
+    """Collect eager-allocation callsites outside traced code, named by the
+    outermost enclosing (non-traced) def — the jit-site naming idiom."""
+
+    def __init__(self, traced: Set[str]):
+        self.traced = traced
+        self.sites: List[Tuple[int, str]] = []
+        self._stack: List[str] = []
+
+    def visit_FunctionDef(self, node):
+        if node.name in self.traced:
+            return                      # body runs under trace: XLA temps
+        self._stack.append(node.name)
+        for stmt in node.body:
+            self.visit(stmt)
+        self._stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        for stmt in node.body:
+            self.visit(stmt)
+
+    def visit_Call(self, node):
+        if _is_alloc_ref(node.func):
+            name = self._stack[0] if self._stack else f"line{node.lineno}"
+            self.sites.append((node.lineno, name))
+        self.generic_visit(node)
+
+
+def find_alloc_sites(root: str) -> List[str]:
+    """``<relpath>::<site>`` for every eager device allocation outside
+    traced code in the accounted modules (``ALLOC_CHECK_MODULES``)."""
+    from .memory import ALLOC_CHECK_MODULES
+
+    found = set()
+    for rel in ALLOC_CHECK_MODULES:
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            try:
+                tree = ast.parse(f.read())
+            except SyntaxError:
+                continue
+        v = _AllocVisitor(_traced_names(tree))
+        v.visit(tree)
+        for _lineno, name in v.sites:
+            found.add(f"{rel}::{name}")
+    return sorted(found)
+
+
+def check_alloc_registration(root: str) -> List[str]:
+    """Return the list of UNREGISTERED allocation sites (empty == pass)."""
+    from .memory import KNOWN_ALLOC_SITES
+
+    return [s for s in find_alloc_sites(root) if s not in KNOWN_ALLOC_SITES]

@@ -34,6 +34,8 @@ import threading
 import time
 from typing import List, Optional
 
+from .memory import accountant as _mem_accountant
+
 __all__ = ["Tracer", "Span", "span", "get_tracer", "set_tracer"]
 
 
@@ -118,8 +120,20 @@ class Tracer:
         )
         if sp.args:
             ev["args"] = sp.args
+        # memory accounting hooks: every span close is a watermark boundary
+        # (per V-cycle level, per repair phase) and a Perfetto counter-track
+        # sample ("ph": "C") in the same trace
+        acct = _mem_accountant()
+        mem_ev = None
+        if acct.enabled:
+            acct.note_span(sp.name, sp.args)
+            mem_ev = acct.counter_event(
+                ts=(t1 - self._origin) * 1e6, pid=ev["pid"]
+            )
         with self._lock:
             self.events.append(ev)
+            if mem_ev is not None:
+                self.events.append(mem_ev)
 
     def clear(self) -> None:
         with self._lock:

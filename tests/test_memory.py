@@ -1,0 +1,313 @@
+"""Device-memory accounting + capacity planning (PR 10).
+
+Covers the accounting tentpole end to end:
+
+* accountant mechanics — idempotent registration, finalizer-driven release,
+  non-additive pins, hard-off fast path;
+* the ``jax.live_arrays()`` oracle — on a served dynamic stream the family
+  totals must match what the runtime actually holds, within padding slack;
+* the capacity planner — ``estimate_footprint`` within 15% of measured
+  peak family bytes on the ba-16384 acceptance graph, for both the full
+  partition and the dynamic serving stream (the module fixture runs each
+  once and every assertion reads the captured peaks);
+* span watermarks — every per-level/per-phase footprint the tracer records
+  is bounded by the global peak, which the estimate must cover;
+* satellite 1 — the auto ``coarsest_factor`` makes ba-16384 actually
+  coarsen (the 10000*k default meant no graph under ~40k nodes ever did).
+"""
+
+import gc
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph import barabasi_albert
+from repro.core import PartitionerConfig, partition
+from repro.core.engine import LPEngine
+from repro.dynamic import GraphUpdate, PartitionSession, SessionConfig
+from repro.obs import (
+    MEMORY_FAMILIES, MetricsRegistry, Tracer, account, accountant,
+    estimate_footprint, pin, set_accounting, set_tracer, will_fit,
+)
+
+K = 4
+TOL = 0.15          # acceptance: estimate within 15% of measured peaks
+MINOR = 0.01        # families below 1% of the total are noise, not gated
+
+
+@pytest.fixture
+def acct():
+    """Enabled accountant, reset + disabled afterwards."""
+    a = accountant()
+    a.reset()
+    prev = set_accounting(True)
+    yield a
+    set_accounting(prev)
+    a.reset()
+
+
+# --------------------------------------------------------------- mechanics
+
+
+def test_register_release_and_idempotence(acct):
+    x = jnp.zeros(1024, jnp.int32)
+    acct.register("base_csr", x)
+    assert acct.bytes_by_family["base_csr"] == x.nbytes
+    assert acct.total == x.nbytes
+    acct.register("base_csr", x)            # idempotent per buffer identity
+    assert acct.total == x.nbytes
+    acct.register("chunk_packs", x)         # even across families
+    assert acct.total == x.nbytes
+    nb = x.nbytes
+    del x
+    gc.collect()
+    assert acct.bytes_by_family["base_csr"] == 0
+    assert acct.total == 0
+    assert acct.peak_by_family["base_csr"] == nb    # peaks survive release
+
+
+def test_pin_is_non_additive(acct):
+    x = jnp.ones(512, jnp.float32)
+    acct.register("label_arenas", x)
+    pin("snapshot_refs", x)
+    assert acct.pinned_by_family["snapshot_refs"] == x.nbytes
+    assert acct.total == x.nbytes           # pins never inflate the total
+    del x
+    gc.collect()
+    assert acct.pinned_by_family["snapshot_refs"] == 0
+
+
+def test_unknown_family_rejected(acct):
+    with pytest.raises(KeyError):
+        acct.register("not_a_family", jnp.zeros(8))
+
+
+def test_disabled_is_inert_and_cheap():
+    a = accountant()
+    a.reset()
+    assert not a.enabled
+    x = jnp.zeros(4096, jnp.int32)
+    account("base_csr", x)
+    assert a.total == 0 and a.calls == 0
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        account("base_csr", x)
+    ns = (time.perf_counter() - t0) / n * 1e9
+    assert ns < 5_000, f"disabled account() {ns:.0f}ns/call"
+
+
+def test_registry_gauges_published(acct):
+    reg = MetricsRegistry("t")
+    set_accounting(True, registry=reg)
+    x = jnp.zeros(256, jnp.int32)
+    account("overlay_chunks", x)
+    assert reg.get_gauge("mem.overlay_chunks_bytes") == x.nbytes
+    assert reg.get_gauge("mem.total_bytes") == x.nbytes
+    acct.registry = None
+
+
+# ------------------------------------------------- ba-16384 acceptance run
+
+
+@pytest.fixture(scope="module")
+def ba16k_measured():
+    """One accounted + traced run of the acceptance workloads on ba-16384:
+    full partition, then a dynamic churn stream.  Returns the measured
+    peaks, span watermarks, and coarse-level count for every test below."""
+    g = barabasi_albert(16384, 6, seed=3)
+    a = accountant()
+    a.reset()
+    prev = set_accounting(True)
+    tracer = Tracer(enabled=True)
+    prev_tracer = set_tracer(tracer)
+
+    import repro.graph.csr as csr_mod
+    coarse_levels = []
+    orig_init = csr_mod.GraphDev.__init__
+
+    def counting_init(self, *args, **kw):
+        orig_init(self, *args, **kw)
+        coarse_levels.append((self.n, self.m))
+
+    csr_mod.GraphDev.__init__ = counting_init
+    try:
+        cfg = PartitionerConfig(k=K, preset="fast", seed=0)
+        rep = partition(g, cfg)
+        gc.collect()
+        part_peaks = dict(a.snapshot()["peak_by_family"])
+        part_marks = list(a.span_marks)
+        part_levels = list(coarse_levels)
+        del rep
+        gc.collect()
+        a.reset()
+
+        sess = PartitionSession(g, SessionConfig(k=K, seed=0))
+        a.reset_peaks()
+        rng = np.random.default_rng(11)
+        nb = max(g.m // 2 // 200, 64)
+        for _ in range(4):
+            u = rng.integers(0, g.n, nb)
+            v = rng.integers(0, g.n, nb)
+            keep = u != v
+            sess.update(GraphUpdate.add_edges(u[keep], v[keep]))
+            sess.update(GraphUpdate.remove_edges(u[keep], v[keep]))
+        dyn_peaks = dict(a.snapshot()["peak_by_family"])
+        dyn_cfg = sess.cfg
+        slo = sess.stats()["slo_budget_remaining"]
+        flight_len = len(sess.flight)
+        del sess
+    finally:
+        csr_mod.GraphDev.__init__ = orig_init
+        set_tracer(prev_tracer)
+        set_accounting(prev)
+        a.reset()
+    return dict(
+        g=g, cfg=cfg, dyn_cfg=dyn_cfg,
+        part_peaks=part_peaks, part_marks=part_marks,
+        part_levels=part_levels, dyn_peaks=dyn_peaks,
+        slo=slo, flight_len=flight_len,
+    )
+
+
+def _assert_families_within(est: dict, peaks: dict, tol: float) -> None:
+    total_meas = sum(peaks.values())
+    assert total_meas > 0
+    # planning bound: sum of family peaks (families peak in different
+    # phases, the estimate models each one's peak)
+    assert abs(est["total"] - total_meas) <= tol * total_meas, (
+        f"total estimate {est['total']} vs measured {total_meas}"
+    )
+    for fam in MEMORY_FAMILIES:
+        meas = peaks.get(fam, 0)
+        if max(meas, est.get(fam, 0)) < MINOR * total_meas:
+            continue                        # sub-1% families are noise
+        assert meas > 0, f"{fam}: estimated {est[fam]} but measured 0"
+        assert abs(est[fam] - meas) <= tol * meas, (
+            f"{fam}: estimate {est[fam]} vs measured peak {meas}"
+        )
+
+
+def test_partition_estimate_within_tolerance(ba16k_measured):
+    d = ba16k_measured
+    g = d["g"]
+    est = estimate_footprint(g.n, g.m, K, d["cfg"], workload="partition")
+    _assert_families_within(est, d["part_peaks"], TOL)
+
+
+def test_dynamic_estimate_within_tolerance(ba16k_measured):
+    d = ba16k_measured
+    g = d["g"]
+    est = estimate_footprint(g.n, g.m, K, d["dyn_cfg"], workload="dynamic")
+    _assert_families_within(est, d["dyn_peaks"], TOL)
+
+
+def test_vcycle_watermarks_consistent_with_estimate(ba16k_measured):
+    """Every span-close watermark the tracer recorded during the V-cycle is
+    bounded by the global peak, and the capacity estimate covers that peak:
+    watermark <= peak <= estimate * (1 + tol)."""
+    d = ba16k_measured
+    g = d["g"]
+    marks = d["part_marks"]
+    assert marks, "traced partition recorded no span watermarks"
+    peak = max(m["total"] for m in marks)
+    # per-phase totals are monotone-consistent: none exceeds the peak, and
+    # the sum of any mark's family breakdown equals its total
+    for m in marks:
+        assert m["total"] <= peak
+        assert sum(m["by_family"].values()) == m["total"]
+    est = estimate_footprint(g.n, g.m, K, d["cfg"], workload="partition")
+    assert peak <= est["total"] * (1 + TOL), (
+        f"watermark peak {peak} exceeds estimate {est['total']}"
+    )
+
+
+def test_ba16384_coarsens_at_least_one_level(ba16k_measured):
+    """Satellite 1 regression: with the auto coarsest target the ba-16384
+    V-cycle contracts (the old 10000*k default meant it never did — the
+    'multilevel' pipeline was flat LP on every bench-sized graph)."""
+    levels = ba16k_measured["part_levels"]
+    assert len(levels) >= 1, "no coarse level was ever contracted"
+    n0 = ba16k_measured["g"].n
+    assert all(n < n0 for n, _m in levels)
+    # and the default config agrees: 0 == auto
+    assert PartitionerConfig().coarsest_factor == 0
+
+
+def test_flight_recorder_and_slo_gauge(ba16k_measured):
+    d = ba16k_measured
+    assert d["flight_len"] == 8             # 4 add + 4 remove batches
+    assert 0.0 <= d["slo"] <= 1.0
+
+
+# ----------------------------------------------------- live_arrays oracle
+
+
+def test_family_totals_match_live_arrays_oracle():
+    """Family-bytes sum vs a ``jax.live_arrays()`` sweep on a served
+    stream: the accountant attributes (almost) everything the runtime
+    actually holds — within padding/transient slack, never more."""
+    g = barabasi_albert(4096, 6, seed=3)
+    gc.collect()
+    base_ids = {id(x) for x in jax.live_arrays()}
+    a = accountant()
+    a.reset()
+    prev = set_accounting(True)
+    try:
+        sess = PartitionSession(g, SessionConfig(k=K, seed=0))
+        rng = np.random.default_rng(11)
+        for _ in range(4):
+            u = rng.integers(0, g.n, 128)
+            v = rng.integers(0, g.n, 128)
+            keep = u != v
+            sess.update(GraphUpdate.add_edges(u[keep], v[keep]))
+            sess.update(GraphUpdate.remove_edges(u[keep], v[keep]))
+        gc.collect()
+        fresh = [x for x in jax.live_arrays() if id(x) not in base_ids]
+        oracle = sum(int(x.nbytes) for x in fresh)
+        snap = a.snapshot()
+        assert snap["total"] == sum(snap["by_family"].values())
+        assert snap["total"] <= oracle * 1.001, (
+            f"accounted {snap['total']} > live {oracle}"
+        )
+        assert snap["total"] >= 0.85 * oracle, (
+            f"accounted {snap['total']} misses too much of live {oracle}"
+        )
+        del sess
+    finally:
+        set_accounting(prev)
+        a.reset()
+
+
+# --------------------------------------------------------------- planning
+
+
+def test_estimate_footprint_shapes():
+    est = estimate_footprint(100_000, 1_200_000, 8)
+    for fam in MEMORY_FAMILIES:
+        assert fam in est and est[fam] >= 0
+    assert est["total"] == sum(est[f] for f in MEMORY_FAMILIES)
+    assert est["levels"] == 1 and est["coarsest_target"] == 12_500
+    dyn = estimate_footprint(100_000, 1_200_000, 8, workload="dynamic")
+    assert dyn["total"] > 0 and dyn["base_csr"] > 0
+    assert dyn["evo_population"] == 0       # no GA stage while serving
+    with pytest.raises(ValueError):
+        estimate_footprint(1000, 4000, 2, workload="nope")
+
+
+def test_will_fit_pre_upload_check():
+    res = will_fit(16384, 200_000, 4, budget_bytes=1 << 40)
+    assert res["fits"] is True
+    res = will_fit(16384, 200_000, 4, budget_bytes=1 << 10)
+    assert res["fits"] is False
+    assert res["required_bytes"] > res["estimate"]["total"]  # safety margin
+    # platform default: CPU exposes no bytes_limit -> degrades to None/bool
+    res = will_fit(1024, 8000, 2)
+    assert res["fits"] in (None, True, False)
+    # and the engine exposes it as the pre-upload check
+    res = LPEngine.will_fit(16384, 200_000, 4, budget_bytes=1 << 40)
+    assert res["fits"] is True

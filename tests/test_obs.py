@@ -440,3 +440,37 @@ def test_manifest_has_no_stale_entries():
     live = set(find_jit_sites(root))
     stale = sorted(set(KNOWN_JIT_SITES) - live)
     assert stale == []
+
+
+# ------------------------------------------------- alloc-site check (PR 10)
+
+
+def _src_root():
+    return os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "src", "repro",
+    )
+
+
+def test_every_alloc_site_is_registered():
+    """Memory-accounting gate: every eager device-allocation site in the
+    accounted modules must map to a buffer family (or carry an ``exempt:``
+    reason) in ``KNOWN_ALLOC_SITES`` — a new persistent buffer cannot land
+    unaccounted."""
+    from repro.obs.static_check import check_alloc_registration
+
+    assert check_alloc_registration(_src_root()) == []
+
+
+def test_alloc_manifest_has_no_stale_entries():
+    from repro.obs.memory import KNOWN_ALLOC_SITES, MEMORY_FAMILIES
+    from repro.obs.static_check import find_alloc_sites
+
+    live = set(find_alloc_sites(_src_root()))
+    stale = sorted(set(KNOWN_ALLOC_SITES) - live)
+    assert stale == []
+    # every manifest value is a real family or an explained exemption
+    for site, fam in KNOWN_ALLOC_SITES.items():
+        assert fam in MEMORY_FAMILIES or fam.startswith("exempt:"), (
+            f"{site}: {fam!r}"
+        )
